@@ -1,0 +1,46 @@
+"""Benchmark: Remark-2 communication table — bytes per round per algorithm
+for each assigned architecture's parameter count (the paper's headline:
+FedCET transmits HALF of SCAFFOLD/FedTrack/FedLin at equal round counts)."""
+
+from __future__ import annotations
+
+from repro.configs import ASSIGNED, get_config
+from repro.core import FedAvg, FedCET, FedLin, FedTrack, Scaffold, comm_bytes_per_round
+from repro.roofline.flops import param_counts
+
+
+def run(csv_rows=None, n_clients: int = 16):
+    from repro.core import FedCETCompressed
+
+    algos = {
+        "fedcet": FedCET(alpha=1e-3, c=0.05, tau=2, n_clients=n_clients),
+        "fedavg": FedAvg(alpha=1e-3, tau=2, n_clients=n_clients),
+        "scaffold": Scaffold(alpha_l=1e-3, tau=2, n_clients=n_clients),
+        "fedtrack": FedTrack(alpha=1e-3, tau=2, n_clients=n_clients),
+        "fedlin_k0.1": FedLin(alpha=1e-3, tau=2, n_clients=n_clients, k_frac=0.1),
+        # beyond-paper: compressed single-vector uplink with error feedback
+        "fedcet_c_bf16": FedCETCompressed(alpha=1e-3, c=0.05, tau=2,
+                                          n_clients=n_clients, quantize=True),
+    }
+    out = {}
+    for arch in ASSIGNED:
+        n, _ = param_counts(get_config(arch))
+        for name, algo in algos.items():
+            b = comm_bytes_per_round(algo, n, itemsize=2, n_clients=n_clients)
+            # uplink compression fractions
+            frac = {"fedlin_k0.1": 0.2, "fedcet_c_bf16": 0.5}.get(name, 1.0)
+            total = int(b["up"] * frac + b["down"])
+            out[(arch, name)] = total
+            if csv_rows is not None:
+                csv_rows.append((f"comm/{arch}/{name}", 0.0,
+                                 f"bytes_per_round={total}"))
+        assert out[(arch, "fedcet")] * 2 == out[(arch, "scaffold")]
+        assert out[(arch, "fedcet")] == out[(arch, "fedavg")]
+    return out
+
+
+if __name__ == "__main__":
+    rows = []
+    run(csv_rows=rows)
+    for r in rows:
+        print(",".join(map(str, r)))

@@ -1,0 +1,75 @@
+"""Benchmark: federated LM round throughput on the host device — wall time
+per FedCET round vs baselines on the reduced fedlm config, plus the
+error-vs-bytes trade-off on the quadratic problem (the paper's
+communication-efficiency claim in benchmark form)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.core import FedAvg, FedCET, FedTrack, Scaffold
+from repro.core.simulate import simulate_quadratic
+from repro.data.quadratic import make_quadratic_problem
+from repro.data.synthetic import make_hetero_lm_dataset
+from repro.models import build_model
+
+
+def lm_round_times(csv_rows=None):
+    cfg = get_config("fedlm-100m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    n_clients, tau, B, S = 4, 2, 4, 64
+    ds = make_hetero_lm_dataset(cfg.vocab_size, n_clients, S, B, seed=0)
+    batches = {"tokens": ds.sample_round(0, tau)}
+    init_b = jax.tree.map(lambda b: b[0], batches)
+    grad_fn = jax.grad(model.loss)
+    algos = {
+        "fedcet": FedCET(alpha=3e-3, c=0.05, tau=tau, n_clients=n_clients),
+        "fedavg": FedAvg(alpha=3e-3, tau=tau, n_clients=n_clients),
+        "scaffold": Scaffold(alpha_l=3e-3, tau=tau, n_clients=n_clients),
+        "fedtrack": FedTrack(alpha=3e-3, tau=tau, n_clients=n_clients),
+    }
+    for name, algo in algos.items():
+        state = algo.init(grad_fn, params, init_b)
+        step = jax.jit(lambda s, b, a=algo: a.round(grad_fn, s, b))
+        state = step(state, batches)  # compile
+        jax.block_until_ready(state)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            state = step(state, batches)
+        jax.block_until_ready(state)
+        us = (time.perf_counter() - t0) * 1e6 / 3
+        if csv_rows is not None:
+            csv_rows.append((f"fed_lm_round/{name}", us,
+                             f"vectors={algo.vectors_up}up+{algo.vectors_down}dn"))
+
+
+def bytes_to_target(csv_rows=None, target: float = 1e-6):
+    """Transmitted bytes needed to reach a target error (lower = better)."""
+    problem = make_quadratic_problem(0)
+    from repro.core.simulate import paper_fig1_algorithms
+
+    algos = paper_fig1_algorithms(problem, tau=2)
+    for name, algo in algos.items():
+        res = simulate_quadratic(algo, problem, rounds=3000)
+        errs = res.errors
+        k = next((i for i, e in enumerate(errs) if float(e) < target), None)
+        note = (f"bytes={k * res.bytes_per_round}" if k is not None
+                else "target_not_reached")
+        if csv_rows is not None:
+            csv_rows.append((f"bytes_to_{target:g}/{name}", 0.0, note))
+
+
+def run(csv_rows=None):
+    lm_round_times(csv_rows)
+    bytes_to_target(csv_rows)
+
+
+if __name__ == "__main__":
+    rows = []
+    run(csv_rows=rows)
+    for r in rows:
+        print(",".join(map(str, r)))

@@ -1,0 +1,40 @@
+"""Benchmark: Pallas FedCET-update kernels vs jnp reference (CPU interpret
+mode — correctness-trend numbers, not TPU timings) across sizes."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) * 1e6 / iters
+
+
+def run(csv_rows=None):
+    jref_v = jax.jit(ref.fedcet_v, static_argnames=("alpha",))
+    for n in (1 << 16, 1 << 20, 1 << 22):
+        ks = jax.random.split(jax.random.key(0), 3)
+        x, g, d = (jax.random.normal(k, (n,), dtype=jnp.float32) for k in ks)
+        t_kernel = _time(lambda *a: ops.fedcet_v(*a, 0.01), x, g, d)
+        t_ref = _time(lambda *a: jref_v(*a, alpha=0.01), x, g, d)
+        if csv_rows is not None:
+            csv_rows.append((f"kernel/fedcet_v/n{n}", t_kernel,
+                             f"ref_us={t_ref:.1f};interpret=True"))
+
+
+if __name__ == "__main__":
+    rows = []
+    run(csv_rows=rows)
+    for r in rows:
+        print(",".join(map(str, r)))

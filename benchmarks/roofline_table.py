@@ -1,0 +1,60 @@
+"""Benchmark: render the roofline table from the dry-run results JSON
+(produced by `python -m repro.launch.dryrun --all`). One row per
+(arch x shape x mesh): the three terms, dominant bottleneck, MODEL_FLOPS
+ratio, per-device memory."""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun.json")
+
+
+def load(path: str = RESULTS) -> dict:
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows(data: dict):
+    for key in sorted(data):
+        r = data[key]
+        if r.get("status") != "ok":
+            yield (r["arch"], r["shape"], r["mesh"], r.get("status"),
+                   r.get("reason", r.get("error", ""))[:60], "", "", "", "")
+            continue
+        rf = r["roofline"]
+        mem_gb = (r["memory"]["argument_bytes"] + r["memory"]["temp_bytes"]) / 1e9
+        yield (r["arch"], r["shape"], r["mesh"], "ok",
+               f"{rf['compute_s'] * 1e3:.2f}",
+               f"{rf['memory_s'] * 1e3:.2f}",
+               f"{rf['collective_s'] * 1e3:.2f}",
+               rf["bottleneck"],
+               f"{rf['flops_ratio']:.3f}|{mem_gb:.1f}GB")
+
+
+def run(csv_rows=None, path: str = RESULTS):
+    data = load(path)
+    for row in rows(data):
+        if csv_rows is not None:
+            csv_rows.append((
+                f"roofline/{row[0]}/{row[1]}/{row[2]}", 0.0,
+                f"status={row[3]};compute_ms={row[4]};memory_ms={row[5]};"
+                f"collective_ms={row[6]};bottleneck={row[7]};extra={row[8]}"))
+    return data
+
+
+def markdown(path: str = RESULTS) -> str:
+    data = load(path)
+    out = ["| arch | shape | mesh | status | compute ms | memory ms | "
+           "collective ms | bottleneck | MF-ratio / mem |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for row in rows(data):
+        out.append("| " + " | ".join(str(c) for c in row) + " |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(markdown())

@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows. Modules:
+  fig1_convergence — the paper's Fig. 1 (FedCET vs FedTrack vs SCAFFOLD)
+  comm_table       — Remark 2: bytes/round per algorithm x architecture
+  lr_search_bench  — Algorithm 1 output/timing across regimes
+  fed_lm_bench     — federated LM round throughput + bytes-to-target-error
+  kernel_bench     — Pallas fedcet-update kernels (interpret mode)
+  roofline_table   — (arch x shape x mesh) roofline terms from the dry-run
+                     results JSON, when present
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        comm_table,
+        fed_lm_bench,
+        fig1_convergence,
+        kernel_bench,
+        lr_search_bench,
+        roofline_table,
+    )
+
+    rows: list[tuple] = []
+    t0 = time.time()
+    for name, mod in [
+        ("fig1_convergence", fig1_convergence),
+        ("comm_table", comm_table),
+        ("lr_search_bench", lr_search_bench),
+        ("fed_lm_bench", fed_lm_bench),
+        ("kernel_bench", kernel_bench),
+        ("roofline_table", roofline_table),
+    ]:
+        t = time.time()
+        try:
+            mod.run(csv_rows=rows)
+            print(f"# {name}: ok ({time.time() - t:.1f}s)", file=sys.stderr)
+        except Exception as e:  # keep the harness going; report at the end
+            rows.append((f"{name}/FAILED", 0.0, repr(e)[:120]))
+            print(f"# {name}: FAILED {e!r}", file=sys.stderr)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(",".join(str(c) for c in r))
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

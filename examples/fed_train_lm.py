@@ -1,0 +1,49 @@
+"""End-to-end federated LM training with FedCET (the paper's technique as a
+first-class training feature).
+
+Trains a decoder-only LM on synthetic heterogeneous client corpora (per-
+client Markov statistics; non-IID by construction) for a few hundred
+communication rounds, logging loss and cumulative communication. Defaults to
+the reduced fedlm config so it runs on one CPU in a few minutes; pass --full
+for the ~100M-parameter config (sized for real hardware; same code path as
+the pjit production launcher).
+
+    PYTHONPATH=src python examples/fed_train_lm.py --rounds 200
+    PYTHONPATH=src python examples/fed_train_lm.py --arch qwen3-1.7b   # reduced qwen3
+"""
+
+import argparse
+
+from repro.launch.train import run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="fedlm-100m")
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--tau", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--alpha", type=float, default=3e-3)
+    ap.add_argument("--heterogeneity", type=float, default=0.8)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (use on real hardware)")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    hist = run_training(
+        args.arch, steps=args.rounds, tau=args.tau, n_clients=args.clients,
+        batch=args.batch, seq_len=args.seq_len, alpha=args.alpha,
+        heterogeneity=args.heterogeneity, reduced=not args.full,
+        ckpt_dir=args.ckpt_dir,
+        callback=lambda r, l, b: print(
+            f"round {r:5d}  loss {l:8.4f}  comm {b / 1e6:9.2f} MB"))
+    first, last = hist["loss"][0], hist["loss"][-1]
+    print(f"\nloss {first:.4f} -> {last:.4f} over {args.rounds} rounds "
+          f"({hist['comm_bytes'][-1] / 1e6:.1f} MB transmitted)")
+    assert last < first, "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

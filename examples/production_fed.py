@@ -1,0 +1,64 @@
+"""Production-style federated run: FedTrainer + compressed FedCET +
+partial participation + checkpoint/resume — the framework's beyond-paper
+features composed.
+
+    PYTHONPATH=src python examples/production_fed.py --rounds 60
+"""
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.core.fedcet_compressed import FedCETCompressed
+from repro.data.synthetic import make_hetero_lm_dataset
+from repro.fed import FedTrainer, TrainerConfig
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="fedlm-100m")
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--tau", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="results/prod_fed_ckpt")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 4, 64
+    ds = make_hetero_lm_dataset(cfg.vocab_size, args.clients, S, B,
+                                heterogeneity=0.8, seed=0)
+    batches_for = lambda r: {"tokens": ds.sample_round(r, args.tau)}
+    eval_b = batches_for(999_999)
+
+    algo = FedCETCompressed(alpha=3e-3, c=0.05, tau=args.tau,
+                            n_clients=args.clients, quantize=True)
+    trainer = FedTrainer(algo, model.loss, TrainerConfig(
+        rounds=args.rounds, eval_every=10, ckpt_every=20,
+        ckpt_dir=args.ckpt_dir, log_csv="results/prod_fed_metrics.csv",
+        itemsize=2))  # bf16-compressed uplink
+
+    state = trainer.init_state(params, jax.tree.map(lambda b: b[0],
+                                                    batches_for(0)))
+    state, start = trainer.maybe_resume(state)
+    if start:
+        print(f"resumed from round {start}")
+    trainer.fit(state, batches_for, eval_batch_for=lambda r: eval_b,
+                start_round=start,
+                callback=lambda row: print(
+                    f"round {row['round']:4d}  global {row['loss_global']:7.4f}  "
+                    f"gap {row['heterogeneity_gap']:+.4f}  "
+                    f"comm {row['comm_bytes'] / 1e6:8.2f} MB"))
+    first, last = trainer.history[0], trainer.history[-1]
+    print(f"\nglobal loss {first['loss_global']:.4f} -> {last['loss_global']:.4f}"
+          f"  ({last['comm_bytes'] / 1e6:.1f} MB total, bf16-compressed uplink)")
+
+
+if __name__ == "__main__":
+    main()

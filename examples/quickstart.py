@@ -1,0 +1,49 @@
+"""Quickstart: reproduce the paper's numerical evaluation (Section IV).
+
+Solves the heterogeneous distributed-estimation problem with FedCET and the
+paper's comparison baselines, printing the convergence error e(k) at sampled
+communication rounds and the transmitted bytes — the console version of
+Fig. 1. Runs in seconds on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # errors reach 1e-12: need f64
+
+from repro.core.lr_search import contraction_factors, lr_search
+from repro.core.simulate import paper_fig1_algorithms, simulate_quadratic
+from repro.data.quadratic import make_quadratic_problem
+
+
+def main():
+    problem = make_quadratic_problem(0)  # N=10 clients, n=60, b~U[-10,10]
+    print(f"problem: N={problem.n_clients} clients, n={problem.dim}, "
+          f"mu={problem.mu}, L={problem.L}")
+    alpha = lr_search(problem.mu, problem.L, tau=2)
+    cf = contraction_factors(alpha, problem.mu, problem.L, 2, problem.n_clients)
+    print(f"Algorithm 1 learning rate: alpha={alpha:.6f} "
+          f"(rho1={cf.rho1:.4f}, rho2={cf.rho2:.6f})\n")
+
+    rounds = 300
+    algos = paper_fig1_algorithms(problem, tau=2)
+    results = {k: simulate_quadratic(a, problem, rounds=rounds)
+               for k, a in algos.items()}
+
+    header = f"{'round':>6} " + " ".join(f"{k:>14}" for k in results)
+    print(header)
+    for k in (0, 10, 25, 50, 100, 200, 300):
+        row = f"{k:>6} " + " ".join(
+            f"{float(r.errors[k]):>14.3e}" for r in results.values())
+        print(row)
+    print("\nbytes per communication round (all clients, up+down):")
+    for name, r in results.items():
+        print(f"  {name:>9}: {r.bytes_per_round:>8d} B"
+              + ("   <- ONE vector each way (Remark 2)" if name == "fedcet" else ""))
+    assert results["fedcet"].final_error < 1e-9, "FedCET must reach exact x*"
+    print("\nFedCET reached the exact optimum with half the communication. OK")
+
+
+if __name__ == "__main__":
+    main()

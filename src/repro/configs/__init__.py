@@ -1,0 +1,73 @@
+"""Registry of the assigned architectures (+ the paper's own workload).
+
+Every entry cites its source. ``get_config(name)`` is what ``--arch <id>``
+resolves through.
+"""
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig, ShapeConfig, supports_shape
+
+
+#: the 10 assigned architectures (fedlm-100m is a paper-side extra and is
+#: not part of the dry-run / roofline matrix).
+ASSIGNED = (
+    "internlm2-20b", "zamba2-1.2b", "qwen3-1.7b", "minicpm-2b",
+    "llava-next-34b", "llama4-scout-17b-a16e", "gemma-2b", "mamba2-130m",
+    "granite-moe-3b-a800m", "whisper-small",
+)
+
+
+def _lazy():
+    from repro.configs import (
+        fedlm_100m,
+        gemma_2b,
+        granite_moe_3b_a800m,
+        internlm2_20b,
+        llama4_scout_17b_a16e,
+        llava_next_34b,
+        mamba2_130m,
+        minicpm_2b,
+        qwen3_1p7b,
+        whisper_small,
+        zamba2_1p2b,
+    )
+
+    return {
+        m.CONFIG.name: m.CONFIG
+        for m in (
+            internlm2_20b, zamba2_1p2b, qwen3_1p7b, minicpm_2b, llava_next_34b,
+            llama4_scout_17b_a16e, gemma_2b, mamba2_130m, granite_moe_3b_a800m,
+            whisper_small, fedlm_100m,
+        )
+    }
+
+
+_REGISTRY: dict[str, ArchConfig] | None = None
+
+
+def registry() -> dict[str, ArchConfig]:
+    global _REGISTRY
+    if _REGISTRY is None:
+        _REGISTRY = _lazy()
+    return _REGISTRY
+
+
+def get_config(name: str) -> ArchConfig:
+    reg = registry()
+    if name not in reg:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(reg)}")
+    return reg[name]
+
+
+def list_archs() -> list[str]:
+    return sorted(registry())
+
+
+__all__ = [
+    "ArchConfig",
+    "INPUT_SHAPES",
+    "ShapeConfig",
+    "get_config",
+    "list_archs",
+    "registry",
+    "supports_shape",
+]

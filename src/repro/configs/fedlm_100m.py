@@ -1,0 +1,22 @@
+"""fedlm-100m — the paper-side end-to-end training config (not one of the 10
+assigned archs): a ~100M-parameter dense LM used by examples/fed_train_lm.py
+to demonstrate FedCET federated training at laptop-visible scale. The
+reduced() variant of this config is what the CPU example actually steps."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="fedlm-100m",
+    family="dense",
+    n_layers=14,
+    d_model=640,
+    n_heads=10,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=2560,
+    vocab_size=16384,
+    activation="swiglu",
+    scan_layers=True,
+    remat=False,
+    citation="(paper-side example config)",
+)

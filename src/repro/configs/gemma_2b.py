@@ -1,0 +1,26 @@
+"""gemma-2b [dense] — GeGLU, head_dim=256, MQA [arXiv:2403.08295].
+
+Sliding-window attention is enabled as the sub-quadratic variant that
+qualifies this dense arch for the `long_500k` decode shape (DESIGN.md §5);
+Gemma-1 itself is full-attention (the window matches Gemma-2's 4096).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma-2b",
+    family="dense",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,       # MQA
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=256000,
+    activation="geglu",
+    embed_scale=True,   # gemma multiplies embeddings by sqrt(d_model)
+    tie_embeddings=True,
+    attention="sliding",
+    window=4096,
+    citation="arXiv:2403.08295",
+)

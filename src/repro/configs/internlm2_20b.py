@@ -1,0 +1,18 @@
+"""internlm2-20b [dense] — GQA [arXiv:2403.17297]."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internlm2-20b",
+    family="dense",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,       # GQA kv=8
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=92544,
+    activation="swiglu",
+    rope_theta=1e6,
+    citation="arXiv:2403.17297",
+)

@@ -1,0 +1,30 @@
+"""llama4-scout-17b-a16e [moe] — 16-expert top-1 MoE with a shared expert,
+chunked local attention (iRoPE-style) [hf:meta-llama/Llama-4-Scout-17B-16E].
+
+The chunked attention (8192-token chunks) is the sub-quadratic variant that
+qualifies this arch for `long_500k` decode (DESIGN.md §5); "early fusion"
+multimodality enters through the same stub-embedding path as the VLM family
+but the assigned shapes here are text-token workloads.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,       # GQA kv=8
+    head_dim=128,
+    d_ff=8192,          # per expert
+    vocab_size=202048,
+    n_experts=16,
+    experts_per_token=1,   # top-1 routing
+    moe_shared_expert=True,
+    attention="chunked",
+    chunk=8192,
+    activation="swiglu",
+    rope_theta=5e5,
+    citation="hf:meta-llama/Llama-4-Scout-17B-16E",
+)

@@ -1,0 +1,27 @@
+"""llava-next-34b [vlm] — anyres tiling [hf:llava-hf/llava-v1.6-mistral-7b-hf].
+
+The vision tower (ViT/SigLIP + projector, anyres tile split) is the
+assignment's allowed stub: input_specs() provides the anyres patch
+embeddings [B, n_modal_tokens, d_model]; this config is the 60-layer
+language backbone that interleaves and attends over them.
+n_modal_tokens = 2880 ~= 5 anyres tiles x 576 patches/tile.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,       # GQA kv=8
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    modality="vision",
+    n_modal_tokens=2880,
+    activation="swiglu",
+    rope_theta=1e6,
+    citation="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)

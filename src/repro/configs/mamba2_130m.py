@@ -1,0 +1,20 @@
+"""mamba2-130m [ssm] — SSD (state-space duality), attention-free
+[arXiv:2405.21060]."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=0,          # attention-free
+    n_kv_heads=0,
+    head_dim=None,
+    d_ff=0,             # no MLP blocks in mamba2
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,       # d_inner = 1536 -> 24 SSD heads
+    citation="arXiv:2405.21060",
+)

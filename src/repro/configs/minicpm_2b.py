@@ -1,0 +1,20 @@
+"""minicpm-2b [dense] — llama-like arch trained with the WSD schedule
+[arXiv:2404.06395]. The WSD (warmup-stable-decay) schedule itself lives in
+repro.optim.schedules and is selected by the training driver for this arch."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="minicpm-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv_heads=36,      # MHA
+    head_dim=64,
+    d_ff=5760,
+    vocab_size=122753,
+    activation="swiglu",
+    tie_embeddings=True,  # MiniCPM ties input/output embeddings
+    citation="arXiv:2404.06395",
+)

@@ -1,0 +1,25 @@
+"""qwen3-1.7b [dense] — qk_norm, GQA [hf:Qwen/Qwen3-8B].
+
+Sliding-window attention is enabled as the sub-quadratic variant that
+qualifies this dense arch for the `long_500k` decode shape (DESIGN.md §5).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-1.7b",
+    family="dense",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,       # GQA kv=8
+    head_dim=128,
+    d_ff=6144,
+    vocab_size=151936,
+    qk_norm=True,
+    attention="sliding",
+    window=4096,
+    activation="swiglu",
+    rope_theta=1e6,
+    citation="hf:Qwen/Qwen3-8B",
+)

@@ -1,0 +1,31 @@
+"""whisper-small [audio] — encoder-decoder with conv frontend (stubbed)
+[arXiv:2212.04356].
+
+The mel-spectrogram + conv feature extractor is the assignment's allowed
+stub: input_specs() supplies 1500 precomputed frame embeddings per sample.
+12 encoder + 12 decoder layers, MHA, LayerNorm/GELU/biases.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small",
+    family="audio",
+    n_layers=12,          # decoder layers
+    encoder_layers=12,
+    encoder_len=1500,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,        # MHA
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    activation="gelu",
+    norm="layernorm",
+    use_rope=False,       # sinusoidal positions
+    attn_bias=True,
+    mlp_bias=True,
+    tie_embeddings=True,
+    modality="audio",
+    citation="arXiv:2212.04356",
+)

@@ -1,0 +1,30 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242].
+
+38 Mamba2 layers with the single parameter-shared attention(+MLP) block
+applied every 6 layers. The shared block is 32-head full attention
+(kv=32, i.e. MHA) with d_ff=8192; in long-context serving it runs
+sliding-window so the hybrid stays sub-quadratic (DESIGN.md §5).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,      # the shared attention block is MHA
+    head_dim=64,
+    d_ff=8192,          # shared block MLP
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_headdim=64,
+    ssm_expand=2,
+    shared_attn_every=6,
+    attention="sliding",
+    window=4096,
+    activation="swiglu",
+    citation="arXiv:2411.15242",
+)

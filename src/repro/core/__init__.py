@@ -1,0 +1,39 @@
+"""Core: the paper's contribution (FedCET) and its comparison baselines."""
+
+from repro.core.api import FederatedAlgorithm, comm_bytes_per_round, replicate, vmap_grads
+from repro.core.baselines import FedAvg, FedLin, FedTrack, Scaffold
+from repro.core.comm import CommMeter, quantize_bf16, topk_sparsify
+from repro.core.fedcet import FedCET, FedCETLiteral, max_weight_c
+from repro.core.fedcet_compressed import FedCETCompressed
+from repro.core.participation import FedCETPartial
+from repro.core.lr_search import (
+    alpha0_upper_bound,
+    contraction_factors,
+    lr_search,
+    lr_search_validated,
+    remark1_inequalities,
+)
+
+__all__ = [
+    "FedAvg",
+    "FedCET",
+    "FedCETCompressed",
+    "FedCETLiteral",
+    "FedCETPartial",
+    "FedLin",
+    "FedTrack",
+    "FederatedAlgorithm",
+    "CommMeter",
+    "Scaffold",
+    "alpha0_upper_bound",
+    "comm_bytes_per_round",
+    "contraction_factors",
+    "lr_search",
+    "lr_search_validated",
+    "max_weight_c",
+    "quantize_bf16",
+    "replicate",
+    "remark1_inequalities",
+    "topk_sparsify",
+    "vmap_grads",
+]

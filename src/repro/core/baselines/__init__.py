@@ -1,0 +1,5 @@
+from repro.core.baselines.fedavg import FedAvg
+from repro.core.baselines.fedlin import FedLin, FedTrack
+from repro.core.baselines.scaffold import Scaffold
+
+__all__ = ["FedAvg", "FedLin", "FedTrack", "Scaffold"]

@@ -1,0 +1,53 @@
+"""FedAvg [4] — the canonical federated learning baseline.
+
+tau local SGD steps per client, then the server averages the models. One
+n-dimensional vector up + one down per round — same communication as FedCET —
+but under heterogeneous data it exhibits *client drift*: with a constant
+learning rate the iterates stall at a nonzero distance from x*
+(the motivating failure FedCET fixes; validated in tests/test_baselines.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import GradFn, replicate, vmap_grads
+from repro.utils.tree import tree_client_mean
+
+
+class FedAvgState(NamedTuple):
+    x: Any  # stacked [clients, ...]
+    t: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvg:
+    alpha: float
+    tau: int
+    n_clients: int
+    name: str = "fedavg"
+    vectors_up: int = 1
+    vectors_down: int = 1
+
+    def init(self, grad_fn: GradFn, x0, init_batch) -> FedAvgState:
+        del grad_fn, init_batch
+        return FedAvgState(x=replicate(x0, self.n_clients), t=jnp.asarray(0))
+
+    def round(self, grad_fn: GradFn, state: FedAvgState, batches) -> FedAvgState:
+        gf = vmap_grads(grad_fn)
+
+        def body(x, b):
+            g = gf(x, b)
+            return jax.tree.map(lambda xx, gg: xx - self.alpha * gg, x, g), None
+
+        x, _ = jax.lax.scan(body, state.x, batches)
+        x_bar = tree_client_mean(x)
+        x = jax.tree.map(lambda xb, xx: jnp.broadcast_to(xb, xx.shape), x_bar, x)
+        return FedAvgState(x=x, t=state.t + self.tau)
+
+    def global_params(self, state: FedAvgState):
+        return tree_client_mean(state.x, keepdims=False)

@@ -1,0 +1,103 @@
+"""Partial client participation (beyond-paper).
+
+The paper assumes full participation (every client contributes to every
+aggregation). Real federations sample clients. This module adds
+participation-masked rounds for FedCET:
+
+* a participation mask m in {0,1}^N is drawn per round (deterministic from
+  the round index);
+* absent clients freeze (no local steps, no state change) — they neither
+  compute nor transmit;
+* the server averages v over PRESENT clients only, and only present
+  clients apply the aggregation update. The drift updates of present
+  clients use deviations from the present-mean, so sum_i d_i stays zero
+  across the federation (the Lemma-2 fixed-point structure is preserved;
+  `tests/test_participation.py` checks the invariant under random masks).
+
+Empirically (tests): with participation >= 0.5 on the paper's problem the
+iterates still converge linearly to the exact optimum, at proportionally
+lower bytes/round; very low participation slows convergence but does not
+bias it. The paper's theory does not cover this regime — the tests document
+measured behavior, not a claimed guarantee.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import GradFn, vmap_grads
+from repro.core.fedcet import FedCET, FedCETState
+
+
+def participation_mask(key, n_clients: int, rate: float) -> jax.Array:
+    """At least one client participates; expected fraction = rate."""
+    m = jax.random.bernoulli(key, rate, (n_clients,))
+    # guarantee non-empty participation: force client argmax(uniform) in
+    first = jax.nn.one_hot(jax.random.randint(key, (), 0, n_clients),
+                           n_clients, dtype=bool)
+    return jnp.where(jnp.any(m), m, first)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedCETPartial(FedCET):
+    """FedCET with per-round client sampling."""
+
+    participation: float = 1.0
+    seed: int = 0
+    name: str = "fedcet_partial"
+
+    def _masked_mean(self, tree, mask):
+        w = mask.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(w), 1.0)
+
+        def mean_leaf(a):
+            wb = w.reshape((-1,) + (1,) * (a.ndim - 1)).astype(a.dtype)
+            return jnp.sum(a * wb, axis=0, keepdims=True) / denom.astype(a.dtype)
+
+        return jax.tree.map(mean_leaf, tree)
+
+    def _apply_masked(self, new, old, mask):
+        def sel(n, o):
+            mb = mask.reshape((-1,) + (1,) * (n.ndim - 1))
+            return jnp.where(mb, n, o)
+
+        return jax.tree.map(sel, new, old)
+
+    def round(self, grad_fn: GradFn, state: FedCETState, batches) -> FedCETState:
+        gf = vmap_grads(grad_fn, spmd_axis_name=(self.spmd_client_axes or None))
+        # per-round mask derived from the iteration counter in the state
+        key = jax.random.fold_in(jax.random.key(self.seed),
+                                 jnp.asarray(state.t, jnp.int32))
+        mask = participation_mask(key, self.n_clients, self.participation)
+
+        frozen = state
+        # local steps (computed for all, applied to present clients only —
+        # in a real deployment absent clients simply don't run; here the
+        # masking keeps the computation jit-static)
+        if self.tau > 1:
+            local_b = jax.tree.map(lambda b: b[: self.tau - 1], batches)
+
+            def body(s, b):
+                return self._local_step(gf, s, b), None
+
+            state, _ = jax.lax.scan(body, state, local_b)
+        last_b = jax.tree.map(lambda b: b[self.tau - 1], batches)
+        g = gf(state.x, last_b)
+        v = self._v(state.x, g, state.d)
+        v_bar = self._masked_mean(jax.tree.map(
+            lambda a, m=mask: a * m.reshape((-1,) + (1,) * (a.ndim - 1)).astype(a.dtype), v), mask)
+        ca = self.c * self.alpha
+        d_next = jax.tree.map(lambda dd, vv, vb: dd + self.c * (vv - vb),
+                              state.d, v, v_bar)
+        x_next = jax.tree.map(lambda vv, vb: vv - ca * (vv - vb), v, v_bar)
+        new = FedCETState(x=x_next, d=d_next, t=state.t + self.tau)
+        # absent clients keep their pre-round state entirely
+        return FedCETState(
+            x=self._apply_masked(new.x, frozen.x, mask),
+            d=self._apply_masked(new.d, frozen.d, mask),
+            t=new.t,
+        )

@@ -1,0 +1,14 @@
+from repro.data.quadratic import (
+    QuadraticProblem,
+    make_hetero_hessian_problem,
+    make_quadratic_problem,
+)
+from repro.data.synthetic import HeteroLMDataset, make_hetero_lm_dataset
+
+__all__ = [
+    "HeteroLMDataset",
+    "QuadraticProblem",
+    "make_hetero_hessian_problem",
+    "make_hetero_lm_dataset",
+    "make_quadratic_problem",
+]

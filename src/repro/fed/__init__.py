@@ -1,0 +1,3 @@
+from repro.fed.trainer import FedTrainer, TrainerConfig
+
+__all__ = ["FedTrainer", "TrainerConfig"]

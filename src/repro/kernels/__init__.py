@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; Mosaic on TPU).
+
+  fedcet_update.py   fused FedCET local-step triad + aggregation pair
+  flash_attention.py grouped-GQA online-softmax attention (causal /
+                     sliding / chunked / bidirectional)
+  ssd_intra.py       Mamba2 SSD intra-chunk (quadratic) term
+  ops.py             jit'd public wrappers (tiling, backend dispatch)
+  ref.py             pure-jnp oracles (the allclose targets)
+"""

@@ -1,0 +1,73 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles arbitrary leaf shapes: flatten -> pad to a whole number of
+(rows x 1024) lanes -> kernel -> unpad/reshape. On non-TPU backends the
+kernels run in interpret mode (Python emulation of the kernel body), which
+is how the CPU test suite validates them; on TPU they lower through Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fedcet_update as K
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _tile(a):
+    n = a.size
+    rows = -(-n // K.LANES)
+    pad = rows * K.LANES - n
+    flat = jnp.pad(a.reshape(-1), (0, pad))
+    return flat.reshape(rows, K.LANES), n
+
+
+def _untile(t, n, shape):
+    return t.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha",))
+def fedcet_v(x, g, d, alpha: float):
+    """Fused FedCET local-step triad (see kernels/ref.py:fedcet_v)."""
+    t_x, n = _tile(x)
+    t_g, _ = _tile(g)
+    t_d, _ = _tile(d)
+    out = K.fedcet_v_2d(t_x, t_g, t_d, alpha=alpha, interpret=_interpret())
+    return _untile(out, n, x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "window", "chunk",
+                                              "q_blk", "kv_blk"))
+def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
+                    chunk: int = 0, q_blk: int = 256, kv_blk: int = 256):
+    """Grouped-GQA Pallas flash attention (see kernels/flash_attention.py)."""
+    from repro.kernels import flash_attention as K3
+
+    return K3.flash_attention(q, k, v, kind=kind, window=window, chunk=chunk,
+                              q_blk=q_blk, kv_blk=kv_blk,
+                              interpret=_interpret())
+
+
+@jax.jit
+def ssd_intra(x, dt, a_cs, Bm, Cm):
+    """Pallas SSD intra-chunk term (see kernels/ssd_intra.py)."""
+    from repro.kernels import ssd_intra as K2
+
+    return K2.ssd_intra(x, dt, a_cs, Bm, Cm, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("c", "alpha"))
+def fedcet_comm(d, v, v_bar, c: float, alpha: float):
+    """Fused FedCET aggregation pair (see kernels/ref.py:fedcet_comm)."""
+    t_d, n = _tile(d)
+    t_v, _ = _tile(v)
+    t_vb, _ = _tile(jnp.broadcast_to(v_bar, v.shape))
+    d_new, x_new = K.fedcet_comm_2d(t_d, t_v, t_vb, c=c, alpha=alpha,
+                                    interpret=_interpret())
+    return _untile(d_new, n, d.shape), _untile(x_new, n, v.shape)

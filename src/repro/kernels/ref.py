@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fedcet_v(x, g, d, alpha: float):
+    """The FedCET local-step triad: v = x - alpha*g - alpha*d.
+
+    (== the paper's 2x(t) - x(t-1) - a grad(t) + a grad(t-1), via Lemma 1.)
+    """
+    return x - alpha * g - alpha * d
+
+
+def fedcet_comm(d, v, v_bar, c: float, alpha: float):
+    """The FedCET aggregation step, fused:
+    d' = d + c (v - v_bar);  x' = v - c*alpha*(v - v_bar)."""
+    delta = v - v_bar
+    return d + c * delta, v - (c * alpha) * delta
+
+
+def ssd_intra(x, dt, a_cs, Bm, Cm):
+    """SSD intra-chunk oracle. Shapes as kernels/ssd_intra.py:ssd_intra."""
+    import jax
+
+    cb = jnp.einsum("bcin,bcjn->bcij", Cm.astype(jnp.float32),
+                    Bm.astype(jnp.float32))
+    seg = (a_cs.astype(jnp.float32)[:, :, :, None, :]
+           - a_cs.astype(jnp.float32)[:, :, None, :, :])   # [B,Nc,i,j,H]
+    lc = x.shape[2]
+    causal = jnp.tril(jnp.ones((lc, lc), bool))[None, None, :, :, None]
+    seg = jnp.where(causal, seg, -jnp.inf)
+    w = cb[..., None] * jnp.exp(seg)
+    y = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", w, dt.astype(jnp.float32),
+                   x.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def topk_mask(x, k: int):
+    """Magnitude top-k (per flattened leaf): keep the k largest |x|."""
+    flat = x.reshape(-1)
+    thresh = jnp.sort(jnp.abs(flat))[-k]
+    return jnp.where(jnp.abs(flat) >= thresh, flat, 0.0).reshape(x.shape)

@@ -1,0 +1,64 @@
+"""Model-input construction: concrete batches (smoke tests / examples) and
+ShapeDtypeStruct stand-ins (the multi-pod dry-run; no device allocation).
+
+Batch layouts per family:
+  text/moe/ssm/hybrid : {"tokens": [B, S] int32}
+  vlm                 : + {"image_embeds": [B, n_modal_tokens, d] bf16/f32}
+                          (stubbed anyres vision tower output)
+  audio               : {"frames": [B, encoder_len, d]} (stubbed conv
+                          frontend output) + {"tokens": [B, S] int32}
+
+Training adds the clients axis outside these shapes: the federated
+train_step consumes [tau, clients, B_local, ...] leaves.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def batch_shapes(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    """{name: (shape, dtype)} for a single (non-federated) batch."""
+    emb_dtype = jnp.dtype(cfg.dtype)
+    shapes = {"tokens": ((batch, seq_len), jnp.int32)}
+    if cfg.family == "vlm":
+        shapes["image_embeds"] = ((batch, cfg.n_modal_tokens, cfg.d_model),
+                                  emb_dtype)
+    if cfg.family == "audio":
+        shapes["frames"] = ((batch, cfg.encoder_len, cfg.d_model), emb_dtype)
+    return shapes
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq_len: int, *, key=0) -> dict:
+    """Concrete random batch (smoke tests, examples)."""
+    if isinstance(key, int):
+        key = jax.random.key(key)
+    out = {}
+    for name, (shape, dtype) in batch_shapes(cfg, batch, seq_len).items():
+        key, k = jax.random.split(key)
+        if jnp.issubdtype(dtype, jnp.integer):
+            out[name] = jax.random.randint(k, shape, 0, cfg.vocab_size, dtype)
+        else:
+            out[name] = (jax.random.normal(k, shape) * 0.02).astype(dtype)
+    return out
+
+
+def batch_specs(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    """ShapeDtypeStruct stand-ins for the dry-run (never allocated)."""
+    return {
+        name: jax.ShapeDtypeStruct(shape, dtype)
+        for name, (shape, dtype) in batch_shapes(cfg, batch, seq_len).items()
+    }
+
+
+def fed_batch_specs(cfg: ArchConfig, tau: int, n_clients: int,
+                    per_client_batch: int, seq_len: int) -> dict:
+    """[tau, clients, ...] ShapeDtypeStructs for the federated train step."""
+    return {
+        name: jax.ShapeDtypeStruct((tau, n_clients) + shape, dtype)
+        for name, (shape, dtype) in batch_shapes(
+            cfg, per_client_batch, seq_len).items()
+    }

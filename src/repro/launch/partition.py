@@ -1,0 +1,191 @@
+"""Parameter / input / cache PartitionSpec assignment.
+
+Rules are name-based over the param-dict paths (the pytrees are plain
+dicts, so the path is a readable module path like ``layers/attn/wq``), and
+divisibility-aware: a dimension is only sharded over `model` when its size
+divides the axis; otherwise the rule falls through to the next-best dim
+(e.g. granite's 40 experts don't divide a 16-way model axis, so its expert
+FFN shards the tiny d_ff instead). Megatron conventions throughout:
+column-parallel in-projections, row-parallel out-projections, vocab-sharded
+embeddings, expert-parallel MoE when divisible.
+
+Stacked leading dims (scan-over-layers [L, ...], hybrid groups [G, every,
+...], and the federated clients axis) are handled by right-aligning the rule
+to the trailing logical dims and padding/prepending the rest.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _tp_if(n: int, tp: int):
+    return "model" if n % tp == 0 and n >= tp else None
+
+
+def _base_spec(path: tuple[str, ...], shape: tuple[int, ...], tp: int):
+    """Spec for the TRAILING logical dims of one leaf. Returns a tuple whose
+    length is the number of trailing dims it claims."""
+    names = set(path)
+    last = path[-1]
+    in_moe = "moe" in names and "shared" not in names
+
+    if last == "embed":
+        return (_tp_if(shape[-2], tp), None)
+    if last == "lm_head":
+        return (None, _tp_if(shape[-1], tp))
+    if last == "router":
+        return (None, None)
+    if in_moe and last in ("gate", "up"):
+        e, _, f = shape[-3:]
+        if e % tp == 0:
+            return ("model", None, None)
+        return (None, None, _tp_if(f, tp))
+    if in_moe and last == "down":
+        e, f, _ = shape[-3:]
+        if e % tp == 0:
+            return ("model", None, None)
+        return (None, _tp_if(f, tp), None)
+    if last in ("wq", "wk", "wv", "gate", "up", "wz", "wx"):
+        return (None, _tp_if(shape[-1], tp))
+    if last in ("wo", "out_proj", "down"):
+        return (_tp_if(shape[-2], tp), None)
+    if last == "conv_w":
+        return (_tp_if(shape[-2], tp), None)
+    # norms, biases, A_log, D, dt_bias, wB, wC, wdt, q_norm, ... -> replicated
+    return ()
+
+
+def _with_extra_axis(base: tuple, shape: tuple[int, ...], extra_axis: str,
+                     extra_size: int) -> tuple:
+    """ZeRO/2D-TP second weight axis: assign `extra_axis` to the first
+    still-unsharded logical dim it divides."""
+    if not base or extra_size <= 1:
+        return base
+    dims = shape[-len(base):]
+    out = list(base)
+    for i, (ax, dim) in enumerate(zip(base, dims)):
+        if ax is None and dim % extra_size == 0 and dim >= extra_size:
+            out[i] = extra_axis
+            break
+    return tuple(out)
+
+
+def param_pspec(path: tuple[str, ...], leaf, tp: int,
+                client_axes: tuple[str, ...] = (),
+                extra_axis: str | None = None, extra_size: int = 1) -> P:
+    base = _base_spec(path, leaf.shape, tp)
+    if extra_axis:
+        base = _with_extra_axis(base, leaf.shape, extra_axis, extra_size)
+    n_pad = leaf.ndim - len(base) - (1 if client_axes else 0)
+    if n_pad < 0:  # scalar-ish leaf under clients axis
+        return P(*((client_axes,) if client_axes else ()))
+    front = ((client_axes,) if client_axes else ())
+    return P(*front, *(None,) * n_pad, *base)
+
+
+def _path_names(kp) -> tuple[str, ...]:
+    names = []
+    for k in kp:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+    return tuple(names)
+
+
+def tree_pspecs(tree, tp: int, client_axes: tuple[str, ...] = (),
+                extra_axis: str | None = None, extra_size: int = 1):
+    """PartitionSpec pytree mirroring ``tree`` (arrays or ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: param_pspec(_path_names(kp), leaf, tp, client_axes,
+                                     extra_axis, extra_size),
+        tree,
+    )
+
+
+def tree_shardings(tree, mesh: Mesh, tp: int, client_axes: tuple[str, ...] = (),
+                   extra_axis: str | None = None):
+    extra_size = mesh.shape[extra_axis] if extra_axis else 1
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        tree_pspecs(tree, tp, client_axes, extra_axis, extra_size),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# --------------------------------------------------------------- serve side
+def cache_pspec(path: tuple[str, ...], leaf, tp: int, dp, seq_axes) -> P:
+    """KV/SSM cache sharding. dp = axis (tuple) for the batch dim or None;
+    seq_axes = axes for the cache slot/seq dim (the long dim)."""
+    last = path[-1]
+    if last in ("k", "v"):           # [.., B, cap, Hkv, Dh]
+        base = (dp, seq_axes, None, None)
+    elif last in ("cross_k", "cross_v"):  # [.., B, T_enc, H, Dh]
+        base = (dp, None, None, None)
+    elif last == "conv":             # [.., B, K-1, ch]
+        base = (dp, None, _tp_if(leaf.shape[-1], tp))
+    elif last == "state":            # [.., B, H, P, N]
+        h, p_dim = leaf.shape[-3], leaf.shape[-2]
+        if h % tp == 0 and h >= tp:
+            base = (dp, "model", None, None)
+        elif p_dim % tp == 0 and p_dim >= tp:
+            base = (dp, None, "model", None)
+        else:
+            base = (dp, None, None, None)
+    elif last in ("pos", "length"):
+        base = (None,) * leaf.ndim
+        return P(*base[: leaf.ndim])
+    else:
+        base = (None,) * leaf.ndim
+        return P(*base[: leaf.ndim])
+    n_pad = leaf.ndim - len(base)
+    return P(*(None,) * n_pad, *base)
+
+
+def cache_shardings(caches, mesh: Mesh, *, batch: int):
+    """Shardings for a cache pytree. Batch gets the client/data axes when it
+    divides them; otherwise the sequence dim absorbs ALL mesh axes (the
+    long_500k single-request layout)."""
+    tp = mesh.shape["model"]
+    from repro.launch.mesh import client_axes as _ca
+
+    ca = _ca(mesh)
+    dp_size = 1
+    for a in ca:
+        dp_size *= mesh.shape[a]
+    if batch % dp_size == 0 and batch >= dp_size:
+        dp, seq_axes = ca, "model"
+    else:
+        dp, seq_axes = None, ca + ("model",)
+
+    def assign(kp, leaf):
+        spec = cache_pspec(_path_names(kp), leaf, tp, dp, seq_axes)
+        # never shard a dim the size doesn't divide
+        fixed = []
+        for ax, dim in zip(spec, leaf.shape):
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,) if ax else ()):
+                size *= mesh.shape[a]
+            fixed.append(ax if size and dim % size == 0 and dim >= size else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree_util.tree_map_with_path(assign, caches)
+
+
+def batch_shardings(batch_tree, mesh: Mesh, *, dim_axes: tuple):
+    """Input batches: ``dim_axes`` gives the axis (or axis tuple) for each
+    leading dim; remaining dims are replicated.
+    Train: dim_axes=(None, client_axes, fsdp_or_None) for [tau, C, B, ...];
+    serve: dim_axes=(batch_axes,) for [B, ...]."""
+
+    def assign(leaf):
+        n_rest = leaf.ndim - len(dim_axes)
+        return NamedSharding(mesh, P(*dim_axes, *(None,) * n_rest))
+
+    return jax.tree.map(assign, batch_tree)

@@ -1,0 +1,176 @@
+"""Distributed serving driver: batched prefill + KV-cached decode.
+
+Layouts (decided in partition.cache_shardings):
+  * prefill_32k / decode_32k — request batch over the ("pod","data") axes,
+    KV-cache sequence (or SSM heads) over "model";
+  * long_500k — batch=1: the cache sequence dim absorbs ALL mesh axes
+    (ring-buffer window for sliding/chunked attention, O(1) state for SSM).
+
+``lower_prefill`` / ``lower_decode`` AOT-lower the steps for the dry-run;
+``generate`` is the runnable single-host loop used by examples/serve_lm.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import INPUT_SHAPES, ArchConfig
+from repro.launch import input_specs as ispec
+from repro.launch import partition
+from repro.launch.mesh import client_axes, tp_size
+from repro.models import build_model
+from repro.utils.sharding_ctx import activation_sharding
+
+
+def _serve_cfg(arch: str, dtype: str = "bfloat16") -> ArchConfig:
+    return get_config(arch).with_dtype(dtype)
+
+
+def _batch_axes(mesh, batch: int):
+    ca = client_axes(mesh)
+    size = 1
+    for a in ca:
+        size *= mesh.shape[a]
+    return ca if batch % size == 0 and batch >= size else None
+
+
+def abstract_serve_state(cfg: ArchConfig, batch: int, seq_len: int):
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
+    # VLM caches must also hold the image-token prefix.
+    cap = seq_len + (cfg.n_modal_tokens if cfg.family == "vlm" else 0)
+    caches = jax.eval_shape(lambda: model.init_caches(batch, cap))
+    return model, params, caches
+
+
+def lower_decode(arch: str, mesh, *, shape_name: str = "decode_32k",
+                 dtype: str = "bfloat16"):
+    """One-token serve_step with a seq_len-deep cache (the decode shapes)."""
+    from repro.launch.overrides import distribution_for
+
+    cfg = _serve_cfg(arch, dtype)
+    shp = INPUT_SHAPES[shape_name]
+    model, params, caches = abstract_serve_state(cfg, shp.global_batch,
+                                                 shp.seq_len)
+    tp = tp_size(mesh)
+    wide = "data" if distribution_for(arch).serve_wide else None
+    p_sh = partition.tree_shardings(params, mesh, tp, extra_axis=wide)
+    c_sh = partition.cache_shardings(caches, mesh, batch=shp.global_batch)
+    ba = _batch_axes(mesh, shp.global_batch)
+    tok_sh = NamedSharding(mesh, P(ba, None))
+    token = jax.ShapeDtypeStruct((shp.global_batch, 1), jnp.int32)
+
+    def decode_step(params, token, caches):
+        return model.decode_step(params, token, caches)
+
+    # decode processes one token per request: the token-sharded dispatch's
+    # per-layer weight gather would dominate (measured: 18 -> 241 ms
+    # regression), so decode keeps the plain dispatch.
+    with mesh:
+        with activation_sharding(residual=P(None, None, "model")):
+            # decode residual is [B, 1, d]: shard d_model (seq dim is 1)
+            lowered = jax.jit(
+                decode_step, in_shardings=(p_sh, tok_sh, c_sh),
+            ).lower(params, token, caches)
+    return lowered
+
+
+def _moe_ctx(cfg: ArchConfig, mesh, batch: int, *, seq_sharded: bool):
+    """Token-sharded MoE dispatch when experts don't divide the model axis —
+    see models/moe.py and EXPERIMENTS.md §Perf iteration 1. Serving tokens
+    are sharded over BOTH the data axes (batch) and, at prefill, the model
+    axis (sequence), so the dispatch vmaps over the full device grid."""
+    tp = tp_size(mesh)
+    if not (cfg.n_experts and cfg.n_experts % tp):
+        return None
+    ca = client_axes(mesh)
+    dp = 1
+    for a in ca:
+        dp *= mesh.shape[a]
+    if not (batch % dp == 0 and batch >= dp):
+        return None
+    ns = tp if seq_sharded else 1
+    grid_axes = (ca + ("model",)) if seq_sharded else ca
+    return {"nb": dp, "ns": ns, "axes": grid_axes,
+            "spec": P(grid_axes if len(grid_axes) > 1 else grid_axes[0],
+                      None, None)}
+
+
+def lower_prefill(arch: str, mesh, *, shape_name: str = "prefill_32k",
+                  dtype: str = "bfloat16"):
+    """Full-prompt prefill populating the cache (the prefill shapes)."""
+    from repro.launch.overrides import distribution_for
+
+    cfg = _serve_cfg(arch, dtype)
+    shp = INPUT_SHAPES[shape_name]
+    model, params, caches = abstract_serve_state(cfg, shp.global_batch,
+                                                 shp.seq_len)
+    tp = tp_size(mesh)
+    wide = "data" if distribution_for(arch).serve_wide else None
+    p_sh = partition.tree_shardings(params, mesh, tp, extra_axis=wide)
+    c_sh = partition.cache_shardings(caches, mesh, batch=shp.global_batch)
+    batch_specs = ispec.batch_specs(cfg, shp.global_batch, shp.seq_len)
+    ba = _batch_axes(mesh, shp.global_batch)
+    b_sh = partition.batch_shardings(batch_specs, mesh, dim_axes=(ba,))
+
+    def prefill(params, batch, caches):
+        return model.prefill(params, batch, caches)
+
+    moe = _moe_ctx(cfg, mesh, shp.global_batch, seq_sharded=True)
+    with mesh:
+        with activation_sharding(residual=P(None, "model", None),
+                                 logits=P(None, None, "model"),
+                                 moe_shards=moe):
+            lowered = jax.jit(
+                prefill, in_shardings=(p_sh, b_sh, c_sh),
+            ).lower(params, batch_specs, caches)
+    return lowered
+
+
+# ------------------------------------------------------- single-host loop
+def generate(arch: str, *, prompt_len: int = 32, gen_len: int = 32,
+             batch: int = 2, reduced: bool = True, seed: int = 0,
+             greedy: bool = True):
+    """Runnable generation loop (examples/serve_lm.py)."""
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(seed))
+    batch_data = ispec.make_batch(cfg, batch, prompt_len, key=seed + 1)
+    total = prompt_len + gen_len
+    extra = cfg.n_modal_tokens if cfg.family == "vlm" else 0
+    caches = model.init_caches(batch, total + extra)
+    logits, caches = jax.jit(model.prefill)(params, batch_data, caches)
+    decode = jax.jit(model.decode_step)
+    toks = []
+    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    key = jax.random.key(seed + 2)
+    for _ in range(gen_len):
+        toks.append(tok)
+        logits, caches = decode(params, tok, caches)
+        if greedy:
+            tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        else:
+            key, k = jax.random.split(key)
+            tok = jax.random.categorical(k, logits[:, -1, :])[:, None].astype(jnp.int32)
+    return jnp.concatenate(toks, axis=1)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--full", action="store_true")
+    a = ap.parse_args()
+    out = generate(a.arch, prompt_len=a.prompt_len, gen_len=a.gen_len,
+                   batch=a.batch, reduced=not a.full)
+    print("generated token ids:")
+    print(out)

@@ -1,0 +1,223 @@
+"""Distributed federated training driver.
+
+``build_train_step`` assembles the jitted FedCET communication round for a
+given (arch, mesh): the paper's Algorithm 2 applied to the real model, with
+
+  * clients laid out along the ("pod", "data") mesh axes (one model replica
+    + one heterogeneous data shard per client),
+  * each replica tensor-parallel over "model" (partition.py rules),
+  * Megatron-style sequence-sharded residual activations,
+  * the single FedCET vector aggregated by ONE cross-client all-reduce per
+    tau gradient steps — the only collective crossing the pod boundary.
+
+Also provides ``run_training`` — the end-to-end loop used by the examples
+(single host: same code, 1x1 mesh semantics, no sharding constraints).
+
+Run as a script for a production-launch entry point:
+    python -m repro.launch.train --arch qwen3-1.7b --steps 100 ...
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import INPUT_SHAPES, ArchConfig
+from repro.core.fedcet import FedCET, FedCETState
+from repro.launch import input_specs as ispec
+from repro.launch import partition
+from repro.launch.mesh import client_axes, n_clients, tp_size
+from repro.models import build_model
+from repro.utils.sharding_ctx import activation_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainPlan:
+    cfg: ArchConfig
+    algo: FedCET
+    mesh: Any
+    n_clients: int
+    per_client_batch: int
+    seq_len: int
+
+    @property
+    def client_axes(self) -> tuple[str, ...]:
+        return client_axes(self.mesh)
+
+
+def make_plan(arch: str, mesh, *, shape_name: str = "train_4k",
+              tau: int = 2, alpha: float = 1e-3, c: float = 0.05,
+              dtype: str = "bfloat16") -> TrainPlan:
+    from repro.launch.overrides import distribution_for, train_mesh_view
+
+    cfg = get_config(arch).with_dtype(dtype)
+    shp = INPUT_SHAPES[shape_name]
+    dist = distribution_for(arch)
+    mesh = train_mesh_view(mesh, dist.fsdp)  # may split data -> (data, fsdp)
+    nc = n_clients(mesh)
+    assert shp.global_batch % nc == 0, (shp.global_batch, nc)
+    algo = FedCET(alpha=alpha, c=c, tau=tau, n_clients=nc,
+                  spmd_client_axes=client_axes(mesh))
+    return TrainPlan(cfg=cfg, algo=algo, mesh=mesh, n_clients=nc,
+                     per_client_batch=shp.global_batch // nc,
+                     seq_len=shp.seq_len)
+
+
+def _fsdp(plan: TrainPlan) -> str | None:
+    return "fsdp" if "fsdp" in plan.mesh.axis_names else None
+
+
+def state_shardings(plan: TrainPlan, state_shapes) -> FedCETState:
+    """Shardings for FedCETState: x and d are stacked-client param trees."""
+    mesh, tp, ca = plan.mesh, tp_size(plan.mesh), plan.client_axes
+    x_sh = partition.tree_shardings(state_shapes.x, mesh, tp, ca,
+                                    extra_axis=_fsdp(plan))
+    d_sh = partition.tree_shardings(state_shapes.d, mesh, tp, ca,
+                                    extra_axis=_fsdp(plan))
+    t_sh = NamedSharding(mesh, P())
+    return FedCETState(x=x_sh, d=d_sh, t=t_sh)
+
+
+def abstract_state(plan: TrainPlan) -> FedCETState:
+    """Shape-only FedCETState (no allocation) for AOT lowering."""
+    model = build_model(plan.cfg)
+    params = jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
+    stack = lambda tree: jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct((plan.n_clients,) + a.shape, a.dtype), tree)
+    return FedCETState(x=stack(params), d=stack(params),
+                       t=jax.ShapeDtypeStruct((), jnp.int64))
+
+
+def build_round_fn(plan: TrainPlan) -> Callable:
+    """The pure function jitted as the production train step."""
+    model = build_model(plan.cfg)
+    grad_fn = jax.grad(model.loss)
+    algo = plan.algo
+
+    def train_round(state: FedCETState, batches):
+        return algo.round(grad_fn, state, batches)
+
+    return train_round
+
+
+def lower_train_step(plan: TrainPlan):
+    """AOT lower + compile the FedCET round on the production mesh."""
+    mesh = plan.mesh
+    state_shapes = abstract_state(plan)
+    batch_shapes = ispec.fed_batch_specs(
+        plan.cfg, plan.algo.tau, plan.n_clients, plan.per_client_batch,
+        plan.seq_len)
+    st_sh = state_shardings(plan, state_shapes)
+    b_sh = partition.batch_shardings(
+        batch_shapes, mesh,
+        dim_axes=(None, plan.client_axes, _fsdp(plan)))
+    fn = build_round_fn(plan)
+    tp = tp_size(mesh)
+    # token-sharded MoE dispatch when experts don't divide the model axis
+    # (EXPERIMENTS.md §Perf iteration 1); per-client tokens are seq-sharded
+    # over `model` (and batch over fsdp when present).
+    moe = None
+    if plan.cfg.n_experts and plan.cfg.n_experts % tp:
+        fs = _fsdp(plan)
+        nb = mesh.shape[fs] if fs else 1
+        axes = (fs, "model") if fs else ("model",)
+        moe = {"nb": nb, "ns": tp, "axes": axes,
+               "spec": P(axes if len(axes) > 1 else axes[0], None, None)}
+    with mesh:
+        # per-client activations [B, S, d]: batch over fsdp (when present),
+        # sequence over model (Megatron SP), d replicated.
+        with activation_sharding(residual=P(_fsdp(plan), "model", None),
+                                 logits=P(_fsdp(plan), None, "model"),
+                                 moe_shards=moe):
+            # NB: production launches add donate_argnums=(0,) to alias the
+            # (x, d) state in/out; on the CPU dry-run backend donation makes
+            # memory_analysis double-count the aliased while-carry, so the
+            # recorded numbers here are without it (EXPERIMENTS.md §Dry-run).
+            lowered = jax.jit(
+                fn, in_shardings=(st_sh, b_sh), out_shardings=st_sh,
+            ).lower(state_shapes, batch_shapes)
+    return lowered
+
+
+# --------------------------------------------------------- single-host loop
+def run_training(arch: str, *, steps: int = 100, tau: int = 2,
+                 n_clients: int = 4, batch: int = 8, seq_len: int = 128,
+                 alpha: float = 3e-3, c: float = 0.05, heterogeneity: float = 0.8,
+                 reduced: bool = True, seed: int = 0,
+                 log_every: int = 10, ckpt_dir: str | None = None,
+                 callback=None) -> dict:
+    """End-to-end FedCET LM training on the host device(s). Returns metrics
+    history. Used by examples/fed_train_lm.py."""
+    from repro.checkpoint.ckpt import save
+    from repro.core.comm import CommMeter
+    from repro.data.synthetic import make_hetero_lm_dataset
+
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(seed))
+    algo = FedCET(alpha=alpha, c=c, tau=tau, n_clients=n_clients)
+    ds = make_hetero_lm_dataset(cfg.vocab_size, n_clients, seq_len, batch,
+                                heterogeneity=heterogeneity, seed=seed)
+    grad_fn = jax.grad(model.loss)
+
+    def batches_for(r):
+        toks = ds.sample_round(r, tau)  # [tau, C, B, S]
+        return {"tokens": toks}
+
+    state = algo.init(grad_fn, params, jax.tree.map(lambda b: b[0], batches_for(0)))
+    round_fn = jax.jit(partial(algo.round, grad_fn))
+
+    mean_loss = jax.jit(lambda st, b: jnp.mean(
+        jax.vmap(model.loss)(st.x, b)))
+
+    meter = CommMeter.for_params(params, n_clients=n_clients)
+    history = {"round": [], "loss": [], "comm_bytes": []}
+    for r in range(steps):
+        b = batches_for(r)
+        state = round_fn(state, b)
+        meter.tick(algo.vectors_up, algo.vectors_down)
+        if r % log_every == 0 or r == steps - 1:
+            loss = float(mean_loss(state, jax.tree.map(lambda x: x[0], b)))
+            history["round"].append(r)
+            history["loss"].append(loss)
+            history["comm_bytes"].append(meter.total)
+            if callback:
+                callback(r, loss, meter.total)
+        if ckpt_dir and (r + 1) % 50 == 0:
+            save(ckpt_dir, r + 1, state)
+    return history
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--tau", type=int, default=2)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--alpha", type=float, default=3e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (non-reduced) architecture")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args(argv)
+    hist = run_training(
+        args.arch, steps=args.steps, tau=args.tau, n_clients=args.clients,
+        batch=args.batch, seq_len=args.seq_len, alpha=args.alpha,
+        reduced=not args.full, ckpt_dir=args.ckpt_dir,
+        callback=lambda r, l, b: print(f"round {r:5d}  loss {l:.4f}  comm {b/1e6:.1f} MB"))
+    print("final loss:", hist["loss"][-1])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Model zoo: build any assigned architecture from its ArchConfig."""
+
+from repro.configs.base import ArchConfig
+
+
+def build_model(cfg: ArchConfig):
+    """Family dispatch. All models expose the same surface:
+    init / forward / loss / init_caches / prefill / decode_step."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.transformer import TransformerLM
+
+        return TransformerLM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.ssm_lm import Mamba2LM
+
+        return Mamba2LM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import HybridLM
+
+        return HybridLM(cfg)
+    if cfg.family == "audio":
+        from repro.models.encdec import EncDecLM
+
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family: {cfg.family}")
+
+
+__all__ = ["ArchConfig", "build_model"]

@@ -1,0 +1,288 @@
+"""Whisper-style encoder-decoder transformer [arXiv:2212.04356].
+
+The modality frontend (log-mel spectrogram + 2x conv downsampling) is the
+assignment's allowed stub: ``input_specs()`` provides precomputed frame
+embeddings [B, T_enc, d]. Everything downstream — the bidirectional
+encoder, the causal decoder with cross-attention, KV-cached serving — is
+implemented fully.
+
+Whisper conventions kept: LayerNorm (with biases), GELU MLP, attention
+biases, sinusoidal positions (we use sinusoidal for the decoder too instead
+of Whisper's learned table — noted in DESIGN.md), no RoPE.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    dense_init,
+    embed_init,
+    init_mlp,
+    init_norm,
+    sinusoidal_positions,
+)
+from repro.utils.sharding_ctx import shard_residual
+
+
+def _init_xattn(key, d, n_heads, head_dim, dtype):
+    return attn_mod.init_attention(key, d, n_heads, n_heads, head_dim, dtype,
+                                   with_bias=True)
+
+
+def _cross_kv(p, memory, n_heads, head_dim):
+    B, T, _ = memory.shape
+    k = (memory @ p["wk"] + p["bk"]).reshape(B, T, n_heads, head_dim)
+    v = (memory @ p["wv"] + p["bv"]).reshape(B, T, n_heads, head_dim)
+    return k, v
+
+
+def _cross_attend(p, x, k, v, n_heads, head_dim):
+    B, S, _ = x.shape
+    q = (x @ p["wq"] + p["bq"]).reshape(B, S, n_heads, head_dim)
+    out = attn_mod.attend_naive(q, k, v, attn_mod.mask_fn("bidirectional"))
+    return out.reshape(B, S, n_heads * head_dim) @ p["wo"] + p["bo"]
+
+
+def init_enc_block(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    dtype = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln1": init_norm(cfg.d_model, dtype, with_bias=True),
+        "attn": attn_mod.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.head_dim, dtype,
+                                        with_bias=True),
+        "ln2": init_norm(cfg.d_model, dtype, with_bias=True),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype, activation="gelu",
+                        with_bias=True),
+    }
+
+
+def init_dec_block(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln1": init_norm(cfg.d_model, dtype, with_bias=True),
+        "self_attn": attn_mod.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                             cfg.n_kv_heads, cfg.head_dim,
+                                             dtype, with_bias=True),
+        "ln_x": init_norm(cfg.d_model, dtype, with_bias=True),
+        "cross_attn": _init_xattn(k2, cfg.d_model, cfg.n_heads, cfg.head_dim,
+                                  dtype),
+        "ln2": init_norm(cfg.d_model, dtype, with_bias=True),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, dtype, activation="gelu",
+                        with_bias=True),
+    }
+
+
+class EncDecLM(NamedTuple):
+    cfg: ArchConfig
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        kenc, kdec, kemb = jax.random.split(key, 3)
+        ekeys = jax.random.split(kenc, cfg.encoder_layers)
+        dkeys = jax.random.split(kdec, cfg.n_layers)
+        if cfg.scan_layers:
+            enc = jax.vmap(lambda k: init_enc_block(k, cfg))(ekeys)
+            dec = jax.vmap(lambda k: init_dec_block(k, cfg))(dkeys)
+        else:
+            enc = [init_enc_block(k, cfg) for k in ekeys]
+            dec = [init_dec_block(k, cfg) for k in dkeys]
+        return {
+            "embed": embed_init(kemb, cfg.vocab_size, cfg.d_model, dtype),
+            "encoder": enc,
+            "enc_norm": init_norm(cfg.d_model, dtype, with_bias=True),
+            "decoder": dec,
+            "final_norm": init_norm(cfg.d_model, dtype, with_bias=True),
+        }
+
+    # -------------------------------------------------------------- encoder
+    def encode(self, params, frames) -> jax.Array:
+        cfg = self.cfg
+        T = frames.shape[1]
+        x = frames.astype(jnp.dtype(cfg.dtype))
+        x = x + sinusoidal_positions(T, cfg.d_model, x.dtype)[None]
+
+        def body(x, p):
+            x = shard_residual(x)
+            h = apply_norm(x, p["ln1"], "layernorm")
+            h = attn_mod.attention(
+                p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, kind="bidirectional", use_rope=False,
+                block_size=cfg.attn_block_size)
+            x = x + h
+            h = apply_norm(x, p["ln2"], "layernorm")
+            return x + apply_mlp(h, p["mlp"], activation="gelu"), None
+
+        if cfg.scan_layers:
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            x, _ = jax.lax.scan(body_fn, x, params["encoder"])
+        else:
+            for p in params["encoder"]:
+                x, _ = body(x, p)
+        return apply_norm(x, params["enc_norm"], "layernorm")
+
+    # -------------------------------------------------------------- decoder
+    def _dec_embed(self, params, tokens, start_pos: int | jax.Array = 0):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+        S = tokens.shape[1]
+        pos_tab = sinusoidal_positions(S, cfg.d_model, x.dtype) \
+            if isinstance(start_pos, int) and start_pos == 0 else None
+        if pos_tab is not None:
+            return x + pos_tab[None]
+        # decode: single position start_pos
+        inv = 1.0 / (10000.0 ** (jnp.arange(0, cfg.d_model, 2, jnp.float32)
+                                 / cfg.d_model))
+        ang = jnp.asarray(start_pos, jnp.float32) * inv
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+        return x + pe.astype(x.dtype)
+
+    def _dec_block_full(self, p, x, memory, cfg):
+        x = shard_residual(x)
+        h = apply_norm(x, p["ln1"], "layernorm")
+        h = attn_mod.attention(
+            p["self_attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, kind="full", use_rope=False,
+            block_size=cfg.attn_block_size)
+        x = x + h
+        h = apply_norm(x, p["ln_x"], "layernorm")
+        k, v = _cross_kv(p["cross_attn"], memory, cfg.n_heads, cfg.head_dim)
+        x = x + _cross_attend(p["cross_attn"], h, k, v, cfg.n_heads, cfg.head_dim)
+        h = apply_norm(x, p["ln2"], "layernorm")
+        return x + apply_mlp(h, p["mlp"], activation="gelu")
+
+    def forward(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"])
+        x = self._dec_embed(params, batch["tokens"])
+
+        if cfg.scan_layers:
+            def body(x, p):
+                return self._dec_block_full(p, x, memory, cfg), None
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            x, _ = jax.lax.scan(body_fn, x, params["decoder"])
+        else:
+            for p in params["decoder"]:
+                x = self._dec_block_full(p, x, memory, cfg)
+        x = apply_norm(x, params["final_norm"], "layernorm")
+        return x @ params["embed"].T  # whisper ties the output head
+
+    def loss(self, params, batch) -> jax.Array:
+        from repro.models.losses import chunked_ce
+
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"])
+        x = self._dec_embed(params, batch["tokens"])
+        if cfg.scan_layers:
+            def body(x, p):
+                return self._dec_block_full(p, x, memory, cfg), None
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            x, _ = jax.lax.scan(body_fn, x, params["decoder"])
+        else:
+            for p in params["decoder"]:
+                x = self._dec_block_full(p, x, memory, cfg)
+        x = apply_norm(x, params["final_norm"], "layernorm")
+        return chunked_ce(x, params["embed"].T, batch["tokens"])
+
+    # ---------------------------------------------------------------- serve
+    def init_caches(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        one = lambda: {
+            "self": attn_mod.init_cache(batch, seq_len, cfg.n_kv_heads,
+                                        cfg.head_dim, dtype),
+            "cross_k": jnp.zeros((batch, cfg.encoder_len, cfg.n_heads,
+                                  cfg.head_dim), dtype),
+            "cross_v": jnp.zeros((batch, cfg.encoder_len, cfg.n_heads,
+                                  cfg.head_dim), dtype),
+        }
+        if cfg.scan_layers:
+            return jax.tree.map(
+                lambda *ls: jnp.stack(ls), *[one() for _ in range(cfg.n_layers)])
+        return [one() for _ in range(cfg.n_layers)]
+
+    def _dec_block_prefill(self, p, x, cache, memory, cfg):
+        h = apply_norm(x, p["ln1"], "layernorm")
+        h, self_c = attn_mod.prefill_attention(
+            p["self_attn"], h, cache=cache["self"], n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, kind="full",
+            use_rope=False, block_size=cfg.attn_block_size)
+        x = x + h
+        h = apply_norm(x, p["ln_x"], "layernorm")
+        k, v = _cross_kv(p["cross_attn"], memory, cfg.n_heads, cfg.head_dim)
+        x = x + _cross_attend(p["cross_attn"], h, k, v, cfg.n_heads, cfg.head_dim)
+        h = apply_norm(x, p["ln2"], "layernorm")
+        x = x + apply_mlp(h, p["mlp"], activation="gelu")
+        return x, {"self": self_c, "cross_k": k, "cross_v": v}
+
+    def _dec_block_decode(self, p, x1, cache, cfg):
+        h = apply_norm(x1, p["ln1"], "layernorm")
+        h, self_c = attn_mod.decode_attention(
+            p["self_attn"], h, cache["self"], n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, kind="full",
+            use_rope=False)
+        x1 = x1 + h
+        h = apply_norm(x1, p["ln_x"], "layernorm")
+        x1 = x1 + _cross_attend(p["cross_attn"], h, cache["cross_k"],
+                                cache["cross_v"], cfg.n_heads, cfg.head_dim)
+        h = apply_norm(x1, p["ln2"], "layernorm")
+        x1 = x1 + apply_mlp(h, p["mlp"], activation="gelu")
+        return x1, {"self": self_c, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"]}
+
+    def prefill(self, params, batch, caches):
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"])
+        x = self._dec_embed(params, batch["tokens"])
+        if cfg.scan_layers:
+            def body(x, inp):
+                p, cache = inp
+                x, cache = self._dec_block_prefill(p, x, cache, memory, cfg)
+                return x, cache
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            x, caches = jax.lax.scan(body_fn, x, (params["decoder"], caches))
+        else:
+            new = []
+            for p, cache in zip(params["decoder"], caches):
+                x, cache = self._dec_block_prefill(p, x, cache, memory, cfg)
+                new.append(cache)
+            caches = new
+        x = apply_norm(x[:, -1:, :], params["final_norm"], "layernorm")
+        return x @ params["embed"].T, caches
+
+    def decode_step(self, params, token, caches):
+        cfg = self.cfg
+        # position = self-attn cache length (same for every layer)
+        if cfg.scan_layers:
+            length = caches["self"].length[0]
+        else:
+            length = caches[0]["self"].length
+        x = self._dec_embed(params, token, start_pos=length)
+        if cfg.scan_layers:
+            def body(x, inp):
+                p, cache = inp
+                x, cache = self._dec_block_decode(p, x, cache, cfg)
+                return x, cache
+
+            x, caches = jax.lax.scan(body, x, (params["decoder"], caches))
+        else:
+            new = []
+            for p, cache in zip(params["decoder"], caches):
+                x, cache = self._dec_block_decode(p, x, cache, cfg)
+                new.append(cache)
+            caches = new
+        x = apply_norm(x, params["final_norm"], "layernorm")
+        return x @ params["embed"].T, caches

@@ -1,0 +1,111 @@
+"""Shared neural-net building blocks (pure functions over param dicts).
+
+No flax/haiku dependency: parameters are nested dicts of jnp arrays, each
+module is an ``init_*`` + ``apply`` pair. This keeps pytrees transparent for
+the federated algorithms (which treat the whole model as an optimization
+variable) and for the sharding layer (which mirrors the dict structure with
+PartitionSpecs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------- init
+def dense_init(key, d_in: int, d_out: int, dtype, *, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# -------------------------------------------------------------------- norms
+def rms_norm(x, weight, *, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, weight, bias, *, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def init_norm(d: int, dtype, *, with_bias: bool = False):
+    if with_bias:
+        return {"weight": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    # rms_norm stores weight as a delta around 1 (gemma convention) so a
+    # zeros-init is the identity transform.
+    return {"weight": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(x, params, kind: str = "rmsnorm"):
+    if kind == "layernorm":
+        return layer_norm(x, params["weight"], params["bias"])
+    return rms_norm(x, params["weight"])
+
+
+# --------------------------------------------------------------------- rope
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                      # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs      # [..., S, Dh/2]
+    angles = angles[..., None, :]                                  # [..., S, 1, Dh/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d: int, dtype=jnp.float32):
+    """Whisper-style fixed sinusoidal position embeddings [n_pos, d]."""
+    inv = 1.0 / (10000.0 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = jnp.arange(n_pos, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------- mlp
+def init_mlp(key, d: int, d_ff: int, dtype, *, activation: str, with_bias: bool = False):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        p = {
+            "gate": dense_init(k1, d, d_ff, dtype),
+            "up": dense_init(k2, d, d_ff, dtype),
+            "down": dense_init(k3, d_ff, d, dtype),
+        }
+    else:  # plain gelu (whisper)
+        p = {"up": dense_init(k1, d, d_ff, dtype), "down": dense_init(k2, d_ff, d, dtype)}
+    if with_bias:
+        p["up_b"] = jnp.zeros((d_ff,), dtype)
+        p["down_b"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_mlp(x, params, *, activation: str):
+    if activation in ("swiglu", "geglu"):
+        act = jax.nn.silu if activation == "swiglu" else lambda a: jax.nn.gelu(a, approximate=True)
+        h = act(x @ params["gate"]) * (x @ params["up"])
+        return h @ params["down"]
+    h = x @ params["up"]
+    if "up_b" in params:
+        h = h + params["up_b"]
+    h = jax.nn.gelu(h, approximate=True)
+    out = h @ params["down"]
+    if "down_b" in params:
+        out = out + params["down_b"]
+    return out

@@ -1,0 +1,276 @@
+"""Mamba2 — SSD (state-space duality) blocks [arXiv:2405.21060].
+
+The SSD computation is implemented twice:
+
+* ``ssd_naive`` — the literal per-token recurrence
+  ``h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t``, ``y_t = C_t h_t + D x_t``.
+  O(S) sequential; the correctness oracle.
+* ``ssd_chunked`` — the paper's chunked dual form: quadratic attention-like
+  computation *within* chunks (MXU-friendly matmuls) + a ``lax.scan``
+  recurrence *across* chunk states. This is the TPU adaptation of the SSD
+  insight: the intra-chunk term is batched [Lc x Lc] matmuls that map onto
+  the systolic array, and only the O(S/Lc) chunk-state recurrence is
+  sequential.
+
+Both are property-tested against each other across shapes/dtypes.
+Decode is O(1) in sequence length: the carried state is [B, H, P, N] — this
+is what makes `long_500k` a supported shape for the ssm/hybrid families.
+
+Sharding: the head axis H is sharded over `model` when divisible, else the
+head-dim P is (decided in launch/sharding.py); B/C projections are small and
+replicated. B/C/x share a causal depthwise conv (kernel 4), as in the
+reference implementation.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, rms_norm
+
+DEFAULT_CHUNK = 128
+
+
+def ssm_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    return d_inner, n_heads, cfg.ssm_headdim, cfg.ssm_state
+
+
+# ------------------------------------------------------------------- params
+def init_mamba_block(key, cfg: ArchConfig):
+    d_inner, H, P, N = ssm_dims(cfg)
+    conv_ch = d_inner + 2 * N
+    ks = jax.random.split(key, 8)
+    dtype = jnp.dtype(cfg.param_dtype)
+    return {
+        "norm": jnp.zeros((cfg.d_model,), dtype),
+        "wz": dense_init(ks[0], cfg.d_model, d_inner, dtype),
+        "wx": dense_init(ks[1], cfg.d_model, d_inner, dtype),
+        "wB": dense_init(ks[2], cfg.d_model, N, dtype),
+        "wC": dense_init(ks[3], cfg.d_model, N, dtype),
+        "wdt": dense_init(ks[4], cfg.d_model, H, dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "conv_w": (jax.random.normal(ks[5], (conv_ch, cfg.ssm_conv)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "out_norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(ks[6], d_inner, cfg.d_model, dtype),
+    }
+
+
+# --------------------------------------------------------------------- conv
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x: [B, S, C]; w: [C, K]."""
+    K = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :].transpose(2, 1, 0),  # [K, 1, C] -> OIW? use dim nums
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b
+
+
+def conv_step(x1, conv_state, w, b):
+    """One-token conv using the carried last K-1 inputs.
+    x1: [B, C]; conv_state: [B, K-1, C] -> (out [B, C], new state)."""
+    window = jnp.concatenate([conv_state, x1[:, None, :]], axis=1)  # [B,K,C]
+    out = jnp.einsum("bkc,ck->bc", window, w) + b
+    return out, window[:, 1:]
+
+
+# ---------------------------------------------------------------------- SSD
+def ssd_naive(x, dt, A, Bm, Cm, *, h0=None):
+    """Literal recurrence. x: [B,S,H,P], dt: [B,S,H], A: [H],
+    Bm/Cm: [B,S,N]. Returns (y [B,S,H,P], h_final [B,H,P,N])."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    Af = jnp.asarray(A, jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(dtt * Af)[..., None, None]           # [B,H,1,1]
+        inject = (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]
+        h = h * decay + inject                               # [B,H,P,N]
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int = DEFAULT_CHUNK, h0=None,
+                use_kernel: bool = False):
+    """Chunked dual form. Same signature/returns as ssd_naive.
+    ``use_kernel`` computes the intra-chunk term with the Pallas kernel
+    (kernels/ssd_intra.py) instead of the XLA einsums."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Lc = min(chunk, S)
+    pad = (-S) % Lc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    Nc = Sp // Lc
+    xf = x.reshape(Bsz, Nc, Lc, H, P).astype(jnp.float32)
+    dtf = dt.reshape(Bsz, Nc, Lc, H).astype(jnp.float32)
+    Bf = Bm.reshape(Bsz, Nc, Lc, N).astype(jnp.float32)
+    Cf = Cm.reshape(Bsz, Nc, Lc, N).astype(jnp.float32)
+
+    a = dtf * jnp.asarray(A, jnp.float32)         # [B,Nc,Lc,H] log-decay increments
+    a_cs = jnp.cumsum(a, axis=2)                  # inclusive cumsum within chunk
+
+    # ---- intra-chunk (quadratic, attention-like) ---------------------------
+    # y_intra[i] = sum_{j<=i} (C_i . B_j) exp(a_cs[i] - a_cs[j]) dt[j] x[j]
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        y_intra = kops.ssd_intra(xf, dtf, a_cs, Bf, Cf).astype(jnp.float32)
+    else:
+        cb = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)            # [B,Nc,Lc,Lc]
+        seg = a_cs[:, :, :, None, :] - a_cs[:, :, None, :, :]  # [B,Nc,i,j,H]
+        causal = jnp.tril(jnp.ones((Lc, Lc), bool))[None, None, :, :, None]
+        # mask BEFORE exp: acausal entries have seg > 0 and would overflow,
+        # and where(mask, exp(seg), 0) still propagates 0*inf=NaN in the VJP.
+        seg = jnp.where(causal, seg, -jnp.inf)
+        w = cb[..., None] * jnp.exp(seg)                       # [B,Nc,i,j,H]
+        y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", w, dtf, xf)
+
+    # ---- chunk states -------------------------------------------------------
+    # state_c = sum_j B_j^T (dt_j x_j) exp(a_end - a_cs[j])   [B,Nc,H,P,N]
+    decay_to_end = jnp.exp(a_cs[:, :, -1:, :] - a_cs)          # [B,Nc,Lc,H]
+    states = jnp.einsum("bcjh,bcjhp,bcjn->bchpn", dtf * decay_to_end, xf, Bf)
+
+    # ---- inter-chunk recurrence over chunk states ---------------------------
+    chunk_decay = jnp.exp(jnp.sum(a, axis=2))                  # [B,Nc,H]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        st, dc = inp                                           # [B,H,P,N], [B,H]
+        h_out = h                                              # state BEFORE chunk
+        h = h * dc[..., None, None] + st
+        return h, h_out
+
+    h_final, h_prevs = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                 # [B,Nc,H,P,N]
+
+    # y_inter[i] = C_i . (exp(a_cs[i]) h_prev)
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", Cf, jnp.exp(a_cs), h_prevs)
+
+    y = (y_intra + y_inter).reshape(Bsz, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), h_final
+
+
+# ------------------------------------------------------------------- block
+class SSMCache(NamedTuple):
+    conv: jax.Array    # [B, K-1, conv_ch]
+    state: jax.Array   # [B, H, P, N] (f32)
+    length: jax.Array
+
+
+def init_ssm_cache(batch: int, cfg: ArchConfig, dtype) -> SSMCache:
+    d_inner, H, P, N = ssm_dims(cfg)
+    conv_ch = d_inner + 2 * N
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        state=jnp.zeros((batch, H, P, N), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _ssm_inputs(p, u, cfg: ArchConfig):
+    d_inner, H, P, N = ssm_dims(cfg)
+    z = u @ p["wz"]
+    xBC = jnp.concatenate([u @ p["wx"], u @ p["wB"], u @ p["wC"]], axis=-1)
+    return z, xBC, (d_inner, H, P, N)
+
+
+def apply_mamba_block(p, u, cfg: ArchConfig, *, naive: bool = False):
+    """Full-sequence mamba2 block. u: [B, S, d] -> [B, S, d]."""
+    from repro.utils.sharding_ctx import shard_residual
+
+    u = shard_residual(u)
+    B_, S, _ = u.shape
+    h = rms_norm(u, p["norm"])
+    z, xBC, (d_inner, H, P, N) = _ssm_inputs(p, h, cfg)
+    xBC = jax.nn.silu(causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    x, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    x = x.reshape(B_, S, H, P)
+    dt = jax.nn.softplus((h @ p["wdt"]) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    if naive:
+        y, _ = ssd_naive(x, dt, A, Bm, Cm)
+    else:
+        y, _ = ssd_chunked(x, dt, A, Bm, Cm, use_kernel=cfg.use_pallas_ssd)
+    y = y + p["D"][None, None, :, None] * x
+    y = y.reshape(B_, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"])
+    return u + y @ p["out_proj"]
+
+
+def apply_mamba_block_prefill(p, u, cache: SSMCache, cfg: ArchConfig):
+    """Full-sequence forward that also returns the carried SSM/conv state."""
+    B_, S, _ = u.shape
+    h = rms_norm(u, p["norm"])
+    z, xBC, (d_inner, H, P, N) = _ssm_inputs(p, h, cfg)
+    conv_tail = xBC[:, -(cfg.ssm_conv - 1):, :].astype(cache.conv.dtype)
+    if S < cfg.ssm_conv - 1:  # degenerate tiny-seq case
+        conv_tail = jnp.concatenate(
+            [cache.conv[:, S:], xBC.astype(cache.conv.dtype)], axis=1)
+    xBC = jax.nn.silu(causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    x, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    x = x.reshape(B_, S, H, P)
+    dt = jax.nn.softplus((h @ p["wdt"]) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_final = ssd_chunked(x, dt, A, Bm, Cm, h0=cache.state)
+    y = y + p["D"][None, None, :, None] * x
+    y = y.reshape(B_, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"])
+    out = u + y @ p["out_proj"]
+    new_cache = SSMCache(conv=conv_tail, state=h_final,
+                         length=cache.length + S)
+    return out, new_cache
+
+
+def apply_mamba_block_decode(p, u1, cache: SSMCache, cfg: ArchConfig):
+    """One-token step. u1: [B, 1, d]."""
+    B_ = u1.shape[0]
+    h = rms_norm(u1[:, 0], p["norm"])
+    z = h @ p["wz"]
+    xBC1 = jnp.concatenate([h @ p["wx"], h @ p["wB"], h @ p["wC"]], axis=-1)
+    d_inner, H, P, N = ssm_dims(cfg)
+    xBC, conv_state = conv_step(xBC1, cache.conv, p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    x, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    x = x.reshape(B_, H, P)
+    dt = jax.nn.softplus(h @ p["wdt"] + p["dt_bias"])      # [B, H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32) * A)            # [B, H]
+    inject = (dt[..., None] * x)[..., None] * Bm[:, None, None, :]
+    state = cache.state * decay[..., None, None] + inject
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    y = (y + p["D"][None, :, None] * x).reshape(B_, d_inner).astype(u1.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"])
+    out = u1[:, 0] + y @ p["out_proj"]
+    return out[:, None, :], SSMCache(conv=conv_state, state=state,
+                                     length=cache.length + 1)

@@ -1,0 +1,117 @@
+"""Pure-SSM language model (mamba2-130m family): attention-free decoder."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_norm, embed_init, init_norm
+from repro.models.mamba2 import (
+    apply_mamba_block,
+    apply_mamba_block_decode,
+    apply_mamba_block_prefill,
+    init_mamba_block,
+    init_ssm_cache,
+)
+
+
+class Mamba2LM(NamedTuple):
+    cfg: ArchConfig
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        kemb, klayers, khead = jax.random.split(key, 3)
+        layer_keys = jax.random.split(klayers, cfg.n_layers)
+        if cfg.scan_layers:
+            layers = jax.vmap(lambda k: init_mamba_block(k, cfg))(layer_keys)
+        else:
+            layers = [init_mamba_block(k, cfg) for k in layer_keys]
+        return {
+            "embed": embed_init(kemb, cfg.vocab_size, cfg.d_model, dtype),
+            "layers": layers,
+            "final_norm": init_norm(cfg.d_model, dtype),
+            "lm_head": embed_init(khead, cfg.vocab_size, cfg.d_model, dtype).T,
+        }
+
+    def _embed(self, params, tokens):
+        return params["embed"][tokens].astype(jnp.dtype(self.cfg.dtype))
+
+    def _logits(self, params, x):
+        x = apply_norm(x, params["final_norm"], self.cfg.norm)
+        return x @ params["lm_head"]
+
+    def _stack(self, params, x):
+        cfg = self.cfg
+        if cfg.scan_layers:
+            def body(x, p):
+                return apply_mamba_block(p, x, cfg), None
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            x, _ = jax.lax.scan(body_fn, x, params["layers"])
+        else:
+            for p in params["layers"]:
+                x = apply_mamba_block(p, x, cfg)
+        return x
+
+    def forward(self, params, batch) -> jax.Array:
+        x = self._embed(params, batch["tokens"])
+        return self._logits(params, self._stack(params, x))
+
+    def loss(self, params, batch) -> jax.Array:
+        from repro.models.losses import chunked_ce
+
+        x = self._embed(params, batch["tokens"])
+        x = apply_norm(self._stack(params, x), params["final_norm"], self.cfg.norm)
+        return chunked_ce(x, params["lm_head"], batch["tokens"])
+
+    # ---------------------------------------------------------------- serve
+    def init_caches(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        del seq_len  # SSM state is O(1) in sequence length
+        dtype = jnp.dtype(cfg.dtype)
+        one = lambda: init_ssm_cache(batch, cfg, dtype)
+        if cfg.scan_layers:
+            return jax.tree.map(
+                lambda *ls: jnp.stack(ls), *[one() for _ in range(cfg.n_layers)])
+        return [one() for _ in range(cfg.n_layers)]
+
+    def prefill(self, params, batch, caches):
+        cfg = self.cfg
+        x = self._embed(params, batch["tokens"])
+        if cfg.scan_layers:
+            def body(x, inp):
+                p, cache = inp
+                x, cache = apply_mamba_block_prefill(p, x, cache, cfg)
+                return x, cache
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            x, caches = jax.lax.scan(body_fn, x, (params["layers"], caches))
+        else:
+            new = []
+            for p, cache in zip(params["layers"], caches):
+                x, cache = apply_mamba_block_prefill(p, x, cache, cfg)
+                new.append(cache)
+            caches = new
+        return self._logits(params, x[:, -1:, :]), caches
+
+    def decode_step(self, params, token, caches):
+        cfg = self.cfg
+        x = self._embed(params, token)
+        if cfg.scan_layers:
+            def body(x, inp):
+                p, cache = inp
+                x, cache = apply_mamba_block_decode(p, x, cache, cfg)
+                return x, cache
+
+            x, caches = jax.lax.scan(body, x, (params["layers"], caches))
+        else:
+            new = []
+            for p, cache in zip(params["layers"], caches):
+                x, cache = apply_mamba_block_decode(p, x, cache, cfg)
+                new.append(cache)
+            caches = new
+        return self._logits(params, x), caches

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import Adam, Sgd
+from repro.optim.schedules import constant, cosine, wsd
+
+__all__ = ["Adam", "Sgd", "constant", "cosine", "wsd"]

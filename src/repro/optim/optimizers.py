@@ -1,0 +1,64 @@
+"""Minimal optimizer library (no optax dependency).
+
+FedCET itself is a GD-type method whose update rule lives in repro.core;
+these optimizers serve the baselines and the centralized/local-Adam training
+examples. API: ``init(params) -> state``, ``update(grads, state, params, lr)
+-> (new_params, new_state)``. States are pytrees, so they compose with the
+stacked-client layout and pjit sharding unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Sgd:
+    momentum: float = 0.0
+
+    def init(self, params):
+        if self.momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(self, grads, state, params, lr):
+        if self.momentum == 0.0:
+            new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            return new, state
+        vel = jax.tree.map(lambda v, g: self.momentum * v + g, state, grads)
+        new = jax.tree.map(lambda p, v: p - lr * v, params, vel)
+        return new, vel
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return {"m": zeros(), "v": zeros(), "t": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1.0 - self.b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - self.b2 ** t.astype(jnp.float32)
+
+        def upd(p, m, v):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if self.weight_decay:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, m, v)
+        return new, {"m": m, "v": v, "t": t}

@@ -1,0 +1,43 @@
+"""Learning-rate schedules, including WSD (warmup-stable-decay).
+
+WSD is MiniCPM's schedule [arXiv:2404.06395]: linear warmup -> long stable
+plateau -> short (exponential/linear) decay. The minicpm-2b arch config
+selects it via the training driver.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0, min_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * warm * cos
+
+    return f
+
+
+def wsd(lr: float, total_steps: int, *, warmup_frac: float = 0.01,
+        decay_frac: float = 0.1, min_frac: float = 0.01):
+    """Warmup-Stable-Decay: the final `decay_frac` of training decays
+    exponentially from lr to min_frac * lr."""
+    warmup = max(1, int(warmup_frac * total_steps))
+    decay_start = int((1.0 - decay_frac) * total_steps)
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / warmup, 1.0)
+        decay_prog = jnp.clip((step - decay_start) / max(total_steps - decay_start, 1),
+                              0.0, 1.0)
+        decay = jnp.power(min_frac, decay_prog)  # exp decay to min_frac * lr
+        return lr * warm * decay
+
+    return f

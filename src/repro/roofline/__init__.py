@@ -1,0 +1,4 @@
+from repro.roofline.analysis import RooflineReport, analyze_compiled
+from repro.roofline.constants import HBM_BW, ICI_BW, PEAK_FLOPS
+
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "RooflineReport", "analyze_compiled"]

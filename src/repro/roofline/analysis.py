@@ -1,0 +1,84 @@
+"""Three-term roofline assembly (compute / memory / collective).
+
+    compute term    = FLOPs / (chips x 197 TFLOP/s)
+    memory term     = HBM bytes / (chips x 819 GB/s)
+    collective term = collective bytes / (chips x 50 GB/s ICI)
+
+FLOPs and HBM bytes come from the analytic cost model (roofline/flops.py —
+see its docstring for why not cost_analysis), collective bytes from the
+compiled HLO (roofline/hlo_parse.py, loop-multiplier-corrected, ring factor
+2(n-1)/n applied to all-reduce). The dominant term is the bottleneck the
+§Perf loop iterates on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.roofline import constants as C
+from repro.roofline.flops import StepCost
+from repro.roofline.hlo_parse import collective_summary
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    analytic_flops_total: float
+    flops_ratio: float            # MODEL_FLOPS / analytic total FLOPs
+    collective_bytes: int
+    collective_detail: dict
+    memory_per_device_bytes: int  # from compiled.memory_analysis()
+    raw_cost_analysis: dict
+    bottleneck: str = ""
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _ring_factor(kind: str, n: int) -> float:
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind in ("all-gather", "reduce-scatter"):
+        return (n - 1) / n
+    return 1.0
+
+
+def analyze_compiled(*, arch: str, shape: str, mesh_name: str, n_devices: int,
+                     cost: StepCost, hlo_text: str, memory_stats,
+                     raw_cost: dict | None) -> RooflineReport:
+    summary = collective_summary(hlo_text)
+    # link-traffic seconds: bytes already per-module; collectives in the HLO
+    # are per-device-program ops, so their shape bytes are per-device moves.
+    coll_s = 0.0
+    for kind, b in summary["bytes_by_kind"].items():
+        coll_s += b * _ring_factor(kind, n_devices) / C.ICI_BW
+    compute_s = cost.flops_per_device / C.PEAK_FLOPS
+    memory_s = cost.hbm_bytes_per_device / C.HBM_BW
+    analytic_total = cost.flops_per_device * n_devices
+    ratio = (cost.model_flops_total / analytic_total) if analytic_total else 0.0
+    mem_bytes = 0
+    if memory_stats is not None:
+        mem_bytes = int(memory_stats.argument_size_in_bytes
+                        + memory_stats.temp_size_in_bytes
+                        + memory_stats.output_size_in_bytes)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        model_flops=cost.model_flops_total,
+        analytic_flops_total=analytic_total,
+        flops_ratio=ratio,
+        collective_bytes=summary["total_bytes"],
+        collective_detail=summary,
+        memory_per_device_bytes=mem_bytes,
+        raw_cost_analysis={k: float(v) for k, v in (raw_cost or {}).items()
+                           if k in ("flops", "bytes accessed")},
+        bottleneck=max(terms, key=terms.get),
+    )

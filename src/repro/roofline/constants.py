@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants (per chip), per the assignment."""
+
+PEAK_FLOPS = 197e12   # bf16 FLOP/s
+HBM_BW = 819e9        # bytes/s
+ICI_BW = 50e9         # bytes/s per link
+CHIPS_PER_POD = 256
+VMEM_BYTES = 128 * 1024 * 1024  # ~128 MiB v5e vector memory
+HBM_BYTES = 16 * 1024**3

@@ -1,0 +1,23 @@
+from repro.utils.tree import (
+    tree_add,
+    tree_axpy,
+    tree_bytes,
+    tree_client_mean,
+    tree_l2_norm,
+    tree_num_params,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+)
+
+__all__ = [
+    "tree_add",
+    "tree_axpy",
+    "tree_bytes",
+    "tree_client_mean",
+    "tree_l2_norm",
+    "tree_num_params",
+    "tree_scale",
+    "tree_sub",
+    "tree_zeros_like",
+]

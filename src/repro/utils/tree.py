@@ -1,0 +1,56 @@
+"""Pytree arithmetic helpers used across the federated algorithms.
+
+All federated state in this framework is represented as *stacked* pytrees:
+every leaf carries a leading ``clients`` axis, so a mean over clients is a
+``jnp.mean(..., axis=0)`` on every leaf. Under ``pjit`` with the client axis
+sharded over the ``("pod", "data")`` mesh axes, that mean lowers to the single
+cross-client all-reduce that constitutes a FedCET communication round.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a):
+    return jax.tree.map(lambda x: s * x, a)
+
+
+def tree_axpy(s, a, b):
+    """``s * a + b`` leaf-wise."""
+    return jax.tree.map(lambda x, y: s * x + y, a, b)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_client_mean(a, *, keepdims: bool = True):
+    """Mean over the leading clients axis of every leaf.
+
+    With ``keepdims=True`` the result broadcasts back against the stacked
+    tree, which is the shape the parameter-server broadcast would produce.
+    """
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0, keepdims=keepdims), a)
+
+
+def tree_l2_norm(a) -> jax.Array:
+    leaves = jax.tree.leaves(a)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_num_params(a) -> int:
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(a))

@@ -1,0 +1,15 @@
+"""Test-suite configuration.
+
+x64 is enabled process-wide: the convergence tests validate linear
+convergence to the EXACT optimum (errors ~1e-10), which is below float32
+resolution. Model code takes explicit dtypes from its configs, so enabling
+x64 here does not change what the architecture smoke tests exercise.
+
+NOTE: XLA_FLAGS / host-device-count is deliberately NOT set here — the
+multi-pod dry-run runs in its own process (src/repro/launch/dryrun.py) so
+tests and benchmarks see the single real CPU device.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each of the 10 assigned architectures: instantiate the REDUCED variant
+of the same family (2 layers, d_model<=256, <=4 experts), run
+
+  * a forward pass (shape + finiteness),
+  * one full FedCET communication round (tau=2, 2 heterogeneous clients) —
+    the paper's technique applied to the real model pytree,
+  * a prefill + decode step consistency check,
+
+all on CPU. The FULL configs are exercised only via the dry-run
+(ShapeDtypeStruct, no allocation) in src/repro/launch/dryrun.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.core import FedCET, replicate
+from repro.launch.input_specs import make_batch
+from repro.models import build_model
+
+ARCHS = list_archs()
+B, S = 2, 16
+
+
+def _finite(tree) -> bool:
+    return all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(tree)
+               if jnp.issubdtype(x.dtype, jnp.floating))
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for name in ARCHS:
+        cfg = get_config(name).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        out[name] = (cfg, model, params)
+    return out
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_and_finiteness(built, name):
+    cfg, model, params = built[name]
+    batch = make_batch(cfg, B, S, key=1)
+    logits = model.forward(params, batch)
+    extra = cfg.n_modal_tokens if cfg.family == "vlm" else 0
+    assert logits.shape == (B, S + extra, cfg.vocab_size), logits.shape
+    assert _finite(logits), f"{name}: non-finite logits"
+    loss = model.loss(params, batch)
+    assert np.isfinite(float(loss)), f"{name}: non-finite loss"
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_fedcet_round_on_arch(built, name):
+    """One FedCET communication round on the real model pytree: params stay
+    finite, shapes unchanged, and the drift variable d has moved."""
+    cfg, model, params = built[name]
+    tau, n_clients = 2, 2
+    algo = FedCET(alpha=1e-2, c=0.1, tau=tau, n_clients=n_clients)
+    # heterogeneous client batches: different random streams
+    batches = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[jax.tree.map(lambda *ys: jnp.stack(ys),
+                       *[make_batch(cfg, B, S, key=10 * t + c)
+                         for c in range(n_clients)])
+          for t in range(tau)],
+    )
+    grad_fn = jax.grad(model.loss)
+    init_b = jax.tree.map(lambda b: b[0], batches)
+    state = algo.init(grad_fn, params, init_b)
+    state = algo.round(grad_fn, state, batches)
+    assert _finite(state.x), f"{name}: non-finite params after round"
+    assert _finite(state.d), f"{name}: non-finite drift state"
+    ref_shapes = jax.tree.map(lambda a: (n_clients,) + a.shape, params)
+    got_shapes = jax.tree.map(lambda a: a.shape, state.x)
+    assert jax.tree.all(jax.tree.map(lambda a, b: a == b, ref_shapes, got_shapes))
+    d_norm = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(state.d))
+    assert d_norm > 0.0, f"{name}: drift variable never updated"
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_prefill_decode_consistency(built, name):
+    """prefill(tokens[:-1]) + decode(last token) == forward last logits."""
+    cfg, model, params = built[name]
+    batch = make_batch(cfg, B, S, key=3)
+    full = model.forward(params, batch)          # [B, S(+modal), V]
+    prefix = dict(batch)
+    prefix["tokens"] = batch["tokens"][:, :-1]
+    caches = model.init_caches(B, S + (cfg.n_modal_tokens if cfg.family == "vlm" else 0))
+    logits_pre, caches = model.prefill(params, prefix, caches)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre[:, 0]), np.asarray(full[:, -2]),
+        rtol=2e-3, atol=2e-3)
+    logits_dec, _ = model.decode_step(params, batch["tokens"][:, -1:], caches)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0]), np.asarray(full[:, -1]),
+        rtol=2e-3, atol=2e-3)
+
+
+def test_reduced_configs_meet_constraints():
+    for name in ARCHS:
+        cfg = get_config(name).reduced()
+        assert cfg.n_layers <= 2
+        assert cfg.d_model <= 512
+        assert cfg.n_experts <= 4
+
+
+def test_full_configs_match_assignment():
+    """The exact assigned hyperparameters (regression guard)."""
+    spec = {
+        "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+    }
+    for name, (L, d, h, kv, ff, v) in spec.items():
+        cfg = get_config(name)
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == (L, d, h, kv, ff, v), (name, got)
+    assert get_config("zamba2-1.2b").ssm_state == 64
+    assert get_config("mamba2-130m").ssm_state == 128
+    assert get_config("llama4-scout-17b-a16e").n_experts == 16
+    assert get_config("llama4-scout-17b-a16e").experts_per_token == 1
+    assert get_config("granite-moe-3b-a800m").n_experts == 40
+    assert get_config("granite-moe-3b-a800m").experts_per_token == 8
+    assert get_config("gemma-2b").head_dim == 256

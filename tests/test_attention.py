@@ -1,0 +1,134 @@
+"""Attention: blockwise-vs-naive oracle, masks, GQA, cache consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import attention as A
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.key(key), shape, dtype=jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    S=st.integers(3, 96),
+    H=st.sampled_from([1, 2, 4]),
+    D=st.sampled_from([4, 8]),
+    block=st.sampled_from([5, 16, 32]),
+    kind=st.sampled_from(["causal", "sliding", "chunked", "bidirectional"]),
+)
+def test_property_blockwise_matches_naive(seed, S, H, D, block, kind):
+    """Flash-style streaming softmax == materialized softmax, any mask/shape,
+    including blocks that don't divide the sequence."""
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (2, S, H, D))
+    k = jax.random.normal(ks[1], (2, S, H, D))
+    v = jax.random.normal(ks[2], (2, S, H, D))
+    allowed = A.mask_fn(kind, window=7, chunk=9)
+    ref = A.attend_naive(q, k, v, allowed)
+    out = A.attend_blockwise(q, k, v, allowed, block_size=block)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("kind,window,chunk", [
+    ("full", 0, 0), ("sliding", 8, 0), ("chunked", 0, 8)])
+def test_decode_matches_full_forward(kind, window, chunk):
+    """Token-by-token decode through the cache reproduces the full-sequence
+    attention output at every position."""
+    B, S, Hq, Hkv, D, d = 2, 24, 4, 2, 8, 32
+    params = A.init_attention(jax.random.key(0), d, Hq, Hkv, D,
+                              jnp.float32, qk_norm=True)
+    x = _rand(1, B, S, d)
+    full = A.attention(params, x, n_heads=Hq, n_kv_heads=Hkv, head_dim=D,
+                       kind=kind, window=window, chunk=chunk,
+                       force_naive=True)
+    ring = kind == "sliding"
+    cap = window if ring else S
+    cache = A.init_cache(B, cap, Hkv, D, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = A.decode_attention(
+            params, x[:, t:t + 1], cache, n_heads=Hq, n_kv_heads=Hkv,
+            head_dim=D, kind=kind, window=window, chunk=chunk, ring=ring)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_then_decode_matches_forward():
+    """prefill(x[:P]) + decode steps == full attention on x."""
+    B, S, P, Hq, Hkv, D, d = 1, 20, 12, 4, 4, 8, 32
+    params = A.init_attention(jax.random.key(3), d, Hq, Hkv, D, jnp.float32)
+    x = _rand(5, B, S, d)
+    full = A.attention(params, x, n_heads=Hq, n_kv_heads=Hkv, head_dim=D,
+                       kind="full", force_naive=True)
+    cache = A.init_cache(B, S, Hkv, D, jnp.float32)
+    pre, cache = A.prefill_attention(params, x[:, :P], cache=cache,
+                                     n_heads=Hq, n_kv_heads=Hkv, head_dim=D,
+                                     kind="full")
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(full[:, :P]),
+                               rtol=2e-4, atol=2e-4)
+    for t in range(P, S):
+        o, cache = A.decode_attention(params, x[:, t:t + 1], cache,
+                                      n_heads=Hq, n_kv_heads=Hkv, head_dim=D)
+        np.testing.assert_allclose(np.asarray(o[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_causality():
+    """Perturbing a future token never changes past outputs."""
+    B, S, Hq, Hkv, D, d = 1, 16, 2, 1, 8, 16
+    params = A.init_attention(jax.random.key(7), d, Hq, Hkv, D, jnp.float32)
+    x = _rand(8, B, S, d)
+    kw = dict(n_heads=Hq, n_kv_heads=Hkv, head_dim=D, kind="full",
+              force_naive=True)
+    base = A.attention(params, x, **kw)
+    x2 = x.at[:, 10].add(13.0)
+    pert = A.attention(params, x2, **kw)
+    np.testing.assert_allclose(np.asarray(pert[:, :10]),
+                               np.asarray(base[:, :10]), rtol=1e-5, atol=1e-6)
+    assert not np.allclose(np.asarray(pert[:, 10:]), np.asarray(base[:, 10:]))
+
+
+def test_sliding_window_ignores_distant_past():
+    """With window w, changing token t-w (or older) must not affect token t."""
+    B, S, H, D, d, w = 1, 32, 2, 8, 16, 4
+    params = A.init_attention(jax.random.key(9), d, H, H, D, jnp.float32)
+    x = _rand(10, B, S, d)
+    kw = dict(n_heads=H, n_kv_heads=H, head_dim=D, kind="sliding", window=w,
+              force_naive=True)
+    base = A.attention(params, x, **kw)
+    x2 = x.at[:, 5].add(100.0)
+    pert = A.attention(params, x2, **kw)
+    # outputs at positions >= 5 + w see nothing of position 5
+    np.testing.assert_allclose(np.asarray(pert[:, 5 + w:]),
+                               np.asarray(base[:, 5 + w:]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_gqa_equals_repeated_mha():
+    """GQA with kv groups == MHA with explicitly repeated kv projections."""
+    B, S, Hq, Hkv, D, d = 2, 8, 4, 2, 8, 16
+    params = A.init_attention(jax.random.key(11), d, Hq, Hkv, D, jnp.float32)
+    # build an MHA whose wk/wv are the GQA ones repeated per group
+    G = Hq // Hkv
+    wk = params["wk"].reshape(d, Hkv, D)
+    mha = dict(params)
+    mha["wk"] = jnp.repeat(wk, G, axis=1).reshape(d, Hq * D)
+    mha["wv"] = jnp.repeat(params["wv"].reshape(d, Hkv, D), G, axis=1).reshape(d, Hq * D)
+    x = _rand(12, B, S, d)
+    out_gqa = A.attention(params, x, n_heads=Hq, n_kv_heads=Hkv, head_dim=D,
+                          kind="full", force_naive=True)
+    out_mha = A.attention(mha, x, n_heads=Hq, n_kv_heads=Hq, head_dim=D,
+                          kind="full", force_naive=True)
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha),
+                               rtol=1e-5, atol=1e-5)

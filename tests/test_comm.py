@@ -1,0 +1,75 @@
+"""Communication accounting + compression operators (Remark 2 and beyond)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CommMeter, comm_bytes_per_round, quantize_bf16, topk_sparsify
+from repro.core.baselines import FedAvg, FedTrack, Scaffold
+from repro.core.fedcet import FedCET
+
+
+def _mk(algo_cls, **kw):
+    return algo_cls(**kw)
+
+
+def test_remark2_half_communication():
+    fedcet = FedCET(alpha=0.01, c=0.4, tau=2, n_clients=10)
+    scaffold = Scaffold(alpha_l=0.001, tau=2, n_clients=10)
+    fedtrack = FedTrack(alpha=0.001, tau=2, n_clients=10)
+    n = 123_457
+    b_cet = comm_bytes_per_round(fedcet, n, n_clients=10)
+    for other in (scaffold, fedtrack):
+        b = comm_bytes_per_round(other, n, n_clients=10)
+        assert b["total"] == 2 * b_cet["total"]
+    b_avg = comm_bytes_per_round(FedAvg(alpha=0.1, tau=2, n_clients=10), n, n_clients=10)
+    assert b_avg["total"] == b_cet["total"]  # same traffic, but FedAvg drifts
+
+
+def test_comm_meter_accumulates():
+    m = CommMeter(n_params=100, itemsize=4, n_clients=3)
+    m.tick(1, 1)
+    m.tick(2, 2)
+    assert m.rounds == 2
+    assert m.bytes_up == (1 + 2) * 100 * 4 * 3
+    assert m.bytes_down == (1 + 2) * 100 * 4 * 3
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    size=st.integers(4, 300),
+    k_frac=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_topk_sparsify(size, k_frac, seed):
+    """Top-k keeps >= ceil(k*size) largest-magnitude entries, zeros others,
+    and never changes a kept value."""
+    a = jax.random.normal(jax.random.key(seed), (size,))
+    out = np.asarray(topk_sparsify(a, k_frac))
+    a = np.asarray(a)
+    nz = np.nonzero(out)[0]
+    k = max(1, int(round(k_frac * size)))
+    assert len(nz) >= min(k, size - np.sum(a == 0))
+    np.testing.assert_array_equal(out[nz], a[nz])
+    if len(nz) < size:
+        kept_min = np.min(np.abs(a[nz]))
+        dropped = np.setdiff1d(np.arange(size), nz)
+        assert np.all(np.abs(a[dropped]) <= kept_min + 1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), size=st.integers(1, 64))
+def test_property_bf16_quantization_bounded(seed, size):
+    a = jax.random.normal(jax.random.key(seed), (size,)) * 100.0
+    q = np.asarray(quantize_bf16(a))
+    a = np.asarray(a)
+    # bf16 has 8 significand bits -> relative error < 2^-8.
+    np.testing.assert_allclose(q, a, rtol=2**-8, atol=1e-30)
+
+
+def test_topk_shape_and_dtype_preserved():
+    a = jnp.ones((4, 5, 6), dtype=jnp.float32)
+    out = topk_sparsify(a, 0.5)
+    assert out.shape == a.shape and out.dtype == a.dtype

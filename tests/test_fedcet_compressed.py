@@ -1,0 +1,95 @@
+"""FedCET-C (beyond-paper): compressed single-vector uplink + error feedback."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.fedcet_compressed import FedCETCompressed
+from repro.core.lr_search import lr_search
+from repro.core.fedcet import FedCET, max_weight_c
+from repro.core.simulate import simulate_quadratic
+from repro.data.quadratic import make_hetero_hessian_problem, make_quadratic_problem
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_quadratic_problem(0)
+
+
+def _algo(problem, tau=2, **kw):
+    alpha = lr_search(problem.mu, problem.L, tau)
+    return FedCETCompressed(alpha=alpha, c=max_weight_c(problem.mu, alpha),
+                            tau=tau, n_clients=problem.n_clients, **kw)
+
+
+def test_dense_variant_matches_fedcet(problem):
+    """k_frac=1, no quantization == plain FedCET exactly."""
+    a = _algo(problem)
+    alpha = a.alpha
+    base = FedCET(alpha=alpha, c=a.c, tau=2, n_clients=problem.n_clients)
+    r_c = simulate_quadratic(a, problem, rounds=50)
+    r_b = simulate_quadratic(base, problem, rounds=50)
+    np.testing.assert_allclose(np.asarray(r_c.errors), np.asarray(r_b.errors),
+                               rtol=1e-10, atol=1e-12)
+
+
+def test_bf16_quantized_uplink_converges(problem):
+    """bf16-compressed single vector + error feedback: still converges to a
+    near-exact solution (bf16 floor), at half the uplink bytes."""
+    a = _algo(problem, quantize=True)
+    res = simulate_quadratic(a, problem, rounds=600)
+    assert res.final_error < 1e-5, res.final_error
+    assert a.up_frac == 0.5
+
+
+def test_topk_sparsified_uplink_converges(problem):
+    a = _algo(problem, k_frac=0.3)
+    res = simulate_quadratic(a, problem, rounds=2000)
+    assert res.final_error < 1e-6, res.final_error
+    assert a.up_frac == pytest.approx(0.6)
+
+
+def test_topk_hetero_hessians_neighborhood():
+    """Beyond-paper finding: under Hessian heterogeneity, top-k+EF FedCET
+    converges to a SMALL NEIGHBORHOOD of x* (~1e-4 here) rather than
+    exactly — the compression noise interacts with the drift correction.
+    Still ~500x below the no-feedback bias floor (next test)."""
+    p = make_hetero_hessian_problem(7)
+    a = _algo(p, k_frac=0.5)
+    res = simulate_quadratic(a, p, rounds=3000)
+    assert res.final_error < 1e-3, res.final_error
+
+
+def test_error_feedback_required():
+    """Ablation: WITHOUT error feedback, top-k FedCET stalls at a hard bias
+    floor (~0.05); WITH feedback it reaches ~1e-4 on the same problem."""
+    import dataclasses
+
+    problem = make_hetero_hessian_problem(7)
+    a = _algo(problem, k_frac=0.5)
+
+    # monkey-sever the feedback: compress v directly, discard the remainder
+    class NoEF(FedCETCompressed):
+        def _comm_step(self, gf, state, batch):
+            import jax.numpy as jnp
+            from repro.utils.tree import tree_client_mean
+
+            g = gf(state.x, batch)
+            v = self._v(state.x, g, state.d)
+            v_tx = jax.tree.map(self._compress, v)
+            v_bar = tree_client_mean(v_tx)
+            ca = self.c * self.alpha
+            d_next = jax.tree.map(lambda dd, vt, vb: dd + self.c * (vt - vb),
+                                  state.d, v_tx, v_bar)
+            x_next = jax.tree.map(lambda vv, vt, vb: vv - ca * (vt - vb),
+                                  v, v_tx, v_bar)
+            return type(state)(x=x_next, d=d_next, e=state.e, t=state.t + 1)
+
+    no_ef = NoEF(**dataclasses.asdict(a))
+    r_ef = simulate_quadratic(a, problem, rounds=3000)
+    r_no = simulate_quadratic(no_ef, problem, rounds=3000)
+    assert r_ef.final_error < 1e-3
+    # without feedback the sparsification bias leaves a hard floor
+    assert r_no.final_error > 100 * r_ef.final_error

@@ -1,0 +1,68 @@
+"""System-level invariants of the FedCET implementation (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import FedCET, max_weight_c
+from repro.core.simulate import simulate_quadratic
+from repro.data.quadratic import make_hetero_hessian_problem, make_quadratic_problem
+
+jax.config.update("jax_enable_x64", True)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    tau=st.integers(1, 4),
+    rounds=st.integers(1, 30),
+    n_clients=st.integers(2, 8),
+)
+def test_property_drift_variable_is_mean_zero(seed, tau, rounds, n_clients):
+    """Invariant (from d(t+1) = d(t) + c(I - 11^T/N)(...)): the drift
+    variable d sums to zero over clients at EVERY round — the correction is
+    purely redistributive, which is why it never needs transmitting."""
+    p = make_quadratic_problem(seed, n_clients=n_clients, dim=12)
+    algo = FedCET(alpha=0.01, c=0.3, tau=tau, n_clients=n_clients)
+    res = simulate_quadratic(algo, p, rounds=rounds)
+    d_mean = np.asarray(jnp.mean(res.state.d, axis=0))
+    np.testing.assert_allclose(d_mean, 0.0, atol=1e-10)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), rounds=st.integers(5, 50))
+def test_property_consensus_error_bounded_by_state(seed, rounds):
+    """Clients stay in a bounded neighborhood of their mean (no divergence
+    of the consensus error even mid-training)."""
+    p = make_hetero_hessian_problem(seed)
+    from repro.core.lr_search import lr_search
+
+    alpha = lr_search(p.mu, p.L, 2)
+    algo = FedCET(alpha=alpha, c=max_weight_c(p.mu, alpha), tau=2,
+                  n_clients=p.n_clients)
+    res = simulate_quadratic(algo, p, rounds=rounds)
+    x = np.asarray(res.state.x)
+    spread = np.linalg.norm(x - x.mean(0, keepdims=True))
+    assert np.isfinite(spread)
+    assert spread < 10.0 * (1.0 + np.linalg.norm(x.mean(0)))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(0.1, 10.0))
+def test_property_translation_equivariance(seed, scale):
+    """Shifting every measurement by a constant shifts x* and the whole
+    FedCET trajectory by the matching amount (affine equivariance of the
+    update rule) — e(k) curves are identical."""
+    import dataclasses
+
+    p1 = make_quadratic_problem(seed, n_clients=4, dim=8)
+    shift = scale * jnp.ones((8,), p1.b.dtype)
+    p2 = dataclasses.replace(p1, b=p1.b + 2.0 * shift[None, None, :])
+    algo = FedCET(alpha=0.02, c=0.3, tau=2, n_clients=4)
+    r1 = simulate_quadratic(algo, p1, rounds=30)
+    r2 = simulate_quadratic(algo, p2, rounds=30,
+                            x0=jnp.zeros((8,), p1.b.dtype) + shift)
+    np.testing.assert_allclose(np.asarray(r1.errors), np.asarray(r2.errors),
+                               rtol=1e-8, atol=1e-9)

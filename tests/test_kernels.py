@@ -1,0 +1,178 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+
+SHAPES = [(7,), (1024,), (1025,), (256, 1024), (3, 5, 17), (2048, 1024),
+          (100_003,)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fedcet_v_sweep(shape, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    x, g, d = (jax.random.normal(k, shape).astype(dtype) for k in ks)
+    out = ops.fedcet_v(x, g, d, 0.0123)
+    want = ref.fedcet_v(x, g, d, 0.0123)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+    assert out.shape == shape and out.dtype == dtype
+
+
+@pytest.mark.parametrize("shape", SHAPES[:5])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fedcet_comm_sweep(shape, dtype):
+    ks = jax.random.split(jax.random.key(1), 3)
+    d, v, vb = (jax.random.normal(k, shape).astype(dtype) for k in ks)
+    d_new, x_new = ops.fedcet_comm(d, v, vb, 0.31, 0.0123)
+    d_want, x_want = ref.fedcet_comm(d, v, vb, 0.31, 0.0123)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(d_new, np.float32),
+                               np.asarray(d_want, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(x_new, np.float32),
+                               np.asarray(x_want, np.float32), rtol=tol, atol=tol)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    alpha=st.floats(1e-5, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_fedcet_v_any_length(n, alpha, seed):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    x, g, d = (jax.random.normal(k, (n,)) for k in ks)
+    out = ops.fedcet_v(x, g, d, alpha)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.fedcet_v(x, g, d, alpha)),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [
+    # (B, Nc, Lc, H, P, N)
+    (1, 1, 8, 1, 4, 4),
+    (2, 3, 16, 2, 8, 8),
+    (1, 2, 128, 3, 64, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_intra_kernel_sweep(shape, dtype):
+    """Pallas SSD intra-chunk kernel vs jnp oracle across shapes/dtypes."""
+    B, Nc, Lc, H, P, N = shape
+    ks = jax.random.split(jax.random.key(3), 5)
+    x = jax.random.normal(ks[0], (B, Nc, Lc, H, P)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, Nc, Lc, H))).astype(dtype)
+    a = -jax.nn.softplus(jax.random.normal(ks[2], (B, Nc, Lc, H)))
+    a_cs = jnp.cumsum(a, axis=2).astype(dtype)
+    Bm = jax.random.normal(ks[3], (B, Nc, Lc, N)).astype(dtype)
+    Cm = jax.random.normal(ks[4], (B, Nc, Lc, N)).astype(dtype)
+    out = ops.ssd_intra(x, dt, a_cs, Bm, Cm)
+    want = ref.ssd_intra(x, dt, a_cs, Bm, Cm)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_ssd_intra_matches_mamba_chunked_path():
+    """The kernel's intra-chunk term equals the term inside
+    models/mamba2.ssd_chunked (cross-module consistency)."""
+    from repro.models.mamba2 import ssd_chunked, ssd_naive
+
+    ks = jax.random.split(jax.random.key(5), 5)
+    B, S, H, P, N, Lc = 1, 32, 2, 8, 8, 8
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype=jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    # kernel path: build chunked tensors exactly as ssd_chunked does
+    Nc = S // Lc
+    xf = x.reshape(B, Nc, Lc, H, P)
+    dtf = dt.reshape(B, Nc, Lc, H)
+    a_cs = jnp.cumsum(dtf * A, axis=2)
+    Bf = Bm.reshape(B, Nc, Lc, N)
+    Cf = Cm.reshape(B, Nc, Lc, N)
+    y_kernel = ops.ssd_intra(xf, dtf, a_cs, Bf, Cf).reshape(B, S, H, P)
+    # reference: full chunked minus inter-chunk contribution == intra term.
+    y_full, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk=Lc)
+    # recompute inter term via naive state carried between chunks
+    y_naive_first_chunk, _ = ssd_naive(x[:, :Lc], dt[:, :Lc], A,
+                                       Bm[:, :Lc], Cm[:, :Lc])
+    # for the FIRST chunk there is no inter-chunk term: kernel == full SSD
+    np.testing.assert_allclose(np.asarray(y_kernel[:, :Lc]),
+                               np.asarray(y_full[:, :Lc]), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y_kernel[:, :Lc]),
+                               np.asarray(y_naive_first_chunk),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    S=st.integers(4, 80),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2, 4]),
+    D=st.sampled_from([4, 8]),
+    blk=st.sampled_from([8, 16, 64]),
+    kind=st.sampled_from(["causal", "sliding", "chunked", "bidirectional"]),
+)
+def test_property_flash_attention_matches_naive(seed, S, hkv, g, D, blk, kind):
+    """Pallas flash kernel == naive attention for any shape/mask/blocking,
+    including blocks that don't divide the sequence."""
+    from repro.models import attention as A
+
+    ks = jax.random.split(jax.random.key(seed), 3)
+    Hq = hkv * g
+    q = jax.random.normal(ks[0], (2, S, Hq, D), dtype=jnp.float32)
+    k = jax.random.normal(ks[1], (2, S, hkv, D), dtype=jnp.float32)
+    v = jax.random.normal(ks[2], (2, S, hkv, D), dtype=jnp.float32)
+    kr, vr = (jnp.repeat(t, g, axis=2) for t in (k, v))
+    ref_out = A.attend_naive(q, kr, vr, A.mask_fn(kind, window=5, chunk=7))
+    out = ops.flash_attention(q, k, v, kind=kind, window=5, chunk=7,
+                              q_blk=blk, kv_blk=blk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    from repro.models import attention as A
+
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 64, 8, 16)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 64, 2, 16)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 64, 2, 16)).astype(jnp.bfloat16)
+    kr, vr = (jnp.repeat(t, 4, axis=2) for t in (k, v))
+    ref_out = A.attend_naive(q.astype(jnp.float32), kr.astype(jnp.float32),
+                             vr.astype(jnp.float32), A.mask_fn("causal"))
+    out = ops.flash_attention(q, k, v, q_blk=32, kv_blk=32)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref_out), rtol=5e-2, atol=5e-2)
+    assert out.dtype == jnp.bfloat16
+
+
+def test_kernel_in_fedcet_algorithm():
+    """FedCET with use_fused_kernel=True reproduces the pure-jnp trajectory
+    on the paper's quadratic problem."""
+    import dataclasses
+
+    from repro.core import FedCET
+    from repro.core.simulate import simulate_quadratic
+    from repro.data.quadratic import make_quadratic_problem
+
+    p = make_quadratic_problem(2, n_clients=4, dim=32)
+    base = FedCET(alpha=0.01, c=0.3, tau=2, n_clients=4)
+    fused = dataclasses.replace(base, use_fused_kernel=True)
+    r_base = simulate_quadratic(base, p, rounds=5)
+    r_fused = simulate_quadratic(fused, p, rounds=5)
+    np.testing.assert_allclose(np.asarray(r_fused.errors),
+                               np.asarray(r_base.errors), rtol=1e-6, atol=1e-9)

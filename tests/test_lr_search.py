@@ -1,0 +1,67 @@
+"""Algorithm 1 (learning-rate search) and the Remark-1 conditions."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.lr_search import (
+    alpha0_upper_bound,
+    contraction_factors,
+    lr_search,
+    lr_search_validated,
+    remark1_inequalities,
+)
+
+
+def test_paper_setting_values():
+    """mu = L = 4, tau = 2 (the paper's experiment): check the bound
+    arithmetic by hand. (1+2/tau)^(2tau-2) = 4; bound = min(1/16, 1/64,
+    1/160) = 1/160."""
+    b = alpha0_upper_bound(4.0, 4.0, 2)
+    assert b == pytest.approx(1.0 / 160.0)
+    alpha = lr_search(4.0, 4.0, 2)
+    assert alpha > b  # the search grows past the conservative initial bound
+    assert alpha < 2.0 / (2 * 4.0)  # and stays below 2/(tau L)
+
+
+def test_search_output_satisfies_predicates():
+    from repro.core.lr_search import _alg1_predicates
+
+    for (mu, L, tau) in [(4.0, 4.0, 2), (1.0, 10.0, 4), (0.5, 2.0, 8), (2.0, 2.0, 1)]:
+        alpha = lr_search(mu, L, tau)
+        p1, p2 = _alg1_predicates(alpha, mu, L, tau)
+        assert p1 > 0 and p2 > 0, (mu, L, tau, alpha, p1, p2)
+
+
+def test_validated_search_satisfies_remark1():
+    for (mu, L, tau) in [(4.0, 4.0, 2), (1.0, 10.0, 4), (0.5, 2.0, 8)]:
+        alpha = lr_search_validated(mu, L, tau)
+        d1, d2 = remark1_inequalities(alpha, mu, L, tau)
+        assert d1 > 0 and d2 > 0, (mu, L, tau, alpha)
+        cf = contraction_factors(alpha, mu, L, tau, n_clients=10)
+        assert cf.converges, cf
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    mu=st.floats(0.1, 5.0),
+    kappa=st.floats(1.0, 20.0),
+    tau=st.integers(1, 8),
+)
+def test_property_search_terminates_and_contracts(mu, kappa, tau):
+    """Property (hypothesis): for any conditioning in range, Algorithm 1
+    terminates with an alpha whose Corollary-1 factors contract."""
+    L = mu * kappa
+    alpha = lr_search(mu, L, tau, h_frac=1e-2)
+    assert 0 < alpha < 2.0 / (tau * L)
+    cf = contraction_factors(alpha, mu, L, tau, n_clients=5)
+    assert 0.0 < cf.rho < 1.0, (mu, L, tau, alpha, cf)
+
+
+def test_finer_grid_no_smaller_alpha():
+    """Remark 1: a finer search step h can only find a larger (or equal)
+    feasible learning rate."""
+    coarse = lr_search(4.0, 4.0, 2, h_frac=1e-2)
+    fine = lr_search(4.0, 4.0, 2, h_frac=1e-4)
+    assert fine >= coarse - 1e-12

@@ -1,0 +1,68 @@
+"""Partial client participation (beyond-paper extension)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fedcet import FedCET, max_weight_c
+from repro.core.lr_search import lr_search
+from repro.core.participation import FedCETPartial, participation_mask
+from repro.core.simulate import simulate_quadratic
+from repro.data.quadratic import make_quadratic_problem
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_quadratic_problem(0)
+
+
+def _algo(problem, rate, tau=2):
+    alpha = lr_search(problem.mu, problem.L, tau)
+    return FedCETPartial(alpha=alpha, c=max_weight_c(problem.mu, alpha),
+                         tau=tau, n_clients=problem.n_clients,
+                         participation=rate)
+
+
+def test_mask_never_empty():
+    for s in range(50):
+        m = participation_mask(jax.random.key(s), 10, 0.05)
+        assert bool(jnp.any(m))
+
+
+def test_full_participation_matches_fedcet(problem):
+    a = _algo(problem, 1.0)
+    base = FedCET(alpha=a.alpha, c=a.c, tau=2, n_clients=problem.n_clients)
+    r_a = simulate_quadratic(a, problem, rounds=40)
+    r_b = simulate_quadratic(base, problem, rounds=40)
+    np.testing.assert_allclose(np.asarray(r_a.errors), np.asarray(r_b.errors),
+                               rtol=1e-10, atol=1e-12)
+
+
+@pytest.mark.parametrize("rate", [0.8, 0.5])
+def test_partial_participation_still_exact(problem, rate):
+    """Measured (not theory-claimed): with >= 50% sampling the iterates
+    still converge to the exact optimum, just in more rounds."""
+    a = _algo(problem, rate)
+    res = simulate_quadratic(a, problem, rounds=int(1200 / rate))
+    assert res.final_error < 1e-8, (rate, res.final_error)
+
+
+def test_drift_sum_invariant_under_sampling(problem):
+    """sum_i d_i = 0 holds at every round even with random absences."""
+    a = _algo(problem, 0.6)
+    res = simulate_quadratic(a, problem, rounds=37)
+    d_mean = np.asarray(jnp.mean(res.state.d, axis=0))
+    np.testing.assert_allclose(d_mean, 0.0, atol=1e-10)
+
+
+def test_lower_participation_is_slower_but_unbiased(problem):
+    errs = {}
+    for rate in (1.0, 0.5):
+        res = simulate_quadratic(_algo(problem, rate), problem, rounds=250)
+        errs[rate] = float(res.final_error)
+    assert errs[1.0] < errs[0.5]          # sampling costs rounds...
+    res_long = simulate_quadratic(_algo(problem, 0.5), problem, rounds=3000)
+    assert float(res_long.final_error) < 1e-10   # ...but not exactness

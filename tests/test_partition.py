@@ -1,0 +1,119 @@
+"""Partitioning rules + a small-mesh end-to-end lowering test.
+
+The big-mesh dry-run lives in its own process (it forces 512 host devices);
+here we check the PartitionSpec rule table directly, and run one miniature
+lowering on a 4-device subprocess mesh to catch rule/shape regressions
+inside the normal pytest run.
+"""
+
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.partition import _base_spec, param_pspec
+
+
+class L:  # tiny ShapeDtypeStruct stand-in
+    def __init__(self, *shape):
+        self.shape = shape
+        self.ndim = len(shape)
+
+
+TP = 16
+
+
+def test_attention_projection_rules():
+    assert _base_spec(("layers", "attn", "wq"), (6144, 6144), TP) == (None, "model")
+    assert _base_spec(("layers", "attn", "wo"), (6144, 6144), TP) == ("model", None)
+    assert _base_spec(("layers", "attn", "wk"), (2048, 256), TP) == (None, "model")
+
+
+def test_moe_rules_divisible_vs_not():
+    # llama4: 16 experts over a 16-way model axis -> expert parallel
+    assert _base_spec(("layers", "moe", "up"), (16, 5120, 8192), TP) == ("model", None, None)
+    # granite: 40 experts don't divide 16 -> shard the ffn dim instead
+    assert _base_spec(("layers", "moe", "up"), (40, 1536, 512), TP) == (None, None, "model")
+    assert _base_spec(("layers", "moe", "down"), (40, 512, 1536), TP) == (None, "model", None)
+    # shared expert inside the moe dict follows dense rules
+    assert _base_spec(("layers", "moe", "shared", "up"), (5120, 8192), TP) == (None, "model")
+
+
+def test_embed_vocab_sharding_and_odd_vocab():
+    assert _base_spec(("embed",), (92544, 6144), TP) == ("model", None)
+    # odd vocab (49155) is not sharded
+    assert _base_spec(("embed",), (49155, 1536), TP) == (None, None)
+
+
+def test_norms_replicated():
+    assert _base_spec(("layers", "ln1", "weight"), (6144,), TP) == ()
+
+
+def test_stacked_and_client_axes_padding():
+    # federated state leaf: [clients, L, d_in, d_out]
+    spec = param_pspec(("layers", "attn", "wq"), L(16, 48, 6144, 6144), TP,
+                       client_axes=("pod", "data"))
+    assert spec == P(("pod", "data"), None, None, "model")
+    spec = param_pspec(("layers", "mlp", "up"), L(48, 2048, 6144), TP)
+    assert spec == P(None, None, "model")
+
+
+def test_fsdp_extra_axis():
+    spec = param_pspec(("layers", "attn", "wq"), L(4, 48, 5120, 5120), TP,
+                       client_axes=("data",), extra_axis="fsdp", extra_size=4)
+    assert spec == P(("data",), None, "fsdp", "model")
+    # 1-d leaves unaffected
+    spec = param_pspec(("layers", "ln1", "weight"), L(48, 5120), TP,
+                       extra_axis="fsdp", extra_size=4)
+    assert spec == P(None, None)
+
+
+SMALL_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh
+from repro.launch.train import make_plan, lower_train_step, TrainPlan
+from repro.launch import serve
+import dataclasses
+from repro.configs import get_config
+from repro.configs.base import INPUT_SHAPES, ShapeConfig
+
+dev = np.asarray(jax.devices()).reshape(2, 4)
+mesh = Mesh(dev, ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+
+# miniature shapes so the 8-device CPU compile is fast
+INPUT_SHAPES["train_4k"] = ShapeConfig("train_4k", 64, 4, "train")
+INPUT_SHAPES["decode_32k"] = ShapeConfig("decode_32k", 64, 4, "decode")
+
+from repro.configs import registry
+import repro.configs as C
+cfg = get_config("qwen3-1.7b").reduced()
+reg = registry()
+reg["qwen3-1.7b"] = dataclasses.replace(cfg, name="qwen3-1.7b")
+
+plan = make_plan("qwen3-1.7b", mesh)
+compiled = lower_train_step(plan).compile()
+assert compiled.memory_analysis().temp_size_in_bytes > 0
+print("TRAIN_OK")
+
+lowered = serve.lower_decode("qwen3-1.7b", mesh, shape_name="decode_32k")
+lowered.compile()
+print("DECODE_OK")
+"""
+
+
+def test_small_mesh_lowering_subprocess():
+    """End-to-end pjit lowering on a 2x4 fake-device mesh (own process so the
+    device-count flag doesn't leak into this test session)."""
+    res = subprocess.run(
+        [sys.executable, "-c", SMALL_MESH_SCRIPT],
+        capture_output=True, text=True, timeout=420,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=__file__.rsplit("/tests/", 1)[0],
+    )
+    assert "TRAIN_OK" in res.stdout, res.stderr[-2000:]
+    assert "DECODE_OK" in res.stdout, res.stderr[-2000:]

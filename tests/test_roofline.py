@@ -1,0 +1,83 @@
+"""Roofline machinery: HLO collective parsing (incl. loop multipliers) and
+the analytic cost model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.roofline.flops import cost_for, param_counts
+from repro.roofline.hlo_parse import collective_summary, parse_collectives, shape_bytes
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[2,3]") == 24
+    assert shape_bytes("bf16[8]{0}") == 16
+    assert shape_bytes("(f32[4], bf16[4])") == 24
+    assert shape_bytes("s32[]") == 4  # scalar: empty dims -> 1 element
+    assert shape_bytes("pred[]") == 1
+
+
+def test_parse_collectives_from_synthetic_hlo():
+    hlo = """
+HloModule test
+
+%cond_comp (x: (s32[])) -> pred[] {
+  %c = s32[] constant(7)
+  ROOT %cmp = pred[] compare(%gte, %c), direction=LT
+}
+
+%body_comp (x: (s32[])) -> (s32[]) {
+  %ar = f32[16,128]{1,0} all-reduce(%p), replica_groups={}
+  ROOT %t = (s32[]) tuple(%i)
+}
+
+ENTRY %main (p: f32[16,128]) -> f32[16,128] {
+  %w = (s32[]) while(%init), condition=%cond_comp, body=%body_comp
+  %ag = f32[32,128]{1,0} all-gather(%p), dimensions={0}
+  ROOT %r = f32[16,128] get-tuple-element(%w)
+}
+"""
+    ops = parse_collectives(hlo)
+    kinds = {o.kind: o for o in ops}
+    assert kinds["all-gather"].multiplier == 1
+    assert kinds["all-reduce"].multiplier == 7  # inside the while body
+    s = collective_summary(hlo)
+    assert s["bytes_by_kind"]["all-reduce"] == 7 * 16 * 128 * 4
+    assert s["bytes_by_kind"]["all-gather"] == 32 * 128 * 4
+
+
+def test_param_counts_dense_matches_manual():
+    cfg = get_config("gemma-2b")
+    total, active = param_counts(cfg)
+    assert total == active
+    # gemma-2b ~ 2.5B params (tied embeddings: one 256000 x 2048 table)
+    assert 2.0e9 < total < 3.2e9, total
+
+
+def test_param_counts_moe_active_fraction():
+    cfg = get_config("llama4-scout-17b-a16e")
+    total, active = param_counts(cfg)
+    assert 90e9 < total < 120e9, total      # Scout ~109B total
+    assert 14e9 < active < 25e9, active     # ~17B active (top-1 + shared)
+
+
+def test_cost_model_orders_of_magnitude():
+    cfg = get_config("internlm2-20b")
+    c_train = cost_for(cfg, INPUT_SHAPES["train_4k"], n_devices=256)
+    c_dec = cost_for(cfg, INPUT_SHAPES["decode_32k"], n_devices=256)
+    # 6ND for 20B x 1M tokens x tau=2 ~ 2.5e17
+    assert 1e17 < c_train.model_flops_total < 1e18
+    # decode: 2*N*B ~ 2*20e9*128 ~ 5e12 global
+    assert 1e12 < c_dec.model_flops_total < 1e13
+    # decode has far lower arithmetic intensity than training
+    train_int = c_train.flops_per_device / c_train.hbm_bytes_per_device
+    dec_int = c_dec.flops_per_device / c_dec.hbm_bytes_per_device
+    assert dec_int * 5 < train_int, (dec_int, train_int)
+
+
+def test_ssm_decode_cost_has_no_kv_term():
+    cfg = get_config("mamba2-130m")
+    c = cost_for(cfg, INPUT_SHAPES["long_500k"], n_devices=256)
+    # state cache is O(1): far below even 1 GB of reads
+    assert c.detail["cache_read_bytes"] < 1e9

@@ -1,0 +1,68 @@
+"""FedTrainer: orchestration, eval metrics, checkpoint/resume determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import FedCET
+from repro.data.synthetic import make_hetero_lm_dataset
+from repro.fed import FedTrainer, TrainerConfig
+from repro.models import build_model
+
+
+def _setup(tmp=None, rounds=6, ckpt_every=0):
+    cfg = get_config("fedlm-100m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    n_clients, tau, B, S = 3, 2, 2, 32
+    algo = FedCET(alpha=3e-3, c=0.05, tau=tau, n_clients=n_clients)
+    ds = make_hetero_lm_dataset(cfg.vocab_size, n_clients, S, B, seed=1)
+    batches_for = lambda r: {"tokens": ds.sample_round(r, tau)}
+    tc = TrainerConfig(rounds=rounds, eval_every=2, ckpt_every=ckpt_every,
+                       ckpt_dir=tmp, log_csv=None)
+    trainer = FedTrainer(algo, model.loss, tc)
+    state = trainer.init_state(params, jax.tree.map(lambda b: b[0],
+                                                    batches_for(0)))
+    return trainer, state, batches_for
+
+
+def test_training_reduces_loss_and_logs():
+    trainer, state, batches_for = _setup(rounds=20)
+    # fixed held-out batch so the eval series is comparable across rounds
+    eval_b = batches_for(10_001)
+    state = trainer.fit(state, batches_for, eval_batch_for=lambda r: eval_b)
+    assert trainer.history, "eval rows must be recorded"
+    losses = [h["loss_global"] for h in trainer.history]
+    assert losses[-1] < losses[0]
+    for h in trainer.history:
+        assert np.isfinite(h["loss_global"])
+        assert np.isfinite(h["heterogeneity_gap"])
+        assert h["comm_bytes"] > 0
+
+
+def test_checkpoint_resume_is_deterministic(tmp_path):
+    d = str(tmp_path / "ck")
+    # run 1: 6 rounds straight
+    trainer, state, batches_for = _setup(rounds=6)
+    final_a = trainer.fit(state, batches_for)
+    # run 2: 3 rounds + checkpoint, then resume for the remaining 3
+    trainer_b, state_b, _ = _setup(tmp=d, rounds=3, ckpt_every=3)
+    mid = trainer_b.fit(state_b, batches_for)
+    trainer_c, state_c, _ = _setup(tmp=d, rounds=6, ckpt_every=0)
+    resumed, start = trainer_c.maybe_resume(state_c)
+    assert start == 3
+    final_b = trainer_c.fit(resumed, batches_for, start_round=start)
+    for a, b in zip(jax.tree.leaves(final_a.x), jax.tree.leaves(final_b.x)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_heterogeneity_gap_positive_on_noniid():
+    """On non-IID shards, mean local loss at client optima-drifted params
+    should be <= global-model loss on own shard... the gap is finite and
+    the metric plumbing works."""
+    trainer, state, batches_for = _setup(rounds=4)
+    state = trainer.fit(state, batches_for)
+    gaps = [h["heterogeneity_gap"] for h in trainer.history]
+    assert all(np.isfinite(g) for g in gaps)
