@@ -10,7 +10,7 @@ from repro.roofline.flops import param_counts
 
 
 def run(csv_rows=None, n_clients: int = 16):
-    from repro.core import FedCETCompressed
+    from repro.core import FedCETCompressed, with_compression
 
     algos = {
         "fedcet": FedCET(alpha=1e-3, c=0.05, tau=2, n_clients=n_clients),
@@ -21,15 +21,17 @@ def run(csv_rows=None, n_clients: int = 16):
         # beyond-paper: compressed single-vector uplink with error feedback
         "fedcet_c_bf16": FedCETCompressed(alpha=1e-3, c=0.05, tau=2,
                                           n_clients=n_clients, quantize=True),
+        # the generic engine transform composes onto any algorithm
+        "fedcet_c_top30": with_compression(
+            FedCET(alpha=1e-3, c=0.05, tau=2, n_clients=n_clients), k_frac=0.3),
     }
     out = {}
     for arch in ASSIGNED:
         n, _ = param_counts(get_config(arch))
         for name, algo in algos.items():
             b = comm_bytes_per_round(algo, n, itemsize=2, n_clients=n_clients)
-            # uplink compression fractions
-            frac = {"fedlin_k0.1": 0.2, "fedcet_c_bf16": 0.5}.get(name, 1.0)
-            total = int(b["up"] * frac + b["down"])
+            # uplink compression fraction, declared by the algorithm itself
+            total = int(b["up"] * algo.up_frac + b["down"])
             out[(arch, name)] = total
             if csv_rows is not None:
                 csv_rows.append((f"comm/{arch}/{name}", 0.0,

@@ -1,6 +1,8 @@
 """Production-style federated run: FedTrainer + compressed FedCET +
-partial participation + checkpoint/resume — the framework's beyond-paper
-features composed.
+partial participation + checkpoint/resume — the engine's message
+transforms composed onto one algorithm (previously impossible: the seed
+had separate FedCETCompressed and FedCETPartial forks that could not be
+combined).
 
     PYTHONPATH=src python examples/production_fed.py --rounds 60
 """
@@ -10,7 +12,7 @@ import argparse
 import jax
 
 from repro.configs import get_config
-from repro.core.fedcet_compressed import FedCETCompressed
+from repro.core import FedCET, with_compression, with_participation
 from repro.data.synthetic import make_hetero_lm_dataset
 from repro.fed import FedTrainer, TrainerConfig
 from repro.models import build_model
@@ -22,6 +24,8 @@ def main():
     ap.add_argument("--rounds", type=int, default=60)
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--tau", type=int, default=2)
+    ap.add_argument("--participation", type=float, default=0.75,
+                    help="per-round client sampling rate (1.0 = everyone)")
     ap.add_argument("--ckpt-dir", default="results/prod_fed_ckpt")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
@@ -37,12 +41,15 @@ def main():
     batches_for = lambda r: {"tokens": ds.sample_round(r, args.tau)}
     eval_b = batches_for(999_999)
 
-    algo = FedCETCompressed(alpha=3e-3, c=0.05, tau=args.tau,
-                            n_clients=args.clients, quantize=True)
+    # bf16-compressed uplink x sampled clients, composed onto plain FedCET;
+    # the trainer meters bytes through the transform-aware algo.up_frac.
+    algo = with_participation(
+        with_compression(FedCET(alpha=3e-3, c=0.05, tau=args.tau,
+                                n_clients=args.clients), quantize=True),
+        args.participation)
     trainer = FedTrainer(algo, model.loss, TrainerConfig(
         rounds=args.rounds, eval_every=10, ckpt_every=20,
-        ckpt_dir=args.ckpt_dir, log_csv="results/prod_fed_metrics.csv",
-        itemsize=2))  # bf16-compressed uplink
+        ckpt_dir=args.ckpt_dir, log_csv="results/prod_fed_metrics.csv"))
 
     state = trainer.init_state(params, jax.tree.map(lambda b: b[0],
                                                     batches_for(0)))
@@ -57,7 +64,8 @@ def main():
                     f"comm {row['comm_bytes'] / 1e6:8.2f} MB"))
     first, last = trainer.history[0], trainer.history[-1]
     print(f"\nglobal loss {first['loss_global']:.4f} -> {last['loss_global']:.4f}"
-          f"  ({last['comm_bytes'] / 1e6:.1f} MB total, bf16-compressed uplink)")
+          f"  ({last['comm_bytes'] / 1e6:.1f} MB total, bf16 uplink, "
+          f"{args.participation:.0%} participation)")
 
 
 if __name__ == "__main__":

@@ -38,8 +38,18 @@ def load_pytree(path: str, like):
     with np.load(path) as z:
         n = sum(1 for k in z.files if k.startswith("leaf_"))
         leaves = [z[f"leaf_{i}"] for i in range(n)]
-    _, treedef = _flatten(like)
+    ref_leaves, treedef = _flatten(like)
     assert treedef.num_leaves == len(leaves), (treedef.num_leaves, len(leaves))
+    # Leaf count alone cannot detect a reordered state layout (e.g. a
+    # checkpoint written by an older state structure) — that would restore
+    # leaves transposed. Fail loudly on any shape mismatch instead.
+    for i, (got, ref) in enumerate(zip(leaves, ref_leaves)):
+        if tuple(got.shape) != tuple(np.shape(ref)):
+            raise ValueError(
+                f"checkpoint {path!r} is incompatible with the requested "
+                f"state layout: leaf {i} has shape {tuple(got.shape)}, "
+                f"expected {tuple(np.shape(ref))} (was it written by an "
+                "older algorithm-state structure?)")
     return jax.tree.unflatten(treedef, leaves)
 
 

@@ -1,8 +1,21 @@
-"""Core: the paper's contribution (FedCET) and its comparison baselines."""
+"""Core: the paper's contribution (FedCET), its comparison baselines, and
+the unified round engine + message transforms they all run on."""
 
 from repro.core.api import FederatedAlgorithm, comm_bytes_per_round, replicate, vmap_grads
 from repro.core.baselines import FedAvg, FedLin, FedTrack, Scaffold
 from repro.core.comm import CommMeter, quantize_bf16, topk_sparsify
+from repro.core.engine import (
+    ClientSampling,
+    EngineState,
+    ErrorFeedbackCompression,
+    RoundEngine,
+    make_round_runner,
+    masked_client_mean,
+    participation_mask,
+    run_rounds,
+    with_compression,
+    with_participation,
+)
 from repro.core.fedcet import FedCET, FedCETLiteral, max_weight_c
 from repro.core.fedcet_compressed import FedCETCompressed
 from repro.core.participation import FedCETPartial
@@ -15,6 +28,10 @@ from repro.core.lr_search import (
 )
 
 __all__ = [
+    "ClientSampling",
+    "CommMeter",
+    "EngineState",
+    "ErrorFeedbackCompression",
     "FedAvg",
     "FedCET",
     "FedCETCompressed",
@@ -23,17 +40,23 @@ __all__ = [
     "FedLin",
     "FedTrack",
     "FederatedAlgorithm",
-    "CommMeter",
+    "RoundEngine",
     "Scaffold",
     "alpha0_upper_bound",
     "comm_bytes_per_round",
     "contraction_factors",
     "lr_search",
     "lr_search_validated",
+    "make_round_runner",
+    "masked_client_mean",
     "max_weight_c",
+    "participation_mask",
     "quantize_bf16",
     "replicate",
     "remark1_inequalities",
+    "run_rounds",
     "topk_sparsify",
     "vmap_grads",
+    "with_compression",
+    "with_participation",
 ]

@@ -1,23 +1,37 @@
-"""Federated-algorithm API.
+"""Federated-algorithm API: the consumer-facing protocol.
 
 Every algorithm in this framework (FedCET and the baselines it is compared
-against in the paper: FedAvg, SCAFFOLD, FedTrack, FedLin) implements the same
+against in the paper: FedAvg, SCAFFOLD, FedTrack, FedLin) presents the same
 functional interface so drivers, benchmarks and the distributed launcher can
 swap them via config:
 
-* state is a *stacked* pytree — every leaf has a leading ``clients`` axis;
-* ``init(grad_fn, x0)`` builds per-client state from a single set of initial
-  parameters (replicated, then algorithm-specific warm-up);
+* state is a *stacked* pytree — every per-client leaf has a leading
+  ``clients`` axis (plus a scalar step counter ``t``);
+* ``init(grad_fn, x0, init_batch)`` builds per-client state from a single
+  set of initial parameters (replicated, then algorithm-specific warm-up);
 * ``round(grad_fn, state, batches)`` runs one *communication round*:
   ``tau`` local gradient steps plus exactly one aggregation. ``batches`` is a
   pytree whose leaves have leading axes ``[tau, clients, ...]`` (full-batch
   callers simply broadcast the same batch ``tau`` times);
 * communication cost is exposed *declaratively* via ``vectors_up`` /
   ``vectors_down`` (number of n-dimensional vectors moved per client per
-  round), so the benchmark harness can account bytes without tracing.
+  round) and the transform-aware ``up_frac``, so the benchmark harness can
+  account bytes without tracing.
+
+Algorithms do NOT hand-roll ``init``/``round``: they are slim specs —
+``init_warmup`` / ``local_step`` / ``message`` / ``server_aggregate`` (and
+optionally ``begin_round``) — on top of :class:`repro.core.engine.RoundEngine`,
+which owns the round structure once: batch slicing, the ``vmap_grads`` lift,
+the ``lax.scan`` over the tau-1 local steps, the single aggregating step,
+message transforms (``with_compression``) and client sampling
+(``with_participation``). See engine.py's module docstring and
+ARCHITECTURE.md for the decomposition and the transform-composition rules.
+Multi-round execution likewise goes through one shared scan-based driver,
+``engine.run_rounds``, consumed by ``core/simulate.py``, ``fed/trainer.py``
+and ``launch/train.py`` alike.
 
 ``grad_fn(params, batch) -> grads`` takes a SINGLE client's parameters; the
-framework vmaps it over the client axis. Under ``pjit`` the vmapped axis is
+engine vmaps it over the client axis. Under ``pjit`` the vmapped axis is
 sharded over the client mesh axes, and the aggregation's ``tree_client_mean``
 lowers to the only collective that crosses the pod boundary.
 """

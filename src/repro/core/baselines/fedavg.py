@@ -1,10 +1,13 @@
-"""FedAvg [4] — the canonical federated learning baseline.
+"""FedAvg [4] — the canonical federated learning baseline, as an engine spec.
 
 tau local SGD steps per client, then the server averages the models. One
 n-dimensional vector up + one down per round — same communication as FedCET —
 but under heterogeneous data it exhibits *client drift*: with a constant
 learning rate the iterates stall at a nonzero distance from x*
 (the motivating failure FedCET fixes; validated in tests/test_baselines.py).
+
+The transmitted message is the post-local-steps model itself; the server
+aggregate broadcasts its (participating-clients) mean.
 """
 
 from __future__ import annotations
@@ -15,8 +18,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import GradFn, replicate, vmap_grads
-from repro.utils.tree import tree_client_mean
+from repro.core.api import replicate
+from repro.core.engine import RoundEngine
 
 
 class FedAvgState(NamedTuple):
@@ -25,7 +28,7 @@ class FedAvgState(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
-class FedAvg:
+class FedAvg(RoundEngine):
     alpha: float
     tau: int
     n_clients: int
@@ -33,21 +36,22 @@ class FedAvg:
     vectors_up: int = 1
     vectors_down: int = 1
 
-    def init(self, grad_fn: GradFn, x0, init_batch) -> FedAvgState:
-        del grad_fn, init_batch
-        return FedAvgState(x=replicate(x0, self.n_clients), t=jnp.asarray(0))
+    def init_warmup(self, gf, x0, init_batch):
+        del gf, init_batch
+        return FedAvgState(x=replicate(x0, self.n_clients), t=jnp.asarray(0)), False
 
-    def round(self, grad_fn: GradFn, state: FedAvgState, batches) -> FedAvgState:
-        gf = vmap_grads(grad_fn)
+    def _sgd(self, gf, x, batch):
+        g = gf(x, batch)
+        return jax.tree.map(lambda xx, gg: xx - self.alpha * gg, x, g)
 
-        def body(x, b):
-            g = gf(x, b)
-            return jax.tree.map(lambda xx, gg: xx - self.alpha * gg, x, g), None
+    def local_step(self, gf, state, batch, rctx):
+        return FedAvgState(x=self._sgd(gf, state.x, batch), t=state.t)
 
-        x, _ = jax.lax.scan(body, state.x, batches)
-        x_bar = tree_client_mean(x)
-        x = jax.tree.map(lambda xb, xx: jnp.broadcast_to(xb, xx.shape), x_bar, x)
+    def message(self, gf, state, batch, rctx):
+        """The tau-th local step folds into the message computation."""
+        return self._sgd(gf, state.x, batch), None
+
+    def server_aggregate(self, state, msg, msg_bar, mctx, rctx):
+        x = jax.tree.map(lambda mb, mm: jnp.broadcast_to(mb, mm.shape),
+                         msg_bar, msg)
         return FedAvgState(x=x, t=state.t + self.tau)
-
-    def global_params(self, state: FedAvgState):
-        return tree_client_mean(state.x, keepdims=False)

@@ -1,4 +1,4 @@
-"""FedTrack [30] / FedLin [18] — gradient-tracking federated baselines.
+"""FedTrack [30] / FedLin [18] — gradient-tracking baselines, as engine specs.
 
 Both start every round from the shared global model x_bar and run tau
 corrected local steps
@@ -8,11 +8,15 @@ corrected local steps
 where g_bar = mean_i g_i is the *incrementally aggregated* global gradient.
 The server then averages the endpoints. This guarantees exact linear
 convergence under heterogeneity, at the cost of TWO n-dimensional vectors
-each way per round (g_i up + endpoint up; x_bar down + g_bar down).
+each way per round (g_i up + endpoint up; x_bar down + g_bar down). In
+engine terms the round-start gradient exchange is ``begin_round`` (it uses
+the engine-provided aggregator, so client sampling masks it consistently);
+the endpoint model is the message.
 
-FedLin additionally sparsifies the *uplink gradient* with top-k + error
-feedback (client-side memory), trading rounds for bytes. ``k_frac = 1.0``
-recovers FedTrack exactly.
+FedLin additionally sparsifies the *round-start uplink gradient* with top-k
++ error feedback (client-side memory). This is FedLin's own scheme, kept in
+the spec — the generic ``with_compression`` transform applies to the
+endpoint message instead. ``k_frac = 1.0`` recovers FedTrack exactly.
 """
 
 from __future__ import annotations
@@ -23,9 +27,10 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import GradFn, replicate, vmap_grads
-from repro.core.comm import topk_sparsify
-from repro.utils.tree import tree_client_mean, tree_zeros_like
+from repro.core.api import replicate
+from repro.core.comm import sparsified_up_frac, topk_sparsify
+from repro.core.engine import RoundEngine
+from repro.utils.tree import tree_zeros_like
 
 
 class FedLinState(NamedTuple):
@@ -35,7 +40,7 @@ class FedLinState(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
-class FedLin:
+class FedLin(RoundEngine):
     alpha: float
     tau: int
     n_clients: int
@@ -44,10 +49,18 @@ class FedLin:
     vectors_up: int = 2
     vectors_down: int = 2
 
-    def init(self, grad_fn: GradFn, x0, init_batch) -> FedLinState:
-        del grad_fn, init_batch
+    @property
+    def up_frac(self) -> float:
+        """The TWO up vectors compress independently: the round-start
+        gradient through FedLin's own top-k (k_frac), the endpoint message
+        through any attached engine transforms."""
+        g_frac = sparsified_up_frac(self.k_frac) if self.k_frac < 1.0 else 1.0
+        return (g_frac + super().up_frac) / 2.0
+
+    def init_warmup(self, gf, x0, init_batch):
+        del gf, init_batch
         x = replicate(x0, self.n_clients)
-        return FedLinState(x=x, memory=tree_zeros_like(x), t=jnp.asarray(0))
+        return FedLinState(x=x, memory=tree_zeros_like(x), t=jnp.asarray(0)), False
 
     def _compress_up(self, g, memory):
         """Top-k sparsification with error feedback on the uplink gradient."""
@@ -58,37 +71,36 @@ class FedLin:
         memory = jax.tree.map(jnp.subtract, g_eff, g_sparse)
         return g_sparse, memory
 
-    def round(self, grad_fn: GradFn, state: FedLinState, batches) -> FedLinState:
-        gf = vmap_grads(grad_fn)
-        a = self.alpha
-
-        # Round-start exchange: each client evaluates grad at the shared
-        # point, (optionally sparsified) uplinks it, server means, downlinks.
-        b0 = jax.tree.map(lambda b: b[0], batches)
-        g_i = gf(state.x, b0)
+    def begin_round(self, gf, state, first_batch, agg):
+        """Round-start exchange: each client evaluates grad at the shared
+        point, (optionally sparsified) uplinks it, server means, downlinks."""
+        g_i = gf(state.x, first_batch)
         g_i_tx, memory = self._compress_up(g_i, state.memory)
-        g_bar = tree_client_mean(g_i_tx)
+        g_bar = agg(g_i_tx)
+        return state._replace(memory=memory), (g_i_tx, g_bar)
 
-        def body(y, b):
-            g = gf(y, b)
-            y = jax.tree.map(
-                lambda yy, gg, gi, gb: yy - a * (gg - gi + gb),
-                y, g, g_i_tx, g_bar,
-            )
-            return y, None
+    def _tracked_step(self, gf, state, batch, rctx):
+        g_i_tx, g_bar = rctx
+        g = gf(state.x, batch)
+        return jax.tree.map(
+            lambda yy, gg, gi, gb: yy - self.alpha * (gg - gi + gb),
+            state.x, g, g_i_tx, g_bar,
+        )
 
-        y, _ = jax.lax.scan(body, state.x, batches)
-        y_bar = tree_client_mean(y)
-        x_new = jax.tree.map(lambda yb, yy: jnp.broadcast_to(yb, yy.shape), y_bar, y)
-        return FedLinState(x=x_new, memory=memory, t=state.t + self.tau)
+    def local_step(self, gf, state, batch, rctx):
+        return state._replace(x=self._tracked_step(gf, state, batch, rctx))
 
-    def global_params(self, state: FedLinState):
-        return tree_client_mean(state.x, keepdims=False)
+    def message(self, gf, state, batch, rctx):
+        """The tau-th corrected step folds into the endpoint message."""
+        return self._tracked_step(gf, state, batch, rctx), None
+
+    def server_aggregate(self, state, msg, msg_bar, mctx, rctx):
+        x_new = jax.tree.map(lambda mb, mm: jnp.broadcast_to(mb, mm.shape),
+                             msg_bar, msg)
+        return FedLinState(x=x_new, memory=state.memory, t=state.t + self.tau)
 
 
 def FedTrack(alpha: float, tau: int, n_clients: int) -> FedLin:
     """FedTrack = FedLin without sparsification (k_frac = 1)."""
-    return dataclasses.replace(
-        FedLin(alpha=alpha, tau=tau, n_clients=n_clients, k_frac=1.0),
-        name="fedtrack",
-    )
+    return FedLin(alpha=alpha, tau=tau, n_clients=n_clients, k_frac=1.0,
+                  name="fedtrack")

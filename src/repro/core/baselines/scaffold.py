@@ -1,4 +1,4 @@
-"""SCAFFOLD [26] — stochastic controlled averaging.
+"""SCAFFOLD [26] — stochastic controlled averaging, as an engine spec.
 
 Clients carry a control variate c_i, the server carries c; local steps use
 the corrected gradient grad_i - c_i + c. We implement full participation with
@@ -7,7 +7,10 @@ comparison: alpha_g = 1, alpha_l = 1/(81 tau L)).
 
 Communication per round per client: model delta AND control delta up; global
 model AND global control down — TWO n-dimensional vectors each way, i.e.
-double FedCET's traffic (Remark 2).
+double FedCET's traffic (Remark 2). In engine terms the message is the
+two-tree pytree ``{"dy": y - x, "dc": c_i+ - c_i}``; ``begin_round`` stashes
+the round-start model so the deltas and option-II update have their anchor
+after the local scan has advanced ``x``.
 """
 
 from __future__ import annotations
@@ -18,8 +21,9 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import GradFn, replicate, vmap_grads
-from repro.utils.tree import tree_client_mean, tree_zeros_like
+from repro.core.api import replicate
+from repro.core.engine import RoundEngine
+from repro.utils.tree import tree_zeros_like
 
 
 class ScaffoldState(NamedTuple):
@@ -30,7 +34,7 @@ class ScaffoldState(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
-class Scaffold:
+class Scaffold(RoundEngine):
     alpha_l: float
     tau: int
     n_clients: int
@@ -39,39 +43,42 @@ class Scaffold:
     vectors_up: int = 2
     vectors_down: int = 2
 
-    def init(self, grad_fn: GradFn, x0, init_batch) -> ScaffoldState:
-        del grad_fn, init_batch
+    def init_warmup(self, gf, x0, init_batch):
+        del gf, init_batch
         x = replicate(x0, self.n_clients)
         return ScaffoldState(x=x, c_i=tree_zeros_like(x), c=tree_zeros_like(x),
-                             t=jnp.asarray(0))
+                             t=jnp.asarray(0)), False
 
-    def round(self, grad_fn: GradFn, state: ScaffoldState, batches) -> ScaffoldState:
-        gf = vmap_grads(grad_fn)
-        a = self.alpha_l
+    def begin_round(self, gf, state, first_batch, agg):
+        del gf, first_batch, agg
+        return state, state.x  # rctx = round-start model x
 
-        def body(y, b):
-            g = gf(y, b)
-            y = jax.tree.map(
-                lambda yy, gg, ci, cc: yy - a * (gg - ci + cc),
-                y, g, state.c_i, state.c,
-            )
-            return y, None
+    def _corrected_step(self, gf, state, batch):
+        g = gf(state.x, batch)
+        return jax.tree.map(
+            lambda yy, gg, ci, cc: yy - self.alpha_l * (gg - ci + cc),
+            state.x, g, state.c_i, state.c,
+        )
 
-        y, _ = jax.lax.scan(body, state.x, batches)
+    def local_step(self, gf, state, batch, rctx):
+        return state._replace(x=self._corrected_step(gf, state, batch))
 
+    def message(self, gf, state, batch, rctx):
+        x0 = rctx
+        y = self._corrected_step(gf, state, batch)
         # Option II: c_i+ = c_i - c + (x - y_i) / (tau * alpha_l)
         c_i_new = jax.tree.map(
-            lambda ci, cc, xx, yy: ci - cc + (xx - yy) / (self.tau * a),
-            state.c_i, state.c, state.x, y,
+            lambda ci, cc, xx, yy: ci - cc + (xx - yy) / (self.tau * self.alpha_l),
+            state.c_i, state.c, x0, y,
         )
-        # Server aggregation (full participation): x += alpha_g * mean(dy),
-        # c += mean(dc). Means over the stacked clients axis == the two
-        # uplink vectors; the broadcast back == the two downlink vectors.
-        dy_bar = tree_client_mean(jax.tree.map(jnp.subtract, y, state.x))
-        dc_bar = tree_client_mean(jax.tree.map(jnp.subtract, c_i_new, state.c_i))
-        x_new = jax.tree.map(lambda xx, d: xx + self.alpha_g * d, state.x, dy_bar)
-        c_new = jax.tree.map(jnp.add, state.c, dc_bar)
-        return ScaffoldState(x=x_new, c_i=c_i_new, c=c_new, t=state.t + self.tau)
+        msg = {"dy": jax.tree.map(jnp.subtract, y, x0),
+               "dc": jax.tree.map(jnp.subtract, c_i_new, state.c_i)}
+        return msg, c_i_new
 
-    def global_params(self, state: ScaffoldState):
-        return tree_client_mean(state.x, keepdims=False)
+    def server_aggregate(self, state, msg, msg_bar, mctx, rctx):
+        x0, c_i_new = rctx, mctx
+        x_new = jax.tree.map(lambda xx, d: xx + self.alpha_g * d,
+                             x0, msg_bar["dy"])
+        c_new = jax.tree.map(jnp.add, state.c, msg_bar["dc"])
+        return ScaffoldState(x=x_new, c_i=c_i_new, c=c_new,
+                             t=state.t + self.tau)

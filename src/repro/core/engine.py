@@ -1,0 +1,417 @@
+"""The unified federated round engine.
+
+Every algorithm in this repo shares the paper's round structure (Remark 2):
+``tau - 1`` pure-local steps, then exactly ONE aggregating step in which each
+client transmits a message, the server reduces it, and clients apply the
+result. Before this module existed that structure was hand-rolled seven times
+(FedCET, FedCETLiteral, FedCETPartial, FedCETCompressed, FedAvg, SCAFFOLD,
+FedLin); now :class:`RoundEngine` owns it once and each algorithm is a slim
+*spec* — a frozen dataclass subclass declaring five hooks:
+
+* ``init_warmup(gf, x0, init_batch) -> (state, run_init_comm_step)`` —
+  build the pre-round state from replicated initial parameters (FedCET's
+  warm-up block additionally requests one aggregating step);
+* ``begin_round(gf, state, first_batch, agg) -> (state, rctx)`` — optional
+  round-start exchange (FedLin's gradient uplink); ``rctx`` is closed over
+  by the local scan and the aggregating step;
+* ``local_step(gf, state, batch, rctx) -> state`` — one pure-local step;
+* ``message(gf, state, batch, rctx) -> (msg, mctx)`` — the transmitted
+  pytree at the aggregating step (FedCET: the single vector ``v``;
+  SCAFFOLD: the ``{dy, dc}`` pair). ``mctx`` carries client-local values the
+  aggregation needs but the network never sees (FedCET's exact ``v``);
+* ``server_aggregate(state, msg, msg_bar, mctx, rctx) -> state`` — apply
+  the reduced message. ``msg`` is the client's own message AFTER transforms
+  (see below), ``msg_bar`` the aggregate over (participating) clients.
+
+The engine owns everything else: the ``vmap_grads`` lift with
+``spmd_client_axes``, batch slicing (leaves ``[tau, clients, ...]``), the
+``lax.scan`` over the tau-1 local steps (the aggregation stays OUTSIDE the
+scan so the cross-pod all-reduce appears exactly once per round in the HLO),
+message transforms, and client sampling.
+
+Message transforms & composition
+--------------------------------
+:func:`with_compression` and :func:`with_participation` wrap ANY engine
+algorithm without forking its round body, and compose in either order::
+
+    algo = with_compression(with_participation(FedCET(...), 0.5), k_frac=0.3)
+
+* ``with_compression`` inserts an error-feedback compressor into the message
+  path: ``e += msg; tx = C(e); e -= tx``. The per-client feedback memory
+  rides along in an :class:`EngineState` wrapper. Crucially the spec's
+  ``server_aggregate`` receives the client's own COMPRESSED message as
+  ``msg`` — FedCET's drift update ``d += c (msg - msg_bar)`` therefore stays
+  mean-zero across clients (``sum_i (tx_i - mean tx) = 0``), preserving the
+  Lemma 2 fixed-point structure; the exact local vector needed for the
+  x-update travels in ``mctx``.
+* ``with_participation`` draws a Bernoulli client mask per round
+  (deterministic from the state's step counter, which the engine advances by
+  exactly ``tau`` per round), replaces the aggregation mean with a
+  present-clients-only mean, and freezes absent clients — every state leaf
+  with a leading ``n_clients`` axis reverts to its pre-round value, so
+  absent clients neither compute nor transmit, and redistributive invariants
+  (``sum_i d_i = 0``) survive sampling.
+
+Both factories are EXACT no-ops at their identity settings
+(``rate >= 1.0``; ``k_frac >= 1.0 and not quantize``): they return the
+algorithm object unchanged.
+
+The shared multi-round driver
+-----------------------------
+:func:`run_rounds` / :func:`make_round_runner` scan ``algo.round`` over K
+rounds with an optional per-round metric hook. ``simulate_quadratic``,
+``FedTrainer.fit`` and ``launch.train.run_training`` all consume it — one
+lowered while-loop whether the payload is the paper's 60-dim quadratic or a
+sharded multi-B-parameter LM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import GradFn, vmap_grads
+from repro.core.comm import quantize_bf16, sparsified_up_frac, topk_sparsify
+from repro.utils.tree import tree_client_mean
+
+
+class EngineState(NamedTuple):
+    """Algorithm state plus per-transform extra state (e.g. error-feedback
+    memory). Only used when at least one message transform is attached;
+    transform-free algorithms keep their bare spec state, so existing
+    checkpoints and sharding specs are unaffected."""
+
+    inner: Any
+    extras: tuple
+
+
+# --------------------------------------------------------------------- masks
+def participation_mask(key, n_clients: int, rate: float) -> jax.Array:
+    """Bernoulli(rate) participation mask, guaranteed non-empty: if no client
+    draws in, one uniformly random client is forced in. The Bernoulli draw
+    and the fallback index use independent subkeys."""
+    k_draw, k_fallback = jax.random.split(key)
+    m = jax.random.bernoulli(k_draw, rate, (n_clients,))
+    first = jax.nn.one_hot(jax.random.randint(k_fallback, (), 0, n_clients),
+                           n_clients, dtype=bool)
+    return jnp.where(jnp.any(m), m, first)
+
+
+def masked_client_mean(tree, mask: jax.Array, *, keepdims: bool = True):
+    """Mean over the leading clients axis restricted to ``mask``-selected
+    clients (the server average under partial participation)."""
+    denom = jnp.maximum(jnp.sum(mask.astype(jnp.int32)), 1)
+
+    def mean_leaf(a):
+        mb = mask.reshape((-1,) + (1,) * (a.ndim - 1)).astype(a.dtype)
+        return jnp.sum(a * mb, axis=0, keepdims=keepdims) / denom.astype(a.dtype)
+
+    return jax.tree.map(mean_leaf, tree)
+
+
+def select_clients(new, old, mask: jax.Array, n_clients: int):
+    """Per-client select between two same-structure pytrees: leaves with a
+    leading ``n_clients`` axis take ``new`` where the mask is set and ``old``
+    elsewhere; all other leaves (global scalars like the step counter) take
+    ``new`` unconditionally."""
+
+    def sel(n, o):
+        if getattr(n, "ndim", 0) >= 1 and n.shape[0] == n_clients:
+            mb = mask.reshape((-1,) + (1,) * (n.ndim - 1))
+            return jnp.where(mb, n, o)
+        return n
+
+    return jax.tree.map(sel, new, old)
+
+
+# ---------------------------------------------------------------- transforms
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedbackCompression:
+    """Message transform: top-k sparsification and/or bf16 quantization of
+    the transmitted pytree, with optional client-side error feedback
+    (``e += msg; tx = C(e); e -= tx``) so the compression error is
+    re-injected next round instead of lost."""
+
+    k_frac: float = 1.0
+    quantize: bool = False
+    error_feedback: bool = True
+
+    @property
+    def up_frac(self) -> float:
+        """Effective uplink fraction vs a dense f32 payload (top-k transmits
+        values + int32 indices; bf16 halves whatever remains)."""
+        frac = sparsified_up_frac(self.k_frac)
+        if self.quantize:
+            frac = min(0.5 * frac, 0.5)
+        return min(frac, 1.0)
+
+    def _compress_leaf(self, a: jax.Array) -> jax.Array:
+        out = a
+        if self.k_frac < 1.0:
+            out = topk_sparsify(out, self.k_frac)
+        if self.quantize:
+            out = quantize_bf16(out)
+        return out
+
+    def init_extra(self, msg_shapes):
+        """Feedback memory, shaped like the message (from ``eval_shape``)."""
+        if not self.error_feedback:
+            return None
+        return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), msg_shapes)
+
+    def apply(self, msg, extra):
+        if not self.error_feedback:
+            return jax.tree.map(self._compress_leaf, msg), None
+        carried = jax.tree.map(jnp.add, extra, msg)
+        tx = jax.tree.map(self._compress_leaf, carried)
+        return tx, jax.tree.map(jnp.subtract, carried, tx)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientSampling:
+    """Per-round Bernoulli client participation policy."""
+
+    rate: float
+    seed: int = 0
+
+
+# --------------------------------------------------------------------- engine
+@dataclasses.dataclass(frozen=True)
+class RoundEngine:
+    """Shared round driver; algorithms subclass this and implement the spec
+    hooks (``init_warmup``, ``local_step``, ``message``,
+    ``server_aggregate``, optionally ``begin_round`` / ``client_params``).
+
+    Subclasses must declare ``name``, ``tau``, ``n_clients``, ``vectors_up``
+    and ``vectors_down`` fields (the FederatedAlgorithm protocol), and their
+    state must be a pytree whose per-client leaves carry a leading
+    ``n_clients`` axis plus a scalar step counter ``t`` that the engine-run
+    round advances by exactly ``tau``."""
+
+    transforms: tuple = dataclasses.field(default=(), kw_only=True)
+    sampling: ClientSampling | None = dataclasses.field(default=None, kw_only=True)
+    #: mesh axes carrying the client dimension (production launcher only).
+    spmd_client_axes: tuple = dataclasses.field(default=(), kw_only=True)
+
+    # ------------------------------------------------------------ spec hooks
+    def init_warmup(self, gf, x0, init_batch):
+        raise NotImplementedError
+
+    def begin_round(self, gf, state, first_batch, agg):
+        """Optional round-start exchange; returns (state, round context)."""
+        del gf, first_batch, agg
+        return state, None
+
+    def local_step(self, gf, state, batch, rctx):
+        raise NotImplementedError
+
+    def message(self, gf, state, batch, rctx):
+        raise NotImplementedError
+
+    def server_aggregate(self, state, msg, msg_bar, mctx, rctx):
+        raise NotImplementedError
+
+    def client_params(self, state):
+        """Stacked [clients, ...] model parameters (default: ``state.x``)."""
+        return self._inner(state).x
+
+    def global_params(self, state):
+        return tree_client_mean(self.client_params(state), keepdims=False)
+
+    # ------------------------------------------------------------ accounting
+    @property
+    def up_frac(self) -> float:
+        """Effective uplink bytes fraction after message transforms."""
+        frac = 1.0
+        for t in self.transforms:
+            frac *= getattr(t, "up_frac", 1.0)
+        return frac
+
+    @property
+    def down_frac(self) -> float:
+        return 1.0
+
+    # ------------------------------------------------------- state wrapping
+    def _wrap(self, inner, extras):
+        return EngineState(inner, tuple(extras)) if self.transforms else inner
+
+    def _split(self, state):
+        if self.transforms:
+            return state.inner, state.extras
+        return state, ()
+
+    def _inner(self, state):
+        return state.inner if self.transforms else state
+
+    # ------------------------------------------------------------- plumbing
+    def _grad(self, grad_fn: GradFn) -> GradFn:
+        return vmap_grads(grad_fn, spmd_axis_name=(self.spmd_client_axes or None))
+
+    def _init_extras(self, gf, inner, init_batch) -> tuple:
+        """Per-transform extra state, shaped from the (abstract) message."""
+        if not self.transforms:
+            return ()
+
+        def msg_of(s, b):
+            s2, rctx = self.begin_round(gf, s, b, tree_client_mean)
+            return self.message(gf, s2, b, rctx)[0]
+
+        msg_shapes = jax.eval_shape(msg_of, inner, init_batch)
+        return tuple(t.init_extra(msg_shapes) for t in self.transforms)
+
+    def _comm_step(self, gf, inner, extras, batch, rctx, agg):
+        """The single aggregating step: message -> transforms -> reduce ->
+        apply. The only place a cross-client collective fires."""
+        msg, mctx = self.message(gf, inner, batch, rctx)
+        new_extras = []
+        for t, e in zip(self.transforms, extras):
+            msg, e = t.apply(msg, e)
+            new_extras.append(e)
+        msg_bar = agg(msg)
+        inner = self.server_aggregate(inner, msg, msg_bar, mctx, rctx)
+        return inner, tuple(new_extras)
+
+    # -------------------------------------------------------------- protocol
+    def init(self, grad_fn: GradFn, x0, init_batch):
+        """Replicate-and-warm-up, plus one aggregating step if the spec's
+        warm-up requests it. Client sampling never applies at init (matching
+        the full-participation initialization of the paper)."""
+        gf = self._grad(grad_fn)
+        inner, run_comm = self.init_warmup(gf, x0, init_batch)
+        extras = self._init_extras(gf, inner, init_batch)
+        if run_comm:
+            inner, extras = self._comm_step(gf, inner, extras, init_batch,
+                                            rctx=None, agg=tree_client_mean)
+        return self._wrap(inner, extras)
+
+    def round(self, grad_fn: GradFn, state, batches):
+        """One communication round: optional round-start exchange, tau-1
+        local steps under ``lax.scan``, one aggregating step.
+
+        ``batches`` leaves have leading ``[tau, clients, ...]`` axes. The
+        scan keeps the lowered HLO small for multi-B parameter models; the
+        aggregation sits OUTSIDE the scan so the cross-pod all-reduce
+        appears exactly once per round in the HLO."""
+        gf = self._grad(grad_fn)
+        inner, extras = self._split(state)
+
+        mask = None
+        agg = tree_client_mean
+        if self.sampling is not None:
+            key = jax.random.fold_in(jax.random.key(self.sampling.seed),
+                                     jnp.asarray(inner.t, jnp.int32))
+            mask = participation_mask(key, self.n_clients, self.sampling.rate)
+            agg = lambda tr: masked_client_mean(tr, mask)  # noqa: E731
+        frozen_inner, frozen_extras = inner, extras
+
+        first_b = jax.tree.map(lambda b: b[0], batches)
+        inner, rctx = self.begin_round(gf, inner, first_b, agg)
+
+        if self.tau > 1:
+            local_b = jax.tree.map(lambda b: b[: self.tau - 1], batches)
+
+            def body(s, b):
+                return self.local_step(gf, s, b, rctx), None
+
+            inner, _ = jax.lax.scan(body, inner, local_b)
+
+        last_b = jax.tree.map(lambda b: b[self.tau - 1], batches)
+        inner, extras = self._comm_step(gf, inner, extras, last_b, rctx, agg)
+
+        if mask is not None:
+            # absent clients keep their pre-round state entirely
+            inner = select_clients(inner, frozen_inner, mask, self.n_clients)
+            extras = tuple(select_clients(e, fe, mask, self.n_clients)
+                           for e, fe in zip(extras, frozen_extras))
+        return self._wrap(inner, extras)
+
+
+# ------------------------------------------------------- transform factories
+def with_participation(algo: RoundEngine, rate: float, seed: int = 0) -> RoundEngine:
+    """Per-round Bernoulli client sampling for ANY engine algorithm.
+    ``rate >= 1.0`` is an exact no-op (returns ``algo`` unchanged)."""
+    if rate >= 1.0:
+        return algo
+    return dataclasses.replace(algo, sampling=ClientSampling(rate=rate, seed=seed))
+
+
+def with_compression(algo: RoundEngine, *, k_frac: float = 1.0,
+                     quantize: bool = False,
+                     error_feedback: bool = True) -> RoundEngine:
+    """Compressed uplink for ANY engine algorithm's message path.
+    ``k_frac >= 1.0 and not quantize`` is an exact no-op (returns ``algo``
+    unchanged). Transforms stack: the last one attached compresses the
+    output of the previous one."""
+    if k_frac >= 1.0 and not quantize:
+        return algo
+    t = ErrorFeedbackCompression(k_frac=k_frac, quantize=quantize,
+                                 error_feedback=error_feedback)
+    return dataclasses.replace(algo, transforms=algo.transforms + (t,))
+
+
+# --------------------------------------------------------- multi-round driver
+def make_round_runner(algo, grad_fn: GradFn, *, metric_fn=None, repeat: bool = False):
+    """Build the jitted K-round scan over ``algo.round``.
+
+    * ``repeat=False`` (default): the returned ``run(state, batches)`` scans
+      over stacked per-round batches (leaves ``[rounds, tau, clients, ...]``).
+    * ``repeat=True``: ``run(state, batches, rounds)`` replays the SAME
+      per-round batch pytree (leaves ``[tau, clients, ...]``) for ``rounds``
+      rounds — the full-batch simulation mode.
+
+    ``metric_fn(state) -> pytree`` is evaluated after every round and stacked
+    into the second return value. Keep ONE runner per training loop: jit
+    caching is per function instance."""
+    if repeat:
+        def run(state, batches, rounds):
+            def body(s, _):
+                s = algo.round(grad_fn, s, batches)
+                return s, (metric_fn(s) if metric_fn is not None else None)
+
+            return jax.lax.scan(body, state, None, length=rounds)
+
+        return jax.jit(run, static_argnums=2)
+
+    def run(state, batches):
+        def body(s, b):
+            s = algo.round(grad_fn, s, b)
+            return s, (metric_fn(s) if metric_fn is not None else None)
+
+        return jax.lax.scan(body, state, batches)
+
+    return jax.jit(run)
+
+
+def scan_segments(start: int, total: int, is_boundary, *, max_rounds: int = 32):
+    """Yield ``(first, last)`` round indices for jitted scan segments.
+
+    Each segment ends at the next boundary round (inclusive — the round
+    after which the caller wants to eval/checkpoint/log) or after
+    ``max_rounds``, whichever comes first; the cap bounds the memory spent
+    on stacked per-round batches. Shared by ``FedTrainer.fit`` and
+    ``launch.train.run_training``."""
+    r = start
+    while r < total:
+        cap = min(total - 1, r + max_rounds - 1)
+        stop = next((s for s in range(r, cap) if is_boundary(s)), cap)
+        yield r, stop
+        r = stop + 1
+
+
+def run_rounds(algo, grad_fn: GradFn, state, batches, *, rounds: int | None = None,
+               metric_fn=None):
+    """Run K communication rounds through one ``lax.scan`` (the shared
+    driver behind ``simulate_quadratic`` and ``FedTrainer.fit``).
+
+    With ``rounds=None``, ``batches`` leaves are ``[rounds, tau, clients,
+    ...]`` stacks and the round count is their leading axis; with
+    ``rounds=K``, ``batches`` is a single per-round pytree (leaves
+    ``[tau, clients, ...]``) replayed every round. Returns
+    ``(final_state, stacked_metrics)`` (metrics ``None`` without a hook)."""
+    if rounds is not None:
+        return make_round_runner(algo, grad_fn, metric_fn=metric_fn,
+                                 repeat=True)(state, batches, rounds)
+    return make_round_runner(algo, grad_fn, metric_fn=metric_fn)(state, batches)

@@ -1,6 +1,8 @@
-"""FedCET — the paper's contribution (Algorithm 2).
+"""FedCET — the paper's contribution (Algorithm 2), as engine specs.
 
-Two equivalent implementations are provided:
+Two equivalent implementations are provided, both thin
+:class:`repro.core.engine.RoundEngine` specs (the engine owns the round
+structure — local scan, message transforms, aggregation):
 
 * :class:`FedCET` — the production form, using the ``(d, x)`` recursion of
   Lemma 1. It carries TWO persistent model-sized states per client
@@ -13,18 +15,22 @@ Two equivalent implementations are provided:
   ``d`` converges to ``-grad_i(x*)`` — it absorbs exactly the gradient
   heterogeneity that makes FedAvg drift — yet is never transmitted. Only the
   single vector ``v`` crosses the network, which is the paper's headline:
-  half the communication of SCAFFOLD / FedTrack / FedLin.
+  half the communication of SCAFFOLD / FedTrack / FedLin. Under message
+  compression the drift update uses the client's own compressed message
+  (``msg`` in ``server_aggregate``) so ``sum_i d_i = 0`` is preserved
+  (Lemma 2), while the x-update corrects the exact local vector ``v``
+  carried in ``mctx``.
 
 * :class:`FedCETLiteral` — the 2-point extrapolation form exactly as printed
   in Algorithm 2 (states ``x(t), x(t-1)`` and gradients at both). Used as a
   reference oracle: tests assert both forms produce identical iterates
-  (Lemma 1), which numerically validates the paper's reformulation.
+  (Lemma 1), which numerically validates the paper's reformulation. (The two
+  forms coincide only for the UNtransformed message path — the literal form
+  has no separate exact-local-vector carry, so compose transforms with
+  :class:`FedCET`, not with the literal oracle.)
 
 A communication round = ``tau - 1`` pure-local steps followed by one
 aggregating step, matching Algorithm 2's ``(t+1) mod tau == 0`` schedule.
-The aggregation is implemented as a leaf-wise mean over the stacked clients
-axis; under ``pjit`` with that axis sharded over ``("pod", "data")`` it is
-the only cross-pod collective, fired once per ``tau`` gradient steps.
 """
 
 from __future__ import annotations
@@ -35,18 +41,19 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import GradFn, replicate, vmap_grads
-from repro.utils.tree import tree_client_mean, tree_zeros_like
+from repro.core.api import replicate
+from repro.core.engine import RoundEngine
+from repro.utils.tree import tree_zeros_like
 
 
 class FedCETState(NamedTuple):
     x: Any  # stacked [clients, ...] model parameters
     d: Any  # stacked [clients, ...] drift-correction variable (Lemma 1)
-    t: jax.Array  # global iteration counter (informational)
+    t: jax.Array  # global iteration counter (drives sampling keys)
 
 
 @dataclasses.dataclass(frozen=True)
-class FedCET:
+class FedCET(RoundEngine):
     """FedCET in the memory-efficient (d, x) form of Lemma 1."""
 
     alpha: float
@@ -60,23 +67,16 @@ class FedCET:
     #: interpret-mode on CPU). Off by default — XLA fuses this fine; the
     #: kernel exists for the perf phase and is validated against ref.py.
     use_fused_kernel: bool = False
-    #: mesh axes carrying the client dimension (production launcher only).
-    spmd_client_axes: tuple = ()
 
-    # ------------------------------------------------------------------ init
-    def init(self, grad_fn: GradFn, x0, init_batch) -> FedCETState:
-        """Paper's warm-up: x(-1) = x(-2) - a*grad(x(-2)), d(-1) = 0, then one
-        aggregating step produces (d(0), x(0)). This is exactly the
-        initialization block above Algorithm 2, rewritten in (d, x) form."""
-        gf = vmap_grads(grad_fn, spmd_axis_name=(self.spmd_client_axes or None))
+    def init_warmup(self, gf, x0, init_batch):
+        """Paper's warm-up: x(-1) = x(-2) - a*grad(x(-2)), d(-1) = 0, then
+        one aggregating step (run by the engine) produces (d(0), x(0)) —
+        exactly the initialization block above Algorithm 2 in (d, x) form."""
         x_m2 = replicate(x0, self.n_clients)
         g_m2 = gf(x_m2, init_batch)
         x_m1 = jax.tree.map(lambda x, g: x - self.alpha * g, x_m2, g_m2)
-        d_m1 = tree_zeros_like(x_m1)
-        state = FedCETState(x=x_m1, d=d_m1, t=jnp.asarray(-1))
-        return self._comm_step(gf, state, init_batch)
+        return FedCETState(x=x_m1, d=tree_zeros_like(x_m1), t=jnp.asarray(-1)), True
 
-    # ----------------------------------------------------------------- steps
     def _v(self, x, g, d):
         """The single transmitted vector v = x - a*g - a*d (== the paper's
         2x(t) - x(t-1) - a*grad(t) + a*grad(t-1), see Lemma 1)."""
@@ -89,45 +89,28 @@ class FedCET:
         a = self.alpha
         return jax.tree.map(lambda xx, gg, dd: xx - a * gg - a * dd, x, g, d)
 
-    def _local_step(self, gf, state: FedCETState, batch) -> FedCETState:
+    def local_step(self, gf, state, batch, rctx):
         """Eq. (3): pure extrapolated local training, d frozen."""
         g = gf(state.x, batch)
         v = self._v(state.x, g, state.d)
         return FedCETState(x=v, d=state.d, t=state.t + 1)
 
-    def _comm_step(self, gf, state: FedCETState, batch) -> FedCETState:
-        """Eq. (2): the aggregating step. mean over clients == server
-        aggregate + broadcast; the only cross-client collective."""
+    def message(self, gf, state, batch, rctx):
+        """The single uplink vector v; also carried as mctx so the x-update
+        stays exact when a transform compresses the transmitted copy."""
         g = gf(state.x, batch)
         v = self._v(state.x, g, state.d)
-        v_bar = tree_client_mean(v)
+        return v, v
+
+    def server_aggregate(self, state, msg, msg_bar, mctx, rctx):
+        """Eq. (2): the aggregating step. ``msg`` is the client's own
+        (possibly compressed) transmitted vector, ``mctx`` the exact v."""
         ca = self.c * self.alpha
-        d_next = jax.tree.map(lambda dd, vv, vb: dd + self.c * (vv - vb), state.d, v, v_bar)
-        x_next = jax.tree.map(lambda vv, vb: vv - ca * (vv - vb), v, v_bar)
+        d_next = jax.tree.map(lambda dd, mm, mb: dd + self.c * (mm - mb),
+                              state.d, msg, msg_bar)
+        x_next = jax.tree.map(lambda vv, mm, mb: vv - ca * (mm - mb),
+                              mctx, msg, msg_bar)
         return FedCETState(x=x_next, d=d_next, t=state.t + 1)
-
-    # ----------------------------------------------------------------- round
-    def round(self, grad_fn: GradFn, state: FedCETState, batches) -> FedCETState:
-        """One communication round: (tau-1) local steps + 1 comm step.
-
-        ``batches`` leaves have leading [tau, clients, ...]. The local steps
-        run under ``lax.scan`` so the lowered HLO stays small for multi-B
-        parameter models; the aggregation sits OUTSIDE the scan so the
-        cross-pod all-reduce appears exactly once per round in the HLO.
-        """
-        gf = vmap_grads(grad_fn, spmd_axis_name=(self.spmd_client_axes or None))
-        if self.tau > 1:
-            local_b = jax.tree.map(lambda b: b[: self.tau - 1], batches)
-
-            def body(s, b):
-                return self._local_step(gf, s, b), None
-
-            state, _ = jax.lax.scan(body, state, local_b)
-        last_b = jax.tree.map(lambda b: b[self.tau - 1], batches)
-        return self._comm_step(gf, state, last_b)
-
-    def global_params(self, state: FedCETState):
-        return tree_client_mean(state.x, keepdims=False)
 
 
 class FedCETLiteralState(NamedTuple):
@@ -138,7 +121,7 @@ class FedCETLiteralState(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
-class FedCETLiteral:
+class FedCETLiteral(RoundEngine):
     """Algorithm 2 exactly as printed (3 persistent states). Reference only."""
 
     alpha: float
@@ -148,18 +131,15 @@ class FedCETLiteral:
     name: str = "fedcet_literal"
     vectors_up: int = 1
     vectors_down: int = 1
-    spmd_client_axes: tuple = ()
 
-    def init(self, grad_fn: GradFn, x0, init_batch) -> FedCETLiteralState:
-        gf = vmap_grads(grad_fn, spmd_axis_name=(self.spmd_client_axes or None))
+    def init_warmup(self, gf, x0, init_batch):
         x_m2 = replicate(x0, self.n_clients)
         g_m2 = gf(x_m2, init_batch)
         x_m1 = jax.tree.map(lambda x, g: x - self.alpha * g, x_m2, g_m2)
-        state = FedCETLiteralState(x_curr=x_m1, x_prev=x_m2, g_prev=g_m2,
-                                   t=jnp.asarray(-1))
-        return self._step(gf, state, init_batch, comm=True)
+        return FedCETLiteralState(x_curr=x_m1, x_prev=x_m2, g_prev=g_m2,
+                                  t=jnp.asarray(-1)), True
 
-    def _message(self, gf, state, batch):
+    def _extrapolate(self, gf, state, batch):
         """2x(t) - x(t-1) - a grad(t) + a grad(t-1), and grad(t) for carry."""
         a = self.alpha
         g = gf(state.x_curr, batch)
@@ -169,27 +149,24 @@ class FedCETLiteral:
         )
         return m, g
 
-    def _step(self, gf, state, batch, *, comm: bool) -> FedCETLiteralState:
-        m, g = self._message(gf, state, batch)
-        if comm:
-            m_bar = tree_client_mean(m)
-            ca = self.c * self.alpha
-            x_next = jax.tree.map(lambda mm, mb: ca * mb + (1.0 - ca) * mm, m, m_bar)
-        else:
-            x_next = m
-        return FedCETLiteralState(x_curr=x_next, x_prev=state.x_curr, g_prev=g,
+    def local_step(self, gf, state, batch, rctx):
+        m, g = self._extrapolate(gf, state, batch)
+        return FedCETLiteralState(x_curr=m, x_prev=state.x_curr, g_prev=g,
                                   t=state.t + 1)
 
-    def round(self, grad_fn: GradFn, state, batches) -> FedCETLiteralState:
-        gf = vmap_grads(grad_fn, spmd_axis_name=(self.spmd_client_axes or None))
-        for s in range(self.tau - 1):  # reference impl: clarity over scan
-            b = jax.tree.map(lambda x: x[s], batches)
-            state = self._step(gf, state, b, comm=False)
-        b = jax.tree.map(lambda x: x[self.tau - 1], batches)
-        return self._step(gf, state, b, comm=True)
+    def message(self, gf, state, batch, rctx):
+        m, g = self._extrapolate(gf, state, batch)
+        return m, g
 
-    def global_params(self, state):
-        return tree_client_mean(state.x_curr, keepdims=False)
+    def server_aggregate(self, state, msg, msg_bar, mctx, rctx):
+        ca = self.c * self.alpha
+        x_next = jax.tree.map(lambda mm, mb: ca * mb + (1.0 - ca) * mm,
+                              msg, msg_bar)
+        return FedCETLiteralState(x_curr=x_next, x_prev=state.x_curr,
+                                  g_prev=mctx, t=state.t + 1)
+
+    def client_params(self, state):
+        return self._inner(state).x_curr
 
 
 def max_weight_c(mu: float, alpha: float) -> float:

@@ -18,6 +18,14 @@ d_i' - d_i remains mean-zero across clients (sum_i (v_i^c - v_bar) = 0),
 preserving the fixed-point structure of Lemma 2. The x-update applies the
 correction to the client's exact local vector v_i.
 
+Since the unified round engine this is no longer a separate algorithm:
+:func:`FedCETCompressed` is sugar for composing the generic
+``with_compression`` message transform (repro/core/engine.py) onto the
+plain FedCET spec — the recursion above falls out of FedCET's
+``server_aggregate`` receiving the transformed message as ``msg`` and the
+exact local vector as ``mctx``. The same transform composes onto any other
+engine algorithm, and stacks with ``with_participation``.
+
 The paper has no compression variant (FedLin compresses a gradient in a
 2-vector scheme); this is recorded as a beyond-paper result in
 EXPERIMENTS.md §Perf: with top-30% + error feedback, uplink bytes drop to
@@ -27,98 +35,21 @@ empirically (tests/test_fedcet_compressed.py).
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, NamedTuple
+from repro.core.engine import ErrorFeedbackCompression, RoundEngine, with_compression
+from repro.core.fedcet import FedCET
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.api import GradFn, replicate, vmap_grads
-from repro.core.comm import quantize_bf16, sparsified_up_frac, topk_sparsify
-from repro.utils.tree import tree_client_mean, tree_zeros_like
+__all__ = ["ErrorFeedbackCompression", "FedCETCompressed"]
 
 
-class FedCETCState(NamedTuple):
-    x: Any
-    d: Any
-    e: Any  # error-feedback memory (same shape as x)
-    t: jax.Array
+def FedCETCompressed(alpha: float, c: float, tau: int, n_clients: int,
+                     k_frac: float = 1.0, quantize: bool = False,
+                     error_feedback: bool = True,
+                     name: str = "fedcet_c", **engine_kw) -> RoundEngine:
+    """Compressed-uplink FedCET: ``with_compression`` over the FedCET spec.
 
-
-@dataclasses.dataclass(frozen=True)
-class FedCETCompressed:
-    alpha: float
-    c: float
-    tau: int
-    n_clients: int
-    k_frac: float = 1.0          # top-k fraction (1.0 = dense)
-    quantize: bool = False       # bf16 the transmitted vector
-    name: str = "fedcet_c"
-    vectors_up: int = 1
-    vectors_down: int = 1
-    spmd_client_axes: tuple = ()
-
-    @property
-    def up_frac(self) -> float:
-        """Effective uplink fraction vs a dense f32 vector."""
-        frac = sparsified_up_frac(self.k_frac)
-        if self.quantize:
-            frac *= 0.5
-        return min(frac, 1.0 if not self.quantize else 0.5) if self.k_frac < 1.0 \
-            else (0.5 if self.quantize else 1.0)
-
-    def _compress(self, a: jax.Array) -> jax.Array:
-        out = a
-        if self.k_frac < 1.0:
-            out = topk_sparsify(out, self.k_frac)
-        if self.quantize:
-            out = quantize_bf16(out)
-        return out
-
-    def init(self, grad_fn: GradFn, x0, init_batch) -> FedCETCState:
-        gf = vmap_grads(grad_fn, spmd_axis_name=(self.spmd_client_axes or None))
-        x_m2 = replicate(x0, self.n_clients)
-        g_m2 = gf(x_m2, init_batch)
-        x_m1 = jax.tree.map(lambda x, g: x - self.alpha * g, x_m2, g_m2)
-        state = FedCETCState(x=x_m1, d=tree_zeros_like(x_m1),
-                             e=tree_zeros_like(x_m1), t=jnp.asarray(-1))
-        return self._comm_step(gf, state, init_batch)
-
-    def _v(self, x, g, d):
-        a = self.alpha
-        return jax.tree.map(lambda xx, gg, dd: xx - a * gg - a * dd, x, g, d)
-
-    def _local_step(self, gf, state: FedCETCState, batch) -> FedCETCState:
-        g = gf(state.x, batch)
-        v = self._v(state.x, g, state.d)
-        return FedCETCState(x=v, d=state.d, e=state.e, t=state.t + 1)
-
-    def _comm_step(self, gf, state: FedCETCState, batch) -> FedCETCState:
-        g = gf(state.x, batch)
-        v = self._v(state.x, g, state.d)
-        # error-feedback compression of the single transmitted vector
-        e_plus_v = jax.tree.map(jnp.add, state.e, v)
-        v_tx = jax.tree.map(self._compress, e_plus_v)
-        e_new = jax.tree.map(jnp.subtract, e_plus_v, v_tx)
-        v_bar = tree_client_mean(v_tx)
-        ca = self.c * self.alpha
-        d_next = jax.tree.map(lambda dd, vt, vb: dd + self.c * (vt - vb),
-                              state.d, v_tx, v_bar)
-        x_next = jax.tree.map(lambda vv, vt, vb: vv - ca * (vt - vb),
-                              v, v_tx, v_bar)
-        return FedCETCState(x=x_next, d=d_next, e=e_new, t=state.t + 1)
-
-    def round(self, grad_fn: GradFn, state: FedCETCState, batches) -> FedCETCState:
-        gf = vmap_grads(grad_fn, spmd_axis_name=(self.spmd_client_axes or None))
-        if self.tau > 1:
-            local_b = jax.tree.map(lambda b: b[: self.tau - 1], batches)
-
-            def body(s, b):
-                return self._local_step(gf, s, b), None
-
-            state, _ = jax.lax.scan(body, state, local_b)
-        last_b = jax.tree.map(lambda b: b[self.tau - 1], batches)
-        return self._comm_step(gf, state, last_b)
-
-    def global_params(self, state: FedCETCState):
-        return tree_client_mean(state.x, keepdims=False)
+    ``k_frac=1.0, quantize=False`` is an exact no-op — the returned
+    algorithm IS plain FedCET (bit-identical iterates)."""
+    base = FedCET(alpha=alpha, c=c, tau=tau, n_clients=n_clients, name=name,
+                  **engine_kw)
+    return with_compression(base, k_frac=k_frac, quantize=quantize,
+                            error_feedback=error_feedback)

@@ -1,18 +1,24 @@
 """Partial client participation (beyond-paper).
 
 The paper assumes full participation (every client contributes to every
-aggregation). Real federations sample clients. This module adds
-participation-masked rounds for FedCET:
+aggregation). Real federations sample clients. Since the unified round
+engine this is a generic composition — ``with_participation`` (in
+repro/core/engine.py) wraps ANY engine algorithm:
 
 * a participation mask m in {0,1}^N is drawn per round (deterministic from
-  the round index);
+  the state's step counter, which the engine advances by exactly tau per
+  round; the Bernoulli draw and the non-empty fallback use independent
+  subkeys);
 * absent clients freeze (no local steps, no state change) — they neither
   compute nor transmit;
-* the server averages v over PRESENT clients only, and only present
-  clients apply the aggregation update. The drift updates of present
-  clients use deviations from the present-mean, so sum_i d_i stays zero
-  across the federation (the Lemma-2 fixed-point structure is preserved;
-  `tests/test_participation.py` checks the invariant under random masks).
+* the server averages the message over PRESENT clients only, and only
+  present clients apply the aggregation update. For FedCET the drift
+  updates of present clients use deviations from the present-mean, so
+  sum_i d_i stays zero across the federation (the Lemma-2 fixed-point
+  structure is preserved; `tests/test_participation.py` checks the
+  invariant under random masks).
+
+:func:`FedCETPartial` remains as construction sugar for the FedCET case.
 
 Empirically (tests): with participation >= 0.5 on the paper's problem the
 iterates still converge linearly to the exact optimum, at proportionally
@@ -23,81 +29,32 @@ measured behavior, not a claimed guarantee.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
+from repro.core.engine import (
+    ClientSampling,
+    RoundEngine,
+    masked_client_mean,
+    participation_mask,
+    select_clients,
+    with_participation,
+)
+from repro.core.fedcet import FedCET
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.api import GradFn, vmap_grads
-from repro.core.fedcet import FedCET, FedCETState
-
-
-def participation_mask(key, n_clients: int, rate: float) -> jax.Array:
-    """At least one client participates; expected fraction = rate."""
-    m = jax.random.bernoulli(key, rate, (n_clients,))
-    # guarantee non-empty participation: force client argmax(uniform) in
-    first = jax.nn.one_hot(jax.random.randint(key, (), 0, n_clients),
-                           n_clients, dtype=bool)
-    return jnp.where(jnp.any(m), m, first)
+__all__ = [
+    "ClientSampling",
+    "FedCETPartial",
+    "masked_client_mean",
+    "participation_mask",
+    "select_clients",
+    "with_participation",
+]
 
 
-@dataclasses.dataclass(frozen=True)
-class FedCETPartial(FedCET):
-    """FedCET with per-round client sampling."""
-
-    participation: float = 1.0
-    seed: int = 0
-    name: str = "fedcet_partial"
-
-    def _masked_mean(self, tree, mask):
-        w = mask.astype(jnp.float32)
-        denom = jnp.maximum(jnp.sum(w), 1.0)
-
-        def mean_leaf(a):
-            wb = w.reshape((-1,) + (1,) * (a.ndim - 1)).astype(a.dtype)
-            return jnp.sum(a * wb, axis=0, keepdims=True) / denom.astype(a.dtype)
-
-        return jax.tree.map(mean_leaf, tree)
-
-    def _apply_masked(self, new, old, mask):
-        def sel(n, o):
-            mb = mask.reshape((-1,) + (1,) * (n.ndim - 1))
-            return jnp.where(mb, n, o)
-
-        return jax.tree.map(sel, new, old)
-
-    def round(self, grad_fn: GradFn, state: FedCETState, batches) -> FedCETState:
-        gf = vmap_grads(grad_fn, spmd_axis_name=(self.spmd_client_axes or None))
-        # per-round mask derived from the iteration counter in the state
-        key = jax.random.fold_in(jax.random.key(self.seed),
-                                 jnp.asarray(state.t, jnp.int32))
-        mask = participation_mask(key, self.n_clients, self.participation)
-
-        frozen = state
-        # local steps (computed for all, applied to present clients only —
-        # in a real deployment absent clients simply don't run; here the
-        # masking keeps the computation jit-static)
-        if self.tau > 1:
-            local_b = jax.tree.map(lambda b: b[: self.tau - 1], batches)
-
-            def body(s, b):
-                return self._local_step(gf, s, b), None
-
-            state, _ = jax.lax.scan(body, state, local_b)
-        last_b = jax.tree.map(lambda b: b[self.tau - 1], batches)
-        g = gf(state.x, last_b)
-        v = self._v(state.x, g, state.d)
-        v_bar = self._masked_mean(jax.tree.map(
-            lambda a, m=mask: a * m.reshape((-1,) + (1,) * (a.ndim - 1)).astype(a.dtype), v), mask)
-        ca = self.c * self.alpha
-        d_next = jax.tree.map(lambda dd, vv, vb: dd + self.c * (vv - vb),
-                              state.d, v, v_bar)
-        x_next = jax.tree.map(lambda vv, vb: vv - ca * (vv - vb), v, v_bar)
-        new = FedCETState(x=x_next, d=d_next, t=state.t + self.tau)
-        # absent clients keep their pre-round state entirely
-        return FedCETState(
-            x=self._apply_masked(new.x, frozen.x, mask),
-            d=self._apply_masked(new.d, frozen.d, mask),
-            t=new.t,
-        )
+def FedCETPartial(alpha: float, c: float, tau: int, n_clients: int,
+                  participation: float = 1.0, seed: int = 0,
+                  name: str = "fedcet_partial", **engine_kw) -> RoundEngine:
+    """FedCET with per-round client sampling: ``with_participation`` over
+    the FedCET spec. ``participation=1.0`` is an exact no-op — the returned
+    algorithm IS plain FedCET."""
+    base = FedCET(alpha=alpha, c=c, tau=tau, n_clients=n_clients, name=name,
+                  **engine_kw)
+    return with_participation(base, participation, seed=seed)

@@ -1,8 +1,8 @@
 """Sequential (single-host) federated simulation driver.
 
 Runs any FederatedAlgorithm against the paper's quadratic problem (or any
-(grad_fn, batches) pair) for K communication rounds with the whole K-round
-loop inside one ``lax.scan`` — so the CPU repro of Fig. 1 runs in
+(grad_fn, batches) pair) for K communication rounds through the shared
+``engine.run_rounds`` scan — so the CPU repro of Fig. 1 runs in
 milliseconds, and the identical ``algo.round`` is what the distributed
 launcher jits onto the production mesh.
 """
@@ -15,6 +15,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import run_rounds
 from repro.data.quadratic import QuadraticProblem
 
 
@@ -45,16 +46,8 @@ def simulate_quadratic(algo, problem: QuadraticProblem, rounds: int,
     def err(state) -> jax.Array:
         return jnp.linalg.norm(algo.global_params(state) - x_star)
 
-    @jax.jit
-    def run(state):
-        def body(s, _):
-            s = algo.round(grad_fn, s, batches)
-            return s, err(s)
-
-        final, errs = jax.lax.scan(body, state, None, length=rounds)
-        return final, errs
-
-    final_state, errs = run(state0)
+    final_state, errs = run_rounds(algo, grad_fn, state0, batches,
+                                   rounds=rounds, metric_fn=err)
     errors = jnp.concatenate([err(state0)[None], errs])
     n_bytes = (algo.vectors_up + algo.vectors_down) * problem.dim * 4 * problem.n_clients
     return SimResult(errors=errors, state=final_state, bytes_per_round=n_bytes)

@@ -3,16 +3,21 @@
 Responsibilities a real deployment needs beyond the algorithm step:
 
 * round orchestration with a pluggable data source (round -> batches),
+  running through the shared scan driver (``engine.make_round_runner``):
+  rounds between eval/checkpoint boundaries execute as ONE jitted
+  ``lax.scan`` segment rather than a python-level round loop,
 * periodic held-out evaluation: global-model loss AND per-client local
   losses (the heterogeneity gap — mean local minus global — is the
   practical drift diagnostic),
-* checkpoint/resume of the FULL algorithm state (round counter included),
-* communication metering via the algorithm's declared vector counts,
+* checkpoint/resume of the FULL algorithm state (round counter and any
+  transform state such as error-feedback memory included),
+* communication metering via the algorithm's declared vector counts and
+  transform-aware ``up_frac`` (compressed uplinks meter fewer bytes),
 * CSV metrics logging.
 
-Works with any algorithm implementing the FederatedAlgorithm protocol
-(FedCET, FedCET-C, FedCETPartial, FedAvg, SCAFFOLD, FedTrack, FedLin) and
-any model exposing ``loss(params, batch)``.
+Works with any engine algorithm (FedCET — plain, compressed and/or
+sampled via ``with_compression`` / ``with_participation`` — FedAvg,
+SCAFFOLD, FedTrack, FedLin) and any model exposing ``loss(params, batch)``.
 """
 
 from __future__ import annotations
@@ -20,7 +25,6 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-from functools import partial
 from typing import Any, Callable
 
 import jax
@@ -28,7 +32,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint.ckpt import restore, save
 from repro.core.comm import CommMeter
-from repro.utils.tree import tree_num_params
+from repro.core.engine import make_round_runner, scan_segments
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +44,9 @@ class TrainerConfig:
     ckpt_keep: int = 3
     log_csv: str | None = None
     itemsize: int = 4                # transmitted element width (bytes)
+    #: upper bound on rounds per jitted scan segment — bounds the memory
+    #: spent on stacked per-round batches when eval/ckpt are sparse or off.
+    max_scan_rounds: int = 32
 
 
 class FedTrainer:
@@ -48,7 +55,9 @@ class FedTrainer:
         self.loss_fn = loss_fn
         self.cfg = cfg
         self.grad_fn = jax.grad(loss_fn)
-        self._round = jax.jit(partial(algo.round, self.grad_fn))
+        # ONE runner for the whole fit: jit caches a compilation per distinct
+        # segment length, so steady-state segments never retrace.
+        self._runner = make_round_runner(algo, self.grad_fn)
         self._eval_clients = jax.jit(
             lambda xs, b: jax.vmap(loss_fn)(xs, b))
         self._eval_global = jax.jit(
@@ -68,30 +77,44 @@ class FedTrainer:
             return state, 0
         return restored, step
 
+    # ------------------------------------------------------------ schedule
+    def _eval_at(self, r: int) -> bool:
+        return bool(self.cfg.eval_every) and (
+            r % self.cfg.eval_every == 0 or r == self.cfg.rounds - 1)
+
+    def _ckpt_at(self, r: int) -> bool:
+        return bool(self.cfg.ckpt_every and self.cfg.ckpt_dir
+                    and (r + 1) % self.cfg.ckpt_every == 0)
+
     # ------------------------------------------------------------ main loop
     def fit(self, state, batches_for: Callable[[int], Any],
             eval_batch_for: Callable[[int], Any] | None = None,
             start_round: int = 0, callback=None):
-        meter = CommMeter(n_params=tree_num_params(
-            jax.tree.map(lambda a: a[0], state.x
-                         if hasattr(state, "x") else state[0])),
+        meter = CommMeter.for_params(
+            jax.tree.map(lambda a: a[0], self.algo.client_params(state)),
             itemsize=self.cfg.itemsize, n_clients=self.algo.n_clients)
         t0 = time.time()
-        for r in range(start_round, self.cfg.rounds):
-            state = self._round(state, batches_for(r))
-            meter.tick(self.algo.vectors_up, self.algo.vectors_down)
-            if self.cfg.eval_every and (
-                    r % self.cfg.eval_every == 0 or r == self.cfg.rounds - 1):
-                row = self.evaluate(state, eval_batch_for(r)
-                                    if eval_batch_for else batches_for(r))
-                row.update(round=r, comm_bytes=meter.total,
+        for r, stop in scan_segments(
+                start_round, self.cfg.rounds,
+                lambda s: self._eval_at(s) or self._ckpt_at(s),
+                max_rounds=self.cfg.max_scan_rounds):
+            stacked = jax.tree.map(
+                lambda *bs: jnp.stack(bs),
+                *[batches_for(i) for i in range(r, stop + 1)])
+            state, _ = self._runner(state, stacked)
+            for _ in range(r, stop + 1):
+                meter.tick(self.algo.vectors_up, self.algo.vectors_down,
+                           up_frac=getattr(self.algo, "up_frac", 1.0))
+            if self._eval_at(stop):
+                row = self.evaluate(state, eval_batch_for(stop)
+                                    if eval_batch_for else batches_for(stop))
+                row.update(round=stop, comm_bytes=meter.total,
                            wall_s=round(time.time() - t0, 2))
                 self.history.append(row)
                 if callback:
                     callback(row)
-            if (self.cfg.ckpt_every and self.cfg.ckpt_dir
-                    and (r + 1) % self.cfg.ckpt_every == 0):
-                save(self.cfg.ckpt_dir, r + 1, state, keep=self.cfg.ckpt_keep)
+            if self._ckpt_at(stop):
+                save(self.cfg.ckpt_dir, stop + 1, state, keep=self.cfg.ckpt_keep)
         if self.cfg.log_csv:
             self._write_csv()
         return state
@@ -100,7 +123,7 @@ class FedTrainer:
     def evaluate(self, state, batches) -> dict:
         """batches: [tau, clients, ...] — evaluation uses the first slice."""
         b = jax.tree.map(lambda a: a[0], batches)
-        local = self._eval_clients(state.x, b)
+        local = self._eval_clients(self.algo.client_params(state), b)
         global_params = self.algo.global_params(state)
         glob = self._eval_global(global_params, b)
         return {

@@ -20,7 +20,6 @@ Run as a script for a production-launch entry point:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable
 
 import jax
@@ -29,6 +28,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.configs.base import INPUT_SHAPES, ArchConfig
+from repro.core.engine import make_round_runner, scan_segments
 from repro.core.fedcet import FedCET, FedCETState
 from repro.launch import input_specs as ispec
 from repro.launch import partition
@@ -173,26 +173,35 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
         return {"tokens": toks}
 
     state = algo.init(grad_fn, params, jax.tree.map(lambda b: b[0], batches_for(0)))
-    round_fn = jax.jit(partial(algo.round, grad_fn))
+    # the shared multi-round scan driver: rounds between log/checkpoint
+    # boundaries run as one jitted lax.scan segment.
+    runner = make_round_runner(algo, grad_fn)
 
-    mean_loss = jax.jit(lambda st, b: jnp.mean(
-        jax.vmap(model.loss)(st.x, b)))
+    mean_loss = jax.jit(lambda xs, b: jnp.mean(jax.vmap(model.loss)(xs, b)))
+
+    def is_stop(r):
+        return (r % log_every == 0 or r == steps - 1
+                or (ckpt_dir is not None and (r + 1) % 50 == 0))
 
     meter = CommMeter.for_params(params, n_clients=n_clients)
     history = {"round": [], "loss": [], "comm_bytes": []}
-    for r in range(steps):
-        b = batches_for(r)
-        state = round_fn(state, b)
-        meter.tick(algo.vectors_up, algo.vectors_down)
-        if r % log_every == 0 or r == steps - 1:
-            loss = float(mean_loss(state, jax.tree.map(lambda x: x[0], b)))
-            history["round"].append(r)
+    for r, stop in scan_segments(0, steps, is_stop):
+        per_round = [batches_for(i) for i in range(r, stop + 1)]
+        stacked = jax.tree.map(lambda *bs: jnp.stack(bs), *per_round)
+        state, _ = runner(state, stacked)
+        for _ in range(r, stop + 1):
+            meter.tick(algo.vectors_up, algo.vectors_down,
+                       up_frac=getattr(algo, "up_frac", 1.0))
+        if stop % log_every == 0 or stop == steps - 1:
+            loss = float(mean_loss(algo.client_params(state),
+                                   jax.tree.map(lambda x: x[0], per_round[-1])))
+            history["round"].append(stop)
             history["loss"].append(loss)
             history["comm_bytes"].append(meter.total)
             if callback:
-                callback(r, loss, meter.total)
-        if ckpt_dir and (r + 1) % 50 == 0:
-            save(ckpt_dir, r + 1, state)
+                callback(stop, loss, meter.total)
+        if ckpt_dir and (stop + 1) % 50 == 0:
+            save(ckpt_dir, stop + 1, state)
     return history
 
 

@@ -75,15 +75,14 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from repro.launch.mesh import make_test_mesh
 from repro.launch.train import make_plan, lower_train_step, TrainPlan
 from repro.launch import serve
 import dataclasses
 from repro.configs import get_config
 from repro.configs.base import INPUT_SHAPES, ShapeConfig
 
-dev = np.asarray(jax.devices()).reshape(2, 4)
-mesh = Mesh(dev, ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+mesh = make_test_mesh((2, 4), ("data", "model"))
 
 # miniature shapes so the 8-device CPU compile is fast
 INPUT_SHAPES["train_4k"] = ShapeConfig("train_4k", 64, 4, "train")
@@ -111,8 +110,10 @@ def test_small_mesh_lowering_subprocess():
     device-count flag doesn't leak into this test session)."""
     res = subprocess.run(
         [sys.executable, "-c", SMALL_MESH_SCRIPT],
-        capture_output=True, text=True, timeout=420,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             # skip the 60s TPU-backend probe; this is a fake-device CPU test
+             "JAX_PLATFORMS": "cpu"},
         cwd=__file__.rsplit("/tests/", 1)[0],
     )
     assert "TRAIN_OK" in res.stdout, res.stderr[-2000:]
