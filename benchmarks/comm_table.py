@@ -1,19 +1,30 @@
 """Benchmark: Remark-2 communication table — bytes per round per algorithm
 for each assigned architecture's parameter count (the paper's headline:
-FedCET transmits HALF of SCAFFOLD/FedTrack/FedLin at equal round counts)."""
+FedCET transmits HALF of SCAFFOLD/FedTrack/FedLin at equal round counts),
+plus BIT-TRUE bits/round for every compressor stack (the compressor
+subsystem's accounting contract: sparsifiers pay index bits, quantizers
+shrink value bits, seed-synchronized rand-k pays values only)."""
 
 from __future__ import annotations
 
 from repro.configs import ASSIGNED, get_config
-from repro.core import FedAvg, FedCET, FedLin, FedTrack, Scaffold, comm_bytes_per_round
+from repro.core import (
+    FedAvg,
+    FedCET,
+    FedLin,
+    FedTrack,
+    Scaffold,
+    comm_bits_per_round,
+)
 from repro.roofline.flops import param_counts
 
 
-def run(csv_rows=None, n_clients: int = 16):
+def _algos(n_clients: int) -> dict:
     from repro.core import FedCETCompressed, with_compression
 
-    algos = {
-        "fedcet": FedCET(alpha=1e-3, c=0.05, tau=2, n_clients=n_clients),
+    fedcet = lambda: FedCET(alpha=1e-3, c=0.05, tau=2, n_clients=n_clients)  # noqa: E731
+    return {
+        "fedcet": fedcet(),
         "fedavg": FedAvg(alpha=1e-3, tau=2, n_clients=n_clients),
         "scaffold": Scaffold(alpha_l=1e-3, tau=2, n_clients=n_clients),
         "fedtrack": FedTrack(alpha=1e-3, tau=2, n_clients=n_clients),
@@ -22,22 +33,44 @@ def run(csv_rows=None, n_clients: int = 16):
         "fedcet_c_bf16": FedCETCompressed(alpha=1e-3, c=0.05, tau=2,
                                           n_clients=n_clients, quantize=True),
         # the generic engine transform composes onto any algorithm
-        "fedcet_c_top30": with_compression(
-            FedCET(alpha=1e-3, c=0.05, tau=2, n_clients=n_clients), k_frac=0.3),
+        "fedcet_c_top30": with_compression(fedcet(), k_frac=0.3),
+        # first-class compressor stacks (core/compressors.py): per-client
+        # top-k, unbiased rand-k / dithered quantization, DIANA-style shift
+        "fedcet_topk30_pc": with_compression(fedcet(), compressor="topk:0.3"),
+        "fedcet_randk25": with_compression(fedcet(), compressor="randk:0.25"),
+        "fedcet_q8": with_compression(fedcet(), compressor="q8"),
+        "fedcet_shift_q8": with_compression(fedcet(), compressor="shift:q8"),
+        "fedcet_randk50_q8": with_compression(fedcet(),
+                                              compressor="randk:0.5+q8"),
     }
+
+
+def run(csv_rows=None, n_clients: int = 16):
+    algos = _algos(n_clients)
     out = {}
     for arch in ASSIGNED:
         n, _ = param_counts(get_config(arch))
         for name, algo in algos.items():
-            b = comm_bytes_per_round(algo, n, itemsize=2, n_clients=n_clients)
-            # uplink compression fraction, declared by the algorithm itself
-            total = int(b["up"] * algo.up_frac + b["down"])
+            # ONE source of truth per row: the bit-true accounting — bytes
+            # are bits/8 (the old itemsize=2 x up_frac bytes column mixed a
+            # 16-bit dense baseline with fractions relative to f32 and
+            # disagreed with the bits column by 2x for compressed stacks).
+            bits = comm_bits_per_round(algo, n, n_clients=n_clients)
+            total = int(bits["total_bits"] / 8)
             out[(arch, name)] = total
             if csv_rows is not None:
-                csv_rows.append((f"comm/{arch}/{name}", 0.0,
-                                 f"bytes_per_round={total}"))
+                csv_rows.append((
+                    f"comm/{arch}/{name}", 0.0,
+                    f"bytes_per_round={total}"
+                    f";bits_per_round={int(bits['total_bits'])}"
+                    f";up_bits_per_coord={algo.bits_per_coord:g}"))
         assert out[(arch, "fedcet")] * 2 == out[(arch, "scaffold")]
         assert out[(arch, "fedcet")] == out[(arch, "fedavg")]
+        # bit-true sanity: seed-synchronized rand-k pays no index traffic,
+        # so the 25% rand-k uplink is exactly 8 bits/coordinate...
+        assert algos["fedcet_randk25"].bits_per_coord == 8.0
+        # ...while per-client top-k at 30% pays values + int32 indices.
+        assert algos["fedcet_topk30_pc"].bits_per_coord == 0.3 * 64.0
     return out
 
 

@@ -42,7 +42,8 @@ def main():
     eval_b = batches_for(999_999)
 
     # bf16-compressed uplink x sampled clients, composed onto plain FedCET;
-    # the trainer meters bytes through the transform-aware algo.up_frac.
+    # the trainer meters bit-true bytes from the compressor stack's
+    # bits_per_coord (16 bits/coordinate up here, dense f32 down).
     algo = with_participation(
         with_compression(FedCET(alpha=3e-3, c=0.05, tau=args.tau,
                                 n_clients=args.clients), quantize=True),

@@ -4,7 +4,13 @@ Every entry cites its source. ``get_config(name)`` is what ``--arch <id>``
 resolves through.
 """
 
-from repro.configs.base import INPUT_SHAPES, ArchConfig, ShapeConfig, supports_shape
+from repro.configs.base import (
+    INPUT_SHAPES,
+    ArchConfig,
+    FedScenario,
+    ShapeConfig,
+    supports_shape,
+)
 
 
 #: the 10 assigned architectures (fedlm-100m is a paper-side extra and is
@@ -64,6 +70,7 @@ def list_archs() -> list[str]:
 
 __all__ = [
     "ArchConfig",
+    "FedScenario",
     "INPUT_SHAPES",
     "ShapeConfig",
     "get_config",

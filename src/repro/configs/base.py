@@ -124,6 +124,40 @@ class ArchConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class FedScenario:
+    """Launch-level federated-scenario knob: which compressor stack rides
+    the uplink and what fraction of clients participates per round.
+
+    ``compression`` is a spec string for
+    :func:`repro.core.compressors.from_spec` — ``"none"``, ``"bf16"``,
+    ``"topk:0.3"`` (per-client), ``"randk:0.25"``, ``"q8"``,
+    ``"shift:q8"`` (DIANA-style shifted quantization), chains via ``+``
+    (``"randk:0.5+q8"``), ``"ef:"`` prefix to force error feedback.
+    ``error_feedback=None`` auto-wraps biased compressors only.
+
+    ``apply`` composes the scenario onto ANY engine algorithm — the same
+    expression the simulation tests pin, now reachable from the production
+    LM loop (`launch/train.py --compression ... --participation ...`)."""
+
+    compression: str = "none"
+    participation: float = 1.0
+    error_feedback: bool | None = None
+    seed: int = 0
+
+    def apply(self, algo):
+        from repro.core.compressors import from_spec
+        from repro.core.engine import with_compression, with_participation
+
+        algo = with_participation(algo, self.participation, seed=self.seed)
+        comp = from_spec(self.compression)  # one normalizer for the grammar
+        if comp is not None:
+            algo = with_compression(algo, compressor=comp,
+                                    error_feedback=self.error_feedback,
+                                    seed=self.seed)
+        return algo
+
+
+@dataclasses.dataclass(frozen=True)
 class ShapeConfig:
     """One assigned workload shape."""
 

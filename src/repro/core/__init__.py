@@ -3,11 +3,28 @@ the unified round engine + message transforms they all run on."""
 
 from repro.core.api import FederatedAlgorithm, comm_bytes_per_round, replicate, vmap_grads
 from repro.core.baselines import FedAvg, FedLin, FedTrack, Scaffold
-from repro.core.comm import CommMeter, quantize_bf16, topk_sparsify
+from repro.core.comm import (
+    CommMeter,
+    bits_per_coord_of,
+    comm_bits_per_round,
+    quantize_bf16,
+    topk_sparsify,
+)
+from repro.core.compressors import (
+    Bf16,
+    Chain,
+    Compressor,
+    ErrorFeedback,
+    RandK,
+    StochasticQuant,
+    TopK,
+    from_spec,
+)
 from repro.core.engine import (
     ClientSampling,
     EngineState,
     ErrorFeedbackCompression,
+    MessageCompression,
     RoundEngine,
     make_round_runner,
     masked_client_mean,
@@ -28,9 +45,13 @@ from repro.core.lr_search import (
 )
 
 __all__ = [
+    "Bf16",
+    "Chain",
     "ClientSampling",
     "CommMeter",
+    "Compressor",
     "EngineState",
+    "ErrorFeedback",
     "ErrorFeedbackCompression",
     "FedAvg",
     "FedCET",
@@ -40,11 +61,18 @@ __all__ = [
     "FedLin",
     "FedTrack",
     "FederatedAlgorithm",
+    "MessageCompression",
+    "RandK",
     "RoundEngine",
     "Scaffold",
+    "StochasticQuant",
+    "TopK",
     "alpha0_upper_bound",
+    "bits_per_coord_of",
+    "comm_bits_per_round",
     "comm_bytes_per_round",
     "contraction_factors",
+    "from_spec",
     "lr_search",
     "lr_search_validated",
     "make_round_runner",

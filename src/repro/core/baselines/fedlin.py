@@ -57,6 +57,15 @@ class FedLin(RoundEngine):
         g_frac = sparsified_up_frac(self.k_frac) if self.k_frac < 1.0 else 1.0
         return (g_frac + super().up_frac) / 2.0
 
+    @property
+    def bits_per_coord(self) -> float:
+        """Bit-true counterpart of ``up_frac``: the sparsified round-start
+        gradient costs ``k_frac * (32 + 32)`` bits/coord (f32 values +
+        int32 indices); the endpoint message pays the attached transforms."""
+        g_bits = 32.0 * (sparsified_up_frac(self.k_frac)
+                         if self.k_frac < 1.0 else 1.0)
+        return (g_bits + self._transforms_bits(32.0)) / 2.0
+
     def init_warmup(self, gf, x0, init_batch):
         del gf, init_batch
         x = replicate(x0, self.n_clients)

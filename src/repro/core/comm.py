@@ -4,18 +4,26 @@ The paper's headline claim (Remark 2) is a *communication-volume* one:
 FedCET moves ONE n-dimensional vector per client per round where SCAFFOLD /
 FedTrack / FedLin move two. This module provides
 
-* :class:`CommMeter` — declarative byte accounting per round from the
-  algorithm's ``vectors_up`` / ``vectors_down`` and the model size;
+* :class:`CommMeter` — declarative accounting per round from the
+  algorithm's ``vectors_up`` / ``vectors_down`` and the model size. Since
+  the compressor subsystem the meter is BIT-TRUE: construct it with
+  ``for_params(params, algo=...)`` and it derives per-coordinate wire bits
+  from the algorithm's attached compressor stack (``bits_per_coord``) — the
+  old ``itemsize=4`` path silently overcounted bf16/quantized uplinks and
+  is deprecated;
 * ``topk_sparsify`` — magnitude top-k with the complement zeroed (FedLin's
-  uplink sparsifier; also reusable for beyond-paper FedCET compression);
-* ``quantize_bf16`` / error-feedback helpers — a beyond-paper option that
-  halves FedCET's remaining traffic again (recorded separately in
-  EXPERIMENTS.md; the paper itself transmits full-precision vectors).
+  uplink sparsifier; the ``TopK(per_client=False)`` legacy flatten in
+  repro/core/compressors.py is this exact function);
+* ``quantize_bf16`` — the :class:`~repro.core.compressors.Bf16` round-trip.
+
+The first-class compressor objects (TopK, RandK, StochasticQuant, Bf16,
+Chain, ErrorFeedback) live in :mod:`repro.core.compressors`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -24,9 +32,9 @@ from repro.utils.tree import tree_num_params
 
 
 def topk_sparsify(a: jax.Array, k_frac: float) -> jax.Array:
-    """Keep the top ``ceil(k_frac * size)`` entries of |a| (per leaf),
-    zeroing the rest. Shape-preserving; differentiable a.e. (we only use it
-    on gradients, never through it)."""
+    """Keep the top ``round(k_frac * size)`` (min 1) entries of |a| (per
+    leaf), zeroing the rest. Shape-preserving; differentiable a.e. (we only
+    use it on gradients, never through it)."""
     if k_frac >= 1.0:
         return a
     flat = a.reshape(-1)
@@ -42,34 +50,103 @@ def quantize_bf16(a: jax.Array) -> jax.Array:
     return a.astype(jnp.bfloat16).astype(a.dtype)
 
 
+def bits_per_coord_of(algo) -> float:
+    """Bit-true uplink width (bits per model coordinate per UP vector) an
+    algorithm declares; falls back to ``32 * up_frac`` for objects that
+    predate the compressor subsystem."""
+    bits = getattr(algo, "bits_per_coord", None)
+    if bits is not None:
+        return float(bits)
+    return 32.0 * float(getattr(algo, "up_frac", 1.0))
+
+
 @dataclasses.dataclass
 class CommMeter:
-    """Accumulates transmitted bytes across rounds for one algorithm."""
+    """Accumulates transmitted bytes across rounds for one algorithm.
+
+    Two modes:
+
+    * **bit-true** (``bits_up`` set — use ``for_params(params, algo=...)``):
+      per-vector cost is ``n_params * bits_up / 8`` bytes, with ``bits_up``
+      derived from the algorithm's compressor stack. Compression is already
+      folded in — ``tick`` must NOT also be given ``up_frac`` (raises, to
+      catch double counting).
+    * **legacy** (``bits_up`` None): dense ``itemsize`` bytes per
+      coordinate scaled by an explicit ``up_frac`` per tick. Kept for old
+      call sites; the ``itemsize`` kwarg of ``for_params`` is deprecated —
+      it was silently wrong for bf16/quantized uplinks (a 4-byte default
+      regardless of what the compressor put on the wire)."""
 
     n_params: int
     itemsize: int = 4
     n_clients: int = 1
+    bits_up: float | None = None
+    bits_down: float | None = None
     rounds: int = 0
     bytes_up: int = 0
     bytes_down: int = 0
 
     @classmethod
-    def for_params(cls, params, *, itemsize: int = 4, n_clients: int = 1) -> "CommMeter":
-        return cls(n_params=tree_num_params(params), itemsize=itemsize,
+    def for_params(cls, params, *, algo=None, itemsize: int | None = None,
+                   n_clients: int = 1) -> "CommMeter":
+        """Meter for one parameter pytree. Pass ``algo=`` for bit-true
+        accounting from its compressor stack; ``itemsize`` is deprecated."""
+        if itemsize is not None:
+            warnings.warn(
+                "CommMeter.for_params(itemsize=...) is deprecated: it "
+                "assumes a fixed dense width and miscounts compressed "
+                "uplinks. Pass algo= for bit-true accounting.",
+                DeprecationWarning, stacklevel=2)
+        if algo is not None:
+            return cls(n_params=tree_num_params(params), n_clients=n_clients,
+                       bits_up=bits_per_coord_of(algo),
+                       bits_down=32.0 * float(getattr(algo, "down_frac", 1.0)))
+        return cls(n_params=tree_num_params(params),
+                   itemsize=4 if itemsize is None else itemsize,
                    n_clients=n_clients)
 
     def tick(self, vectors_up: int, vectors_down: int, *,
-             up_frac: float = 1.0, down_frac: float = 1.0) -> None:
-        """Record one communication round. ``up_frac`` < 1 models sparsified
-        uplinks (top-k indices+values ~= 2 * k_frac of dense payload)."""
-        per_vec = self.n_params * self.itemsize * self.n_clients
+             up_frac: float | None = None, down_frac: float = 1.0) -> None:
+        """Record one communication round. In legacy mode ``up_frac`` < 1
+        models sparsified uplinks; in bit-true mode the compressed width is
+        already baked into ``bits_up`` and passing ``up_frac`` raises."""
         self.rounds += 1
-        self.bytes_up += int(vectors_up * per_vec * up_frac)
+        if self.bits_up is not None:
+            if up_frac is not None:
+                raise ValueError(
+                    "bit-true CommMeter already folds compression into "
+                    "bits_up; passing up_frac would double-count")
+            per_coord = self.n_params * self.n_clients
+            bits_down = 32.0 if self.bits_down is None else self.bits_down
+            self.bytes_up += int(vectors_up * per_coord * self.bits_up / 8.0)
+            self.bytes_down += int(vectors_down * per_coord
+                                   * bits_down / 8.0 * down_frac)
+            return
+        per_vec = self.n_params * self.itemsize * self.n_clients
+        self.bytes_up += int(vectors_up * per_vec
+                             * (1.0 if up_frac is None else up_frac))
         self.bytes_down += int(vectors_down * per_vec * down_frac)
+
+    def tick_round(self, algo) -> None:
+        """Record one round for ``algo`` using the right mode automatically
+        (the call sites in FedTrainer / launch.train)."""
+        if self.bits_up is not None:
+            self.tick(algo.vectors_up, algo.vectors_down)
+        else:
+            self.tick(algo.vectors_up, algo.vectors_down,
+                      up_frac=getattr(algo, "up_frac", 1.0))
 
     @property
     def total(self) -> int:
         return self.bytes_up + self.bytes_down
+
+
+def comm_bits_per_round(algo, n_params: int, n_clients: int = 1) -> dict:
+    """Bit-true wire bits per communication round (the Remark 2 accounting
+    with the compressor stack folded in; downlink stays dense f32)."""
+    up = algo.vectors_up * n_params * n_clients * bits_per_coord_of(algo)
+    down = algo.vectors_down * n_params * n_clients * 32.0
+    return {"up_bits": up, "down_bits": down, "total_bits": up + down}
 
 
 def sparsified_up_frac(k_frac: float) -> float:

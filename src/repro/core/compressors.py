@@ -1,0 +1,545 @@
+"""First-class message compressors for the federated round engine.
+
+The paper's headline is communication volume (Remark 2: ONE n-vector per
+client per round); this module owns what happens to that vector on the wire.
+A :class:`Compressor` is a stateless ``compress(key, leaf) -> leaf`` object
+attached to an engine algorithm through ``with_compression(...,
+compressor=...)`` (repro/core/engine.py); client-side error feedback is an
+explicit :class:`ErrorFeedback` wrapper whose memory rides in ``EngineState``
+like any other transform extra.
+
+Conventions (shared with the whole repo):
+
+* message leaves are STACKED ``[clients, ...]`` pytrees — axis 0 is the
+  client axis. Per-client compressors (``TopK(per_client=True)``) operate
+  row-wise; ``per_client=False`` keeps the seed's legacy flatten, where
+  top-k competes ACROSS clients (needed for seed-equivalence).
+* stochastic compressors receive a per-round PRNG key derived from the
+  engine state's step counter (never reused across rounds — the same fix
+  PR 1 applied to participation masks) and use randomness that is
+  SYNCHRONIZED across clients: one mask / one dither per round, shared by
+  every client and the server. This buys two things:
+
+  - :class:`RandK` transmits VALUES ONLY (the server regenerates the mask
+    from the shared round seed), so its wire cost is ``32 * k_frac`` bits
+    per coordinate — no index traffic;
+  - FedCET's fixed point survives exactly. The aggregation update depends
+    only on ``msg_i - msg_bar``; with a shared-randomness compressor ``C``,
+    clients at consensus (``v_i = x*`` for all ``i``) transmit identical
+    messages, so ``msg_i - msg_bar = 0`` and the optimum stays a fixed
+    point pathwise. Unbiasedness (``E[C(v)] = v``) keeps the drift update
+    mean-zero along the trajectory. Together these remove the stochastic
+    error floor PR 1 measured for biased compressors under random
+    participation (pinned in tests/test_engine.py).
+
+Accounting contract (the "bit-true" side of the abstraction): every
+compressor declares
+
+* ``keep_frac``   — fraction of coordinates surviving (1.0 for quantizers);
+* ``index_bits``  — position bits per KEPT coordinate (32 for TopK's int32
+  indices, 0 for seed-synchronized RandK);
+* ``value_bits``  — transmitted width of kept values (``None`` = leave the
+  incoming width unchanged — sparsifiers pass values through);
+* ``bits_per_coord`` — exact wire bits per ORIGINAL (dense f32) coordinate,
+  derived from the above; ``up_frac = bits_per_coord / 32``.
+
+:class:`Chain` composes stages left-to-right and accounts exactly: value
+width is set by the last quantizer, index bits accumulate per stage at that
+stage's survival fraction. Per-leaf scalar overheads (one f32 scale per
+leaf for :class:`StochasticQuant`) are O(1) per tensor and excluded.
+
+``from_spec`` parses the launch-config grammar (configs/base.py):
+``"topk:0.3"``, ``"randk:0.25"``, ``"q8"``, ``"bf16"``, chained with ``+``
+(``"topk:0.3+bf16"``), with an optional ``"ef:"`` (error feedback) or
+``"shift:"`` (DIANA-style shifted compression — see :class:`Shifted`)
+prefix around the whole chain.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import quantize_bf16, topk_sparsify
+
+__all__ = [
+    "Bf16",
+    "Chain",
+    "Compressor",
+    "ErrorFeedback",
+    "Identity",
+    "RandK",
+    "Shifted",
+    "StochasticQuant",
+    "TopK",
+    "as_compressor",
+    "from_spec",
+]
+
+
+def _coord_shape(leaf) -> tuple:
+    """The per-client coordinate space of a stacked leaf: axis 0 is ALWAYS
+    the client axis (a ``(n_clients,)`` leaf is a stacked scalar parameter
+    with coordinate space ``()`` — never a per-client draw axis, which
+    would break the synchronized-randomness invariant)."""
+    return tuple(leaf.shape[1:])
+
+
+def _k_of(k_frac: float, n: int) -> int:
+    return max(1, int(round(k_frac * n)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base: a stateless per-leaf transform with declared wire cost.
+
+    Subclasses implement ``compress(key, leaf)`` (``key`` is ``None`` for
+    deterministic compressors — ``requires_key`` gates whether the engine
+    derives one) and override the accounting class attributes."""
+
+    #: does compress() consume a PRNG key (stochastic compressor)?
+    requires_key = False
+    #: is E[compress(v)] = v over the key distribution?
+    unbiased = False
+    #: does apply() carry per-client memory in `extra` (ErrorFeedback /
+    #: Shifted)? Stateful wrappers cannot nest inside another stateful
+    #: wrapper or a Chain — there is one `extra` slot per transform.
+    stateful = False
+
+    # ------------------------------------------------------------ accounting
+    @property
+    def keep_frac(self) -> float:
+        return 1.0
+
+    @property
+    def index_bits(self) -> float:
+        return 0.0
+
+    @property
+    def value_bits(self) -> float | None:
+        """Transmitted width of kept values; None = unchanged (passthrough)."""
+        return None
+
+    @property
+    def bits_per_coord(self) -> float:
+        """Exact wire bits per original dense-f32 coordinate."""
+        return self.keep_frac * ((self.value_bits or 32.0) + self.index_bits)
+
+    @property
+    def up_frac(self) -> float:
+        """Uplink fraction vs a dense f32 payload (bit-true)."""
+        return self.bits_per_coord / 32.0
+
+    @property
+    def omega(self) -> float:
+        """Variance parameter of an unbiased compressor
+        (``E|C(x) - x|^2 <= omega |x|^2``); 0.0 for (near-)deterministic
+        ones. Drives :class:`Shifted`'s stable step ``beta = 1/(1+omega)``."""
+        return 0.0
+
+    # -------------------------------------------------------------- compute
+    def compress(self, key, leaf):
+        raise NotImplementedError
+
+    # ---------------------------------------------- pytree-level application
+    def init_extra(self, msg_shapes):
+        """Per-client carried state (None for stateless compressors)."""
+        del msg_shapes
+        return None
+
+    def apply(self, key, msg, extra):
+        """Compress a message pytree; distinct subkey per leaf."""
+        leaves, treedef = jax.tree.flatten(msg)
+        out = [
+            self.compress(
+                jax.random.fold_in(key, i) if self.requires_key else None, leaf)
+            for i, leaf in enumerate(leaves)
+        ]
+        return jax.tree.unflatten(treedef, out), extra
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    """Exact no-op (useful as a from_spec result and a Chain unit)."""
+
+    def compress(self, key, leaf):
+        del key
+        return leaf
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Magnitude top-k sparsification (biased — pair with ErrorFeedback).
+
+    ``per_client=True`` keeps the top ``round(k_frac * n)`` entries (min 1,
+    matching the seed's ``topk_sparsify`` rounding) of each client's OWN
+    row — the realistic federation semantics. ``False`` reproduces the
+    seed's flatten, where clients compete for the global top-k of the
+    stacked leaf (kept bit-identical for seed equivalence)."""
+
+    k_frac: float
+    per_client: bool = True
+
+    @property
+    def keep_frac(self) -> float:
+        return min(self.k_frac, 1.0)
+
+    @property
+    def index_bits(self) -> float:
+        return 32.0 if self.keep_frac < 1.0 else 0.0
+
+    def compress(self, key, leaf):
+        del key
+        if self.k_frac >= 1.0:
+            return leaf
+        if not self.per_client:
+            return topk_sparsify(leaf, self.k_frac)
+        rows = leaf.reshape(leaf.shape[0], -1)  # axis 0 = clients, always
+        k = _k_of(self.k_frac, rows.shape[1])
+        thresh = jax.lax.top_k(jnp.abs(rows), k)[0][:, -1:]
+        kept = jnp.where(jnp.abs(rows) >= thresh, rows, 0.0)
+        return kept.reshape(leaf.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandK(Compressor):
+    """Uniform random-k sparsification, rescaled by ``n/k`` — UNBIASED.
+
+    Draws one exact-k coordinate mask per round per leaf from the shared
+    round key (all clients + the server regenerate it, so no index bits
+    travel) and rescales kept entries so ``E[compress(v)] = v``."""
+
+    k_frac: float
+
+    requires_key = True
+    unbiased = True
+
+    @property
+    def keep_frac(self) -> float:
+        return min(self.k_frac, 1.0)
+
+    @property
+    def omega(self) -> float:
+        """Classic rand-k variance: E|C(x) - x|^2 = (n/k - 1) |x|^2."""
+        return max(1.0 / self.keep_frac - 1.0, 0.0)
+
+    def compress(self, key, leaf):
+        if self.k_frac >= 1.0:
+            return leaf
+        shape = _coord_shape(leaf)
+        n = math.prod(shape)
+        k = _k_of(self.k_frac, n)
+        # exact-k uniform subset: keep the k largest of n iid uniform scores
+        scores = jax.random.uniform(key, (n,))
+        thresh = jax.lax.top_k(scores, k)[0][-1]
+        mask = (scores >= thresh).reshape(shape)
+        scale = jnp.asarray(n / k, leaf.dtype)
+        return jnp.where(mask, leaf * scale, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class StochasticQuant(Compressor):
+    """Dithered fixed-point quantization to ``bits`` — UNBIASED.
+
+    Per leaf: ``s = max|leaf| / L`` with ``L = 2^(bits-1) - 1`` (one shared
+    scale across clients, so consensus messages quantize identically), then
+    stochastic rounding via a shared uniform dither ``u ~ U[0,1)``:
+    ``q = clip(floor(leaf/s + u), -L, L)``; the round-trip transmits
+    ``q * s``. ``E_u[floor(v + u)] = v`` makes the round-trip unbiased.
+
+    ``use_kernel=True`` routes the round-trip through the Pallas kernel
+    (kernels/quantize.py — interpret mode off-TPU); the default pure-jnp
+    path is the same math as the kernel's ref.py oracle."""
+
+    bits: int = 8
+    use_kernel: bool = False
+
+    requires_key = True
+    unbiased = True
+
+    def __post_init__(self):
+        assert 2 <= self.bits <= 16, self.bits
+
+    @property
+    def value_bits(self) -> float:
+        return float(self.bits)
+
+    def compress(self, key, leaf):
+        levels = 2 ** (self.bits - 1) - 1
+        ct = leaf.dtype if leaf.dtype in (jnp.float32, jnp.float64) \
+            else jnp.float32
+        a = leaf.astype(ct)
+        scale = jnp.max(jnp.abs(a)) / levels
+        u = jnp.broadcast_to(
+            jax.random.uniform(key, _coord_shape(leaf), dtype=ct), a.shape)
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.stochastic_quantize(a, u, scale,
+                                            self.bits).astype(leaf.dtype)
+        inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+        q = jnp.clip(jnp.floor(a * inv + u), -levels, levels)
+        return (q * scale).astype(leaf.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bf16(Compressor):
+    """bfloat16 round-trip (deterministic nearest-even rounding — biased)."""
+
+    @property
+    def value_bits(self) -> float:
+        return 16.0
+
+    def compress(self, key, leaf):
+        del key
+        return quantize_bf16(leaf)
+
+
+@dataclasses.dataclass(frozen=True)
+class Chain(Compressor):
+    """Left-to-right composition: ``Chain((a, b))`` transmits ``b(a(v))``.
+
+    Accounting is exact: the final value width is the last stage that sets
+    one; index bits accumulate per sparsifying stage, weighted by the
+    survival fraction at that stage (e.g. ``TopK(0.3) + Bf16`` costs
+    ``0.3 * (16 + 32)`` bits/coordinate — bf16 values, int32 indices)."""
+
+    stages: tuple
+
+    def __post_init__(self):
+        if any(s.stateful for s in self.stages):
+            raise ValueError("stateful wrappers (ErrorFeedback/Shifted) go "
+                             "AROUND a chain, not inside it")
+
+    @property
+    def requires_key(self):  # type: ignore[override]
+        return any(s.requires_key for s in self.stages)
+
+    @property
+    def unbiased(self):  # type: ignore[override]
+        return all(s.unbiased for s in self.stages) and bool(self.stages)
+
+    @property
+    def keep_frac(self) -> float:
+        return math.prod(s.keep_frac for s in self.stages)
+
+    @property
+    def omega(self) -> float:
+        """Independent unbiased stages compose as 1+w = prod_i (1+w_i)."""
+        return math.prod(1.0 + s.omega for s in self.stages) - 1.0
+
+    @property
+    def index_bits(self) -> float:
+        """Position bits per FINALLY-kept coordinate: each sparsifying
+        stage pays its indices at that stage's survival fraction, then the
+        total is normalized by the end-to-end keep fraction so the base
+        ``keep_frac * (value + index)`` formula reproduces the exact sum
+        (this also lets stacked engine transforms compose chains of
+        chains without losing index bits)."""
+        keep, idx = 1.0, 0.0
+        for s in self.stages:
+            keep *= s.keep_frac
+            idx += keep * s.index_bits
+        return idx / keep if keep > 0 else 0.0
+
+    @property
+    def value_bits(self) -> float | None:
+        vb = None
+        for s in self.stages:
+            if s.value_bits is not None:
+                vb = s.value_bits
+        return vb
+
+    def compress(self, key, leaf):
+        for i, s in enumerate(self.stages):
+            sub = (jax.random.fold_in(key, i)
+                   if (s.requires_key and key is not None) else None)
+            leaf = s.compress(sub, leaf)
+        return leaf
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedback(Compressor):
+    """Client-side error feedback around any inner compressor:
+    ``e += msg; tx = C(e); e -= tx`` — the compression error is re-injected
+    next round instead of lost. The per-client memory ``e`` is transform
+    extra state riding in ``EngineState`` (checkpointed with the run).
+
+    Meant for BIASED inner compressors (TopK/Bf16). Wrapping an unbiased
+    stochastic compressor reintroduces a feedback limit cycle (the floor
+    PR 1 measured for top-k+EF), so ``with_compression``'s auto mode only
+    applies EF when the inner compressor is biased."""
+
+    inner: Compressor
+
+    stateful = True
+
+    def __post_init__(self):
+        if self.inner.stateful:
+            raise ValueError("cannot nest stateful wrappers: "
+                             f"ErrorFeedback({type(self.inner).__name__})")
+
+    @property
+    def requires_key(self):  # type: ignore[override]
+        return self.inner.requires_key
+
+    @property
+    def keep_frac(self) -> float:
+        return self.inner.keep_frac
+
+    @property
+    def index_bits(self) -> float:
+        return self.inner.index_bits
+
+    @property
+    def value_bits(self) -> float | None:
+        return self.inner.value_bits
+
+    @property
+    def bits_per_coord(self) -> float:
+        return self.inner.bits_per_coord
+
+    def compress(self, key, leaf):
+        raise TypeError("ErrorFeedback is stateful; use apply(), not compress()")
+
+    def init_extra(self, msg_shapes):
+        return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), msg_shapes)
+
+    def apply(self, key, msg, extra):
+        carried = jax.tree.map(jnp.add, extra, msg)
+        tx, _ = self.inner.apply(key, carried, None)
+        return tx, jax.tree.map(jnp.subtract, carried, tx)
+
+
+@dataclasses.dataclass(frozen=True)
+class Shifted(Compressor):
+    """DIANA-style shifted compression (the compression-meets-control-variate
+    structure of Mishchenko et al. / the composite-FL line in PAPERS.md):
+    compress the RESIDUAL against a per-client shift ``h`` that both ends
+    track from transmitted data only::
+
+        q  = C(msg - h)        (transmitted payload)
+        tx = h + q             (server-side reconstruction, enters the mean)
+        h' = h + beta * q
+
+    Because :class:`StochasticQuant` scales to ``max|input|``, quantizing
+    the residual makes the quantization step SHRINK as clients converge —
+    this removes the small re-excitation floor that plain dithered
+    quantization sustains under random participation (measured in
+    tests/test_engine.py) while keeping the same wire bits as ``inner``.
+    The shift memory rides in ``EngineState`` and freezes for absent
+    clients, mirroring the server's view (``h`` only advances on rounds the
+    client transmits)."""
+
+    inner: Compressor
+    #: shift step; None = the DIANA-stable ``1/(1 + inner.omega)`` (1.0 for
+    #: quantizers, ``k_frac`` for rand-k — beta=1 over a high-variance
+    #: compressor makes the shift recursion diverge).
+    beta: float | None = None
+
+    stateful = True
+
+    def __post_init__(self):
+        if self.inner.stateful:
+            raise ValueError("cannot nest stateful wrappers: "
+                             f"Shifted({type(self.inner).__name__})")
+
+    @property
+    def step(self) -> float:
+        return 1.0 / (1.0 + self.inner.omega) if self.beta is None else self.beta
+
+    @property
+    def requires_key(self):  # type: ignore[override]
+        return self.inner.requires_key
+
+    @property
+    def unbiased(self):  # type: ignore[override]
+        return self.inner.unbiased
+
+    @property
+    def keep_frac(self) -> float:
+        return self.inner.keep_frac
+
+    @property
+    def index_bits(self) -> float:
+        return self.inner.index_bits
+
+    @property
+    def value_bits(self) -> float | None:
+        return self.inner.value_bits
+
+    @property
+    def bits_per_coord(self) -> float:
+        return self.inner.bits_per_coord
+
+    def compress(self, key, leaf):
+        raise TypeError("Shifted is stateful; use apply(), not compress()")
+
+    def init_extra(self, msg_shapes):
+        return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), msg_shapes)
+
+    def apply(self, key, msg, extra):
+        resid = jax.tree.map(jnp.subtract, msg, extra)
+        q, _ = self.inner.apply(key, resid, None)
+        recon = jax.tree.map(jnp.add, extra, q)
+        b = self.step
+        shift = jax.tree.map(lambda h, qq: h + b * qq, extra, q)
+        return recon, shift
+
+
+# ------------------------------------------------------------------ parsing
+def _parse_stage(tok: str) -> Compressor:
+    name, _, arg = tok.partition(":")
+    name = name.strip().lower()
+    if name == "topk":
+        return TopK(float(arg), per_client=True)
+    if name == "topk_global":
+        return TopK(float(arg), per_client=False)
+    if name == "randk":
+        return RandK(float(arg))
+    if name in ("quant", "q"):
+        return StochasticQuant(bits=int(arg))
+    if name.startswith("q") and name[1:].isdigit():
+        return StochasticQuant(bits=int(name[1:]))
+    if name == "bf16":
+        return Bf16()
+    raise ValueError(f"unknown compressor spec {tok!r} (try topk:0.3, "
+                     "topk_global:0.3, randk:0.25, q8, bf16, ef:..., a+b)")
+
+
+def from_spec(spec: str | Compressor | None) -> Compressor | None:
+    """Parse a launch-config compression spec into a Compressor (or None).
+
+    Grammar: ``none`` | stage (``+`` stage)* with an optional ``ef:`` or
+    ``shift:`` prefix (error feedback / DIANA shift around the whole chain).
+    Stages: ``topk:<frac>`` (per-client), ``topk_global:<frac>`` (legacy
+    cross-client), ``randk:<frac>``, ``q<bits>``/``quant:<bits>``, ``bf16``.
+    Examples: ``"randk:0.25"``, ``"ef:topk:0.3+bf16"``, ``"shift:q8"``."""
+    if spec is None or isinstance(spec, Compressor):
+        return spec
+    s = spec.strip().lower()
+    if s in ("", "none", "off"):
+        return None
+    wrap = None
+    if s.startswith("ef:"):
+        wrap, s = ErrorFeedback, s[3:]
+    elif s.startswith("shift:"):
+        wrap, s = Shifted, s[6:]
+    stages = tuple(_parse_stage(tok) for tok in s.split("+") if tok.strip())
+    if not stages:
+        raise ValueError(f"empty compressor spec {spec!r} (a bare ef:/shift: "
+                         "prefix would wrap a no-op in model-size memory)")
+    comp: Compressor = stages[0] if len(stages) == 1 else Chain(stages)
+    return wrap(comp) if wrap else comp
+
+
+def as_compressor(obj: Any) -> Compressor:
+    """Coerce a Compressor or spec string; reject None/unknown types."""
+    comp = from_spec(obj)
+    if not isinstance(comp, Compressor):
+        raise TypeError(f"not a compressor: {obj!r}")
+    return comp

@@ -35,10 +35,15 @@ Message transforms & composition
 algorithm without forking its round body, and compose in either order::
 
     algo = with_compression(with_participation(FedCET(...), 0.5), k_frac=0.3)
+    algo = with_compression(algo2, compressor="randk:0.25")  # unbiased
 
-* ``with_compression`` inserts an error-feedback compressor into the message
-  path: ``e += msg; tx = C(e); e -= tx``. The per-client feedback memory
-  rides along in an :class:`EngineState` wrapper. Crucially the spec's
+* ``with_compression`` inserts a :class:`repro.core.compressors.Compressor`
+  stack into the message path (the legacy ``k_frac=``/``quantize=`` kwargs
+  are sugar for the seed's cross-client top-k + bf16 chain under error
+  feedback: ``e += msg; tx = C(e); e -= tx``). Transform state such as the
+  per-client feedback memory rides along in an :class:`EngineState` wrapper;
+  stochastic compressors draw a fresh PRNG key per round from the state's
+  step counter (via :class:`MessageCompression`). Crucially the spec's
   ``server_aggregate`` receives the client's own COMPRESSED message as
   ``msg`` — FedCET's drift update ``d += c (msg - msg_bar)`` therefore stays
   mean-zero across clients (``sum_i (tx_i - mean tx) = 0``), preserving the
@@ -74,7 +79,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.api import GradFn, vmap_grads
-from repro.core.comm import quantize_bf16, sparsified_up_frac, topk_sparsify
+from repro.core.comm import sparsified_up_frac
 from repro.utils.tree import tree_client_mean
 
 
@@ -128,12 +133,83 @@ def select_clients(new, old, mask: jax.Array, n_clients: int):
 
 
 # ---------------------------------------------------------------- transforms
+#: domain-separation tag folded into compression keys so they never collide
+#: with the participation-mask key schedule (both default to seed=0).
+_COMPRESS_KEY_TAG = 0x7A11A5
+
+
+@dataclasses.dataclass(frozen=True)
+class MessageCompression:
+    """Message transform adapting a :class:`repro.core.compressors.Compressor`
+    (possibly ``ErrorFeedback``-wrapped) into the engine's message path.
+
+    Owns the per-round PRNG schedule for stochastic compressors: the key is
+    ``fold_in(fold_in(key(seed), TAG), step)`` where ``step`` is the state's
+    step counter at round entry (advanced by exactly ``tau`` per round, -1
+    at the warm-up aggregation) — a fresh key every round, deterministic
+    under restart, never shared with the participation mask schedule.
+    Randomness is synchronized across clients (see compressors.py: this is
+    what makes unbiased compressors preserve the FedCET fixed point and
+    lets RandK skip index traffic)."""
+
+    compressor: Any
+    seed: int = 0
+    #: position in the algorithm's transform stack, folded into the key so
+    #: two stacked stochastic transforms at the same (default) seed never
+    #: replay each other's randomness (which would de-unbias them).
+    index: int = 0
+
+    @property
+    def up_frac(self) -> float:
+        return self.compressor.up_frac
+
+    @property
+    def bits_per_coord(self) -> float:
+        return self.compressor.bits_per_coord
+
+    @property
+    def keep_frac(self) -> float:
+        return self.compressor.keep_frac
+
+    @property
+    def index_bits(self) -> float:
+        return self.compressor.index_bits
+
+    @property
+    def value_bits(self) -> float | None:
+        return self.compressor.value_bits
+
+    @property
+    def unbiased(self) -> bool:
+        return getattr(self.compressor, "unbiased", False)
+
+    def init_extra(self, msg_shapes):
+        return self.compressor.init_extra(msg_shapes)
+
+    def apply(self, msg, extra, step):
+        key = None
+        if self.compressor.requires_key:
+            key = jax.random.fold_in(
+                jax.random.key(self.seed), _COMPRESS_KEY_TAG + self.index)
+            key = jax.random.fold_in(key, jnp.asarray(step, jnp.int32))
+        return self.compressor.apply(key, msg, extra)
+
+
 @dataclasses.dataclass(frozen=True)
 class ErrorFeedbackCompression:
-    """Message transform: top-k sparsification and/or bf16 quantization of
-    the transmitted pytree, with optional client-side error feedback
-    (``e += msg; tx = C(e); e -= tx``) so the compression error is
-    re-injected next round instead of lost."""
+    """Legacy message transform (the seed's scheme, kept as construction
+    sugar with its exact semantics): cross-client top-k sparsification
+    and/or bf16 quantization with optional client-side error feedback.
+
+    Since the compressor subsystem this is a thin shim over
+    ``ErrorFeedback(Chain((TopK(k_frac, per_client=False), Bf16())))`` —
+    the compress path is bit-identical to the seed (seed-equivalence tests
+    pin it to <= 1e-12). ``up_frac`` keeps the seed's APPROXIMATE accounting
+    ("bf16 halves whatever remains") for backward compatibility;
+    ``bits_per_coord`` reports the bit-true cost (bf16 halves VALUES only —
+    top-k index traffic stays int32), which is what ``CommMeter`` now
+    meters. New code should pass ``with_compression(..., compressor=...)``
+    objects instead."""
 
     k_frac: float = 1.0
     quantize: bool = False
@@ -148,26 +224,42 @@ class ErrorFeedbackCompression:
             frac = min(0.5 * frac, 0.5)
         return min(frac, 1.0)
 
-    def _compress_leaf(self, a: jax.Array) -> jax.Array:
-        out = a
+    def _compressor(self):
+        from repro.core.compressors import (
+            Bf16, Chain, ErrorFeedback, Identity, TopK)
+
+        stages = []
         if self.k_frac < 1.0:
-            out = topk_sparsify(out, self.k_frac)
+            stages.append(TopK(self.k_frac, per_client=False))
         if self.quantize:
-            out = quantize_bf16(out)
-        return out
+            stages.append(Bf16())
+        comp = (stages[0] if len(stages) == 1
+                else Chain(tuple(stages)) if stages else Identity())
+        return ErrorFeedback(comp) if self.error_feedback else comp
+
+    @property
+    def bits_per_coord(self) -> float:
+        return self._compressor().bits_per_coord
+
+    @property
+    def keep_frac(self) -> float:
+        return self._compressor().keep_frac
+
+    @property
+    def index_bits(self) -> float:
+        return self._compressor().index_bits
+
+    @property
+    def value_bits(self) -> float | None:
+        return self._compressor().value_bits
 
     def init_extra(self, msg_shapes):
         """Feedback memory, shaped like the message (from ``eval_shape``)."""
-        if not self.error_feedback:
-            return None
-        return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), msg_shapes)
+        return self._compressor().init_extra(msg_shapes)
 
-    def apply(self, msg, extra):
-        if not self.error_feedback:
-            return jax.tree.map(self._compress_leaf, msg), None
-        carried = jax.tree.map(jnp.add, extra, msg)
-        tx = jax.tree.map(self._compress_leaf, carried)
-        return tx, jax.tree.map(jnp.subtract, carried, tx)
+    def apply(self, msg, extra, step):
+        del step  # deterministic stack
+        return self._compressor().apply(None, msg, extra)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -230,6 +322,37 @@ class RoundEngine:
             frac *= getattr(t, "up_frac", 1.0)
         return frac
 
+    def _transforms_bits(self, bits: float = 32.0) -> float:
+        """Fold the attached transforms' bit-true cost onto a dense width.
+
+        Stacked transforms compose like Chain stages — via their
+        (keep_frac, index_bits, value_bits) triple, NOT by multiplying
+        total fractions (that would wrongly scale a sparsifier's int32
+        index bits by a later quantizer's value fraction: top-k 30% then
+        q8 is 0.3*(8+32)=12 bits/coord, not 32*0.6*0.25)."""
+        keep, idx, value = 1.0, 0.0, bits
+        for t in self.transforms:
+            kf = getattr(t, "keep_frac", None)
+            if kf is None:  # unknown transform: coarse fractional fallback
+                per = getattr(t, "bits_per_coord", None)
+                per = 32.0 * getattr(t, "up_frac", 1.0) if per is None else per
+                value *= per / 32.0
+                continue
+            keep *= kf
+            idx += keep * t.index_bits
+            vb = t.value_bits
+            if vb is not None:
+                value = vb
+        return keep * value + idx
+
+    @property
+    def bits_per_coord(self) -> float:
+        """Bit-true average wire bits per model coordinate per UP vector,
+        derived from the attached compressor stack (32.0 when dense).
+        Specs with internal compression (FedLin's round-start top-k)
+        override this alongside ``up_frac``."""
+        return self._transforms_bits(32.0)
+
     @property
     def down_frac(self) -> float:
         return 1.0
@@ -262,13 +385,16 @@ class RoundEngine:
         msg_shapes = jax.eval_shape(msg_of, inner, init_batch)
         return tuple(t.init_extra(msg_shapes) for t in self.transforms)
 
-    def _comm_step(self, gf, inner, extras, batch, rctx, agg):
+    def _comm_step(self, gf, inner, extras, batch, rctx, agg, step):
         """The single aggregating step: message -> transforms -> reduce ->
-        apply. The only place a cross-client collective fires."""
+        apply. The only place a cross-client collective fires. ``step`` is
+        the state's step counter at round entry — stochastic transforms
+        derive their per-round PRNG key from it (never reused across
+        rounds; stack multiple stochastic transforms with distinct seeds)."""
         msg, mctx = self.message(gf, inner, batch, rctx)
         new_extras = []
         for t, e in zip(self.transforms, extras):
-            msg, e = t.apply(msg, e)
+            msg, e = t.apply(msg, e, step)
             new_extras.append(e)
         msg_bar = agg(msg)
         inner = self.server_aggregate(inner, msg, msg_bar, mctx, rctx)
@@ -284,7 +410,8 @@ class RoundEngine:
         extras = self._init_extras(gf, inner, init_batch)
         if run_comm:
             inner, extras = self._comm_step(gf, inner, extras, init_batch,
-                                            rctx=None, agg=tree_client_mean)
+                                            rctx=None, agg=tree_client_mean,
+                                            step=inner.t)
         return self._wrap(inner, extras)
 
     def round(self, grad_fn: GradFn, state, batches):
@@ -298,6 +425,7 @@ class RoundEngine:
         gf = self._grad(grad_fn)
         inner, extras = self._split(state)
 
+        step0 = inner.t  # round-entry counter: keys masks AND compressors
         mask = None
         agg = tree_client_mean
         if self.sampling is not None:
@@ -319,7 +447,8 @@ class RoundEngine:
             inner, _ = jax.lax.scan(body, inner, local_b)
 
         last_b = jax.tree.map(lambda b: b[self.tau - 1], batches)
-        inner, extras = self._comm_step(gf, inner, extras, last_b, rctx, agg)
+        inner, extras = self._comm_step(gf, inner, extras, last_b, rctx, agg,
+                                        step=step0)
 
         if mask is not None:
             # absent clients keep their pre-round state entirely
@@ -340,15 +469,51 @@ def with_participation(algo: RoundEngine, rate: float, seed: int = 0) -> RoundEn
 
 def with_compression(algo: RoundEngine, *, k_frac: float = 1.0,
                      quantize: bool = False,
-                     error_feedback: bool = True) -> RoundEngine:
+                     error_feedback: bool | None = None,
+                     compressor=None, seed: int = 0) -> RoundEngine:
     """Compressed uplink for ANY engine algorithm's message path.
-    ``k_frac >= 1.0 and not quantize`` is an exact no-op (returns ``algo``
-    unchanged). Transforms stack: the last one attached compresses the
-    output of the previous one."""
+
+    Two entry forms:
+
+    * ``compressor=`` — a :class:`repro.core.compressors.Compressor` object
+      or spec string (``"randk:0.25"``, ``"topk:0.3+bf16"``, ``"q8"``, ...).
+      ``error_feedback=None`` (the default) wraps BIASED compressors in
+      :class:`~repro.core.compressors.ErrorFeedback` and leaves unbiased
+      ones bare (EF around an unbiased compressor reintroduces a feedback
+      limit cycle); pass True/False to force. ``seed`` keys the per-round
+      randomness of stochastic compressors.
+    * legacy ``k_frac=`` / ``quantize=`` — the seed's cross-client top-k +
+      bf16 error-feedback scheme, bit-identical to the original
+      (``error_feedback=None`` means True here). ``k_frac >= 1.0 and not
+      quantize`` is an exact no-op (returns ``algo`` unchanged).
+
+    Transforms stack: the last one attached compresses the output of the
+    previous one."""
+    if compressor is not None:
+        if k_frac < 1.0 or quantize:
+            raise ValueError(
+                "pass EITHER compressor= or the legacy k_frac=/quantize= "
+                "kwargs, not both (the legacy pair would be silently "
+                f"ignored): compressor={compressor!r}, k_frac={k_frac}, "
+                f"quantize={quantize}")
+        from repro.core.compressors import ErrorFeedback, from_spec
+
+        comp = from_spec(compressor)
+        if comp is None:  # the "none" spec — exact no-op, like k_frac=1.0
+            return algo
+        # auto mode: EF around biased STATELESS compressors only — wrapping
+        # a Shifted/ErrorFeedback would clobber its extra slot.
+        ef = ((not comp.unbiased and not comp.stateful)
+              if error_feedback is None else error_feedback)
+        if ef and not isinstance(comp, ErrorFeedback):
+            comp = ErrorFeedback(comp)  # raises if comp is stateful
+        t = MessageCompression(comp, seed=seed, index=len(algo.transforms))
+        return dataclasses.replace(algo, transforms=algo.transforms + (t,))
     if k_frac >= 1.0 and not quantize:
         return algo
-    t = ErrorFeedbackCompression(k_frac=k_frac, quantize=quantize,
-                                 error_feedback=error_feedback)
+    t = ErrorFeedbackCompression(
+        k_frac=k_frac, quantize=quantize,
+        error_feedback=True if error_feedback is None else error_feedback)
     return dataclasses.replace(algo, transforms=algo.transforms + (t,))
 
 

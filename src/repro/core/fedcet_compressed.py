@@ -43,13 +43,20 @@ __all__ = ["ErrorFeedbackCompression", "FedCETCompressed"]
 
 def FedCETCompressed(alpha: float, c: float, tau: int, n_clients: int,
                      k_frac: float = 1.0, quantize: bool = False,
-                     error_feedback: bool = True,
+                     error_feedback: bool | None = None,
+                     compressor=None, seed: int = 0,
                      name: str = "fedcet_c", **engine_kw) -> RoundEngine:
     """Compressed-uplink FedCET: ``with_compression`` over the FedCET spec.
 
-    ``k_frac=1.0, quantize=False`` is an exact no-op — the returned
-    algorithm IS plain FedCET (bit-identical iterates)."""
+    ``k_frac=1.0, quantize=False`` (and no ``compressor``) is an exact
+    no-op — the returned algorithm IS plain FedCET (bit-identical
+    iterates). ``compressor=`` takes any first-class compressor object or
+    spec string (``"randk:0.25"``, ``"ef:topk:0.3+bf16"``, ``"q8"``) from
+    :mod:`repro.core.compressors`; ``error_feedback=None`` auto-wraps
+    biased compressors only (the legacy ``k_frac``/``quantize`` path always
+    defaults to feedback on, exactly as before)."""
     base = FedCET(alpha=alpha, c=c, tau=tau, n_clients=n_clients, name=name,
                   **engine_kw)
     return with_compression(base, k_frac=k_frac, quantize=quantize,
-                            error_feedback=error_feedback)
+                            error_feedback=error_feedback,
+                            compressor=compressor, seed=seed)

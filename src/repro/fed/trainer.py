@@ -10,9 +10,11 @@ Responsibilities a real deployment needs beyond the algorithm step:
   losses (the heterogeneity gap — mean local minus global — is the
   practical drift diagnostic),
 * checkpoint/resume of the FULL algorithm state (round counter and any
-  transform state such as error-feedback memory included),
-* communication metering via the algorithm's declared vector counts and
-  transform-aware ``up_frac`` (compressed uplinks meter fewer bytes),
+  transform state such as error-feedback / shift memory included),
+* BIT-TRUE communication metering via the algorithm's declared vector
+  counts and its compressor stack's ``bits_per_coord`` (a bf16 uplink
+  meters 16 bits/coordinate, ``randk:0.25`` meters 8 — the old fixed
+  ``itemsize`` bytes silently overcounted compressed uplinks),
 * CSV metrics logging.
 
 Works with any engine algorithm (FedCET — plain, compressed and/or
@@ -43,7 +45,10 @@ class TrainerConfig:
     ckpt_dir: str | None = None
     ckpt_keep: int = 3
     log_csv: str | None = None
-    itemsize: int = 4                # transmitted element width (bytes)
+    #: DEPRECATED: fixed transmitted element width (bytes). None (default)
+    #: meters bit-true from the algorithm's compressor stack; setting a
+    #: value forces the legacy dense-itemsize accounting.
+    itemsize: int | None = None
     #: upper bound on rounds per jitted scan segment — bounds the memory
     #: spent on stacked per-round batches when eval/ckpt are sparse or off.
     max_scan_rounds: int = 32
@@ -90,9 +95,13 @@ class FedTrainer:
     def fit(self, state, batches_for: Callable[[int], Any],
             eval_batch_for: Callable[[int], Any] | None = None,
             start_round: int = 0, callback=None):
-        meter = CommMeter.for_params(
-            jax.tree.map(lambda a: a[0], self.algo.client_params(state)),
-            itemsize=self.cfg.itemsize, n_clients=self.algo.n_clients)
+        params1 = jax.tree.map(lambda a: a[0], self.algo.client_params(state))
+        if self.cfg.itemsize is None:
+            meter = CommMeter.for_params(params1, algo=self.algo,
+                                         n_clients=self.algo.n_clients)
+        else:  # legacy fixed-width accounting (deprecated)
+            meter = CommMeter.for_params(params1, itemsize=self.cfg.itemsize,
+                                         n_clients=self.algo.n_clients)
         t0 = time.time()
         for r, stop in scan_segments(
                 start_round, self.cfg.rounds,
@@ -103,8 +112,7 @@ class FedTrainer:
                 *[batches_for(i) for i in range(r, stop + 1)])
             state, _ = self._runner(state, stacked)
             for _ in range(r, stop + 1):
-                meter.tick(self.algo.vectors_up, self.algo.vectors_down,
-                           up_frac=getattr(self.algo, "up_frac", 1.0))
+                meter.tick_round(self.algo)
             if self._eval_at(stop):
                 row = self.evaluate(state, eval_batch_for(stop)
                                     if eval_batch_for else batches_for(stop))

@@ -62,6 +62,21 @@ def ssd_intra(x, dt, a_cs, Bm, Cm):
     return K2.ssd_intra(x, dt, a_cs, Bm, Cm, interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("bits",))
+def stochastic_quantize(a, u, scale, bits: int):
+    """Fused dithered-quantize round-trip (see kernels/quantize.py;
+    oracle: kernels/ref.py:stochastic_quantize). ``u`` is the uniform
+    dither (same shape as ``a``), ``scale`` the scalar per-leaf step."""
+    from repro.kernels import quantize as KQ
+
+    t_a, n = _tile(a)
+    t_u, _ = _tile(u)
+    t_s = jnp.asarray(scale, a.dtype).reshape(1, 1)  # scalar block, not a stream
+    out = KQ.stochastic_quantize_2d(t_a, t_u, t_s, bits=bits,
+                                    interpret=_interpret())
+    return _untile(out, n, a.shape)
+
+
 @functools.partial(jax.jit, static_argnames=("c", "alpha"))
 def fedcet_comm(d, v, v_bar, c: float, alpha: float):
     """Fused FedCET aggregation pair (see kernels/ref.py:fedcet_comm)."""

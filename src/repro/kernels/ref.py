@@ -37,6 +37,19 @@ def ssd_intra(x, dt, a_cs, Bm, Cm):
     return y.astype(x.dtype)
 
 
+def stochastic_quantize(a, u, scale, bits: int):
+    """Dithered fixed-point quantize round-trip (kernels/quantize.py oracle).
+
+    ``u ~ U[0,1)`` dither, ``scale`` = per-leaf step (max|a| / levels):
+    ``out = scale * clip(floor(a/scale + u), -levels, levels)``; unbiased
+    because ``E_u[floor(v + u)] = v``. ``scale == 0`` maps everything to 0.
+    """
+    levels = 2 ** (bits - 1) - 1
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.floor(a * inv + u), -levels, levels)
+    return q * scale
+
+
 def topk_mask(x, k: int):
     """Magnitude top-k (per flattened leaf): keep the k largest |x|."""
     flat = x.reshape(-1)

@@ -27,8 +27,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
-from repro.configs.base import INPUT_SHAPES, ArchConfig
-from repro.core.engine import make_round_runner, scan_segments
+from repro.configs.base import INPUT_SHAPES, ArchConfig, FedScenario
+from repro.core.engine import EngineState, make_round_runner, scan_segments
 from repro.core.fedcet import FedCET, FedCETState
 from repro.launch import input_specs as ispec
 from repro.launch import partition
@@ -40,7 +40,7 @@ from repro.utils.sharding_ctx import activation_sharding
 @dataclasses.dataclass(frozen=True)
 class TrainPlan:
     cfg: ArchConfig
-    algo: FedCET
+    algo: Any  # FedCET, possibly wrapped by scenario transforms
     mesh: Any
     n_clients: int
     per_client_batch: int
@@ -53,7 +53,8 @@ class TrainPlan:
 
 def make_plan(arch: str, mesh, *, shape_name: str = "train_4k",
               tau: int = 2, alpha: float = 1e-3, c: float = 0.05,
-              dtype: str = "bfloat16") -> TrainPlan:
+              dtype: str = "bfloat16",
+              scenario: FedScenario | None = None) -> TrainPlan:
     from repro.launch.overrides import distribution_for, train_mesh_view
 
     cfg = get_config(arch).with_dtype(dtype)
@@ -64,6 +65,8 @@ def make_plan(arch: str, mesh, *, shape_name: str = "train_4k",
     assert shp.global_batch % nc == 0, (shp.global_batch, nc)
     algo = FedCET(alpha=alpha, c=c, tau=tau, n_clients=nc,
                   spmd_client_axes=client_axes(mesh))
+    if scenario is not None:
+        algo = scenario.apply(algo)
     return TrainPlan(cfg=cfg, algo=algo, mesh=mesh, n_clients=nc,
                      per_client_batch=shp.global_batch // nc,
                      seq_len=shp.seq_len)
@@ -73,25 +76,41 @@ def _fsdp(plan: TrainPlan) -> str | None:
     return "fsdp" if "fsdp" in plan.mesh.axis_names else None
 
 
-def state_shardings(plan: TrainPlan, state_shapes) -> FedCETState:
-    """Shardings for FedCETState: x and d are stacked-client param trees."""
+def state_shardings(plan: TrainPlan, state_shapes):
+    """Shardings for the algorithm state: x and d are stacked-client param
+    trees; transform extras (error-feedback / shift memory) are
+    message-shaped — the same stacked layout as x — and shard identically."""
     mesh, tp, ca = plan.mesh, tp_size(plan.mesh), plan.client_axes
-    x_sh = partition.tree_shardings(state_shapes.x, mesh, tp, ca,
-                                    extra_axis=_fsdp(plan))
-    d_sh = partition.tree_shardings(state_shapes.d, mesh, tp, ca,
-                                    extra_axis=_fsdp(plan))
-    t_sh = NamedSharding(mesh, P())
-    return FedCETState(x=x_sh, d=d_sh, t=t_sh)
+    inner_shapes = (state_shapes.inner
+                    if isinstance(state_shapes, EngineState) else state_shapes)
+    tree_sh = lambda tree: partition.tree_shardings(  # noqa: E731
+        tree, mesh, tp, ca, extra_axis=_fsdp(plan))
+    inner_sh = FedCETState(x=tree_sh(inner_shapes.x), d=tree_sh(inner_shapes.d),
+                           t=NamedSharding(mesh, P()))
+    if not isinstance(state_shapes, EngineState):
+        return inner_sh
+    extras_sh = tuple(None if e is None else tree_sh(e)
+                      for e in state_shapes.extras)
+    return EngineState(inner=inner_sh, extras=extras_sh)
 
 
-def abstract_state(plan: TrainPlan) -> FedCETState:
-    """Shape-only FedCETState (no allocation) for AOT lowering."""
+def abstract_state(plan: TrainPlan):
+    """Shape-only algorithm state (no allocation) for AOT lowering:
+    FedCETState, wrapped in EngineState when the plan's scenario attaches
+    message transforms (extras shaped via ``eval_shape`` over each
+    transform's ``init_extra`` on the message = x-shaped tree)."""
     model = build_model(plan.cfg)
     params = jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
     stack = lambda tree: jax.tree.map(
         lambda a: jax.ShapeDtypeStruct((plan.n_clients,) + a.shape, a.dtype), tree)
-    return FedCETState(x=stack(params), d=stack(params),
-                       t=jax.ShapeDtypeStruct((), jnp.int64))
+    inner = FedCETState(x=stack(params), d=stack(params),
+                        t=jax.ShapeDtypeStruct((), jnp.int64))
+    transforms = getattr(plan.algo, "transforms", ())
+    if not transforms:
+        return inner
+    extras = tuple(jax.eval_shape(lambda t=t: t.init_extra(inner.x))
+                   for t in transforms)
+    return EngineState(inner=inner, extras=extras)
 
 
 def build_round_fn(plan: TrainPlan) -> Callable:
@@ -150,10 +169,17 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
                  n_clients: int = 4, batch: int = 8, seq_len: int = 128,
                  alpha: float = 3e-3, c: float = 0.05, heterogeneity: float = 0.8,
                  reduced: bool = True, seed: int = 0,
+                 compression: str = "none", participation: float = 1.0,
                  log_every: int = 10, ckpt_dir: str | None = None,
                  callback=None) -> dict:
     """End-to-end FedCET LM training on the host device(s). Returns metrics
-    history. Used by examples/fed_train_lm.py."""
+    history. Used by examples/fed_train_lm.py.
+
+    ``compression`` (a compressor spec — ``"randk:0.25"``, ``"shift:q8"``,
+    ``"ef:topk:0.3+bf16"``, ...) and ``participation`` compose the
+    corresponding engine transforms onto the FedCET spec, so the production
+    LM loop runs any scenario the simulation tests pin; comm metering is
+    bit-true from the resulting compressor stack."""
     from repro.checkpoint.ckpt import save
     from repro.core.comm import CommMeter
     from repro.data.synthetic import make_hetero_lm_dataset
@@ -163,7 +189,9 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.key(seed))
-    algo = FedCET(alpha=alpha, c=c, tau=tau, n_clients=n_clients)
+    scenario = FedScenario(compression=compression,
+                           participation=participation, seed=seed)
+    algo = scenario.apply(FedCET(alpha=alpha, c=c, tau=tau, n_clients=n_clients))
     ds = make_hetero_lm_dataset(cfg.vocab_size, n_clients, seq_len, batch,
                                 heterogeneity=heterogeneity, seed=seed)
     grad_fn = jax.grad(model.loss)
@@ -183,15 +211,14 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
         return (r % log_every == 0 or r == steps - 1
                 or (ckpt_dir is not None and (r + 1) % 50 == 0))
 
-    meter = CommMeter.for_params(params, n_clients=n_clients)
+    meter = CommMeter.for_params(params, algo=algo, n_clients=n_clients)
     history = {"round": [], "loss": [], "comm_bytes": []}
     for r, stop in scan_segments(0, steps, is_stop):
         per_round = [batches_for(i) for i in range(r, stop + 1)]
         stacked = jax.tree.map(lambda *bs: jnp.stack(bs), *per_round)
         state, _ = runner(state, stacked)
         for _ in range(r, stop + 1):
-            meter.tick(algo.vectors_up, algo.vectors_down,
-                       up_frac=getattr(algo, "up_frac", 1.0))
+            meter.tick_round(algo)
         if stop % log_every == 0 or stop == steps - 1:
             loss = float(mean_loss(algo.client_params(state),
                                    jax.tree.map(lambda x: x[0], per_round[-1])))
@@ -218,12 +245,18 @@ def main(argv=None):
     ap.add_argument("--alpha", type=float, default=3e-3)
     ap.add_argument("--full", action="store_true",
                     help="use the full (non-reduced) architecture")
+    ap.add_argument("--compression", default="none",
+                    help="uplink compressor spec: none | bf16 | topk:0.3 | "
+                         "randk:0.25 | q8 | shift:q8 | randk:0.5+q8 | ef:...")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="per-round Bernoulli client participation rate")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
     hist = run_training(
         args.arch, steps=args.steps, tau=args.tau, n_clients=args.clients,
         batch=args.batch, seq_len=args.seq_len, alpha=args.alpha,
         reduced=not args.full, ckpt_dir=args.ckpt_dir,
+        compression=args.compression, participation=args.participation,
         callback=lambda r, l, b: print(f"round {r:5d}  loss {l:.4f}  comm {b/1e6:.1f} MB"))
     print("final loss:", hist["loss"][-1])
 

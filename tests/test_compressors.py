@@ -1,0 +1,344 @@
+"""The first-class compressor subsystem (repro/core/compressors.py).
+
+Covers the accounting contract (bit-true bits_per_coord / up_frac /
+omega), statistical unbiasedness of RandK / StochasticQuant, per-client
+vs legacy cross-client top-k, the per-round PRNG key schedule threaded
+through MessageCompression, the spec-string parser, the bit-true
+CommMeter, and the FedScenario launch knob."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CommMeter, FedCET, with_compression
+from repro.core.comm import bits_per_coord_of, comm_bits_per_round, topk_sparsify
+from repro.core.compressors import (
+    Bf16,
+    Chain,
+    ErrorFeedback,
+    Identity,
+    RandK,
+    Shifted,
+    StochasticQuant,
+    TopK,
+    as_compressor,
+    from_spec,
+)
+from repro.core.engine import ErrorFeedbackCompression, MessageCompression
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _leaf(key, clients=6, dim=40):
+    return jax.random.normal(key, (clients, dim))
+
+
+# ------------------------------------------------------------- unbiasedness
+@pytest.mark.parametrize("comp,qbits", [
+    (RandK(0.25), None), (RandK(0.5), None),
+    (StochasticQuant(bits=4), 4), (StochasticQuant(bits=8), 8),
+    (Chain((RandK(0.5), StochasticQuant(bits=8))), 8),
+])
+def test_statistical_unbiasedness(comp, qbits):
+    """E[compress(v)] == v over the key distribution: the empirical mean
+    over many keys matches v within ~5 standard errors per coordinate.
+
+    The se envelope needs two terms: the empirical std (rand-k's 1/k
+    inflation), plus the THEORETICAL dither-flip se ``s/(2 sqrt(n))`` for
+    quantizers — at coordinates where v/s is nearly integer the flip
+    probability is tiny, the empirical std collapses to ~0, and only the
+    binomial bound is honest."""
+    v = _leaf(jax.random.key(0))
+    n_keys = 4000
+    outs = jax.vmap(lambda k: comp.compress(k, v))(
+        jax.random.split(jax.random.key(1), n_keys))
+    mean = np.asarray(jnp.mean(outs, axis=0))
+    se = np.asarray(jnp.std(outs, axis=0)) / np.sqrt(n_keys)
+    if qbits is not None:
+        step = float(jnp.max(jnp.abs(v))) / (2 ** (qbits - 1) - 1)
+        se = se + step / (2.0 * np.sqrt(n_keys))
+    np.testing.assert_array_less(np.abs(mean - np.asarray(v)), 5.0 * se + 1e-9)
+
+
+@pytest.mark.parametrize("comp", [TopK(0.3), Bf16(),
+                                  Chain((TopK(0.3), Bf16()))])
+def test_biased_compressors_flagged(comp):
+    assert not comp.unbiased
+    assert not comp.requires_key
+
+
+def test_unbiased_flags():
+    assert RandK(0.3).unbiased and RandK(0.3).requires_key
+    assert StochasticQuant(8).unbiased and StochasticQuant(8).requires_key
+    assert Chain((RandK(0.5), StochasticQuant(8))).unbiased
+    assert not Chain((TopK(0.5), StochasticQuant(8))).unbiased
+    assert Shifted(StochasticQuant(8)).unbiased
+    assert not ErrorFeedback(TopK(0.5)).unbiased
+
+
+# ------------------------------------------------------------------- top-k
+def test_topk_per_client_rows():
+    """per_client=True keeps exactly ceil(k*dim) entries in EVERY client
+    row; the legacy flatten lets clients compete (some rows get more, some
+    fewer) — the seed artifact kept behind per_client=False."""
+    v = _leaf(jax.random.key(2), clients=5, dim=50)
+    k = 10  # 0.2 * 50
+    per_row = np.count_nonzero(np.asarray(TopK(0.2).compress(None, v)), axis=1)
+    np.testing.assert_array_equal(per_row, k)
+    legacy = np.asarray(TopK(0.2, per_client=False).compress(None, v))
+    np.testing.assert_array_equal(legacy, np.asarray(topk_sparsify(v, 0.2)))
+    assert np.count_nonzero(legacy) == 50  # 0.2 * 250 total, NOT per row
+    assert np.count_nonzero(legacy, axis=1).max() > k  # competition happened
+
+
+def test_topk_kept_values_exact():
+    v = _leaf(jax.random.key(3))
+    out = np.asarray(TopK(0.4).compress(None, v))
+    nz = out != 0
+    np.testing.assert_array_equal(out[nz], np.asarray(v)[nz])
+
+
+def test_randk_mask_shared_across_clients():
+    """The rand-k mask is drawn once per round and shared by every client
+    (seed-synchronized with the server: no index traffic, and identical
+    messages at consensus — the fixed-point argument in compressors.py)."""
+    v = _leaf(jax.random.key(4), clients=7, dim=30)
+    out = np.asarray(RandK(0.3).compress(jax.random.key(5), v))
+    support = out != 0
+    for r in range(1, 7):
+        np.testing.assert_array_equal(support[r], support[0])
+    k = 9  # 0.3 * 30
+    assert support[0].sum() == k
+    nz = support[0]
+    np.testing.assert_allclose(out[:, nz], np.asarray(v)[:, nz] * (30 / 9))
+
+
+# --------------------------------------------------------------- accounting
+def test_bits_per_coord_accounting():
+    assert TopK(0.3).bits_per_coord == pytest.approx(0.3 * 64)   # val+idx
+    assert RandK(0.25).bits_per_coord == pytest.approx(8.0)      # values only
+    assert StochasticQuant(8).bits_per_coord == 8.0
+    assert Bf16().bits_per_coord == 16.0
+    # chain: bf16 halves VALUES only; int32 indices survive
+    assert Chain((TopK(0.3), Bf16())).bits_per_coord == pytest.approx(
+        0.3 * (16 + 32))
+    assert Chain((RandK(0.5), StochasticQuant(8))).bits_per_coord == \
+        pytest.approx(4.0)
+    # wrappers are accounting-transparent
+    assert ErrorFeedback(TopK(0.3)).bits_per_coord == pytest.approx(0.3 * 64)
+    assert Shifted(StochasticQuant(4)).bits_per_coord == 4.0
+    assert Identity().bits_per_coord == 32.0 and Identity().up_frac == 1.0
+
+
+def test_omega_and_auto_beta():
+    assert RandK(0.25).omega == pytest.approx(3.0)
+    assert StochasticQuant(8).omega == 0.0
+    assert Chain((RandK(0.5), RandK(0.5))).omega == pytest.approx(3.0)
+    assert Shifted(RandK(0.5)).step == pytest.approx(0.5)   # 1/(1+omega)
+    assert Shifted(StochasticQuant(8)).step == 1.0
+    assert Shifted(RandK(0.5), beta=0.1).step == pytest.approx(0.1)
+
+
+def test_legacy_wrapper_keeps_approx_up_frac_but_reports_true_bits():
+    """The seed's up_frac formula ("bf16 halves whatever remains") is pinned
+    for backward compat, while bits_per_coord is the bit-true cost the
+    meter now uses — they legitimately differ for quantized top-k."""
+    t = ErrorFeedbackCompression(k_frac=0.3, quantize=True)
+    assert t.up_frac == pytest.approx(0.3)                  # legacy
+    assert t.bits_per_coord == pytest.approx(0.3 * (16 + 32))  # bit-true
+    algo = with_compression(FedCET(alpha=0.01, c=0.3, tau=2, n_clients=4),
+                            k_frac=0.3, quantize=True)
+    assert bits_per_coord_of(algo) == pytest.approx(14.4)
+
+
+def test_engine_bits_per_coord_for_compressor_stacks():
+    base = FedCET(alpha=0.01, c=0.3, tau=2, n_clients=4)
+    assert base.bits_per_coord == 32.0
+    assert with_compression(base, compressor="randk:0.25").bits_per_coord \
+        == pytest.approx(8.0)
+    b = comm_bits_per_round(with_compression(base, compressor="q8"),
+                            n_params=1000, n_clients=4)
+    assert b["up_bits"] == 1 * 1000 * 4 * 8
+    assert b["down_bits"] == 1 * 1000 * 4 * 32
+
+
+# ------------------------------------------------------------- key schedule
+def test_per_round_keys_distinct_and_deterministic():
+    """MessageCompression derives a fresh key per round from the step
+    counter (regression for the PR 1 participation-key bug class): same
+    step => identical output (restart-stable), different step => a
+    different mask/dither."""
+    t = MessageCompression(RandK(0.5), seed=0)
+    msg = {"v": _leaf(jax.random.key(6))}
+    out0a, _ = t.apply(msg, None, step=0)
+    out0b, _ = t.apply(msg, None, step=0)
+    out1, _ = t.apply(msg, None, step=jnp.asarray(2))
+    np.testing.assert_array_equal(np.asarray(out0a["v"]), np.asarray(out0b["v"]))
+    assert (np.asarray(out0a["v"]) != np.asarray(out1["v"])).any()
+
+
+def test_key_schedule_domain_separated_from_participation():
+    """Compression keys carry a domain-separation tag: at the default
+    seed=0 the per-round compression key must NOT equal the per-round
+    participation key ``fold_in(key(0), t)`` (which would correlate the
+    rand-k mask with the client mask)."""
+    t = MessageCompression(RandK(0.5), seed=0)
+    v = _leaf(jax.random.key(7))
+    for step in (0, 2, 4):
+        out, _ = t.apply({"v": v}, None, step=step)
+        naive_key = jax.random.fold_in(jax.random.key(0),
+                                       jnp.asarray(step, jnp.int32))
+        naive = RandK(0.5).compress(jax.random.fold_in(naive_key, 0), v)
+        assert (np.asarray(out["v"]) != np.asarray(naive)).any()
+
+
+def test_stochastic_quant_dither_shared_across_clients():
+    """One dither per round, broadcast over clients: identical rows
+    quantize identically (the consensus fixed-point requirement)."""
+    row = jax.random.normal(jax.random.key(8), (25,))
+    v = jnp.stack([row, row, row])
+    out = np.asarray(StochasticQuant(8).compress(jax.random.key(9), v))
+    np.testing.assert_array_equal(out[0], out[1])
+    np.testing.assert_array_equal(out[0], out[2])
+
+
+def test_scalar_parameter_leaves_stay_synchronized():
+    """A (n_clients,) leaf is a STACKED SCALAR parameter — axis 0 is always
+    the client axis, never a draw axis. Rand-k must keep it for every
+    client (coordinate space is a single coordinate) and the quant dither
+    must be shared, so clients at consensus still transmit identically."""
+    v = jnp.full((6,), 1.7)
+    out = RandK(0.5).compress(jax.random.key(0), v)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(v))
+    q = np.asarray(StochasticQuant(8).compress(jax.random.key(1), v))
+    assert len(set(q.tolist())) == 1  # shared dither: identical at consensus
+    t = np.asarray(TopK(0.5).compress(None, v))
+    np.testing.assert_array_equal(t, np.asarray(v))  # 1 coord/client: kept
+
+
+def test_stateful_wrappers_cannot_nest():
+    with pytest.raises(ValueError, match="nest stateful"):
+        ErrorFeedback(Shifted(StochasticQuant(8)))
+    with pytest.raises(ValueError, match="nest stateful"):
+        Shifted(ErrorFeedback(TopK(0.3)))
+    with pytest.raises(ValueError, match="AROUND a chain"):
+        Chain((Shifted(StochasticQuant(8)), Bf16()))
+
+
+def test_with_compression_guards():
+    """Auto-EF must not wrap a stateful Shifted (it would clobber the shift
+    memory slot), and mixing the legacy kwargs with compressor= raises
+    instead of silently dropping them."""
+    base = FedCET(alpha=0.01, c=0.3, tau=2, n_clients=4)
+    algo = with_compression(base, compressor="shift:bf16")  # biased inner
+    assert isinstance(algo.transforms[0].compressor, Shifted)
+    with pytest.raises(ValueError, match="not both"):
+        with_compression(base, k_frac=0.3, compressor="q8")
+    with pytest.raises(ValueError, match="nest stateful"):
+        with_compression(base, compressor="shift:q8", error_feedback=True)
+
+
+def test_stacked_transforms_distinct_keys_and_chain_accounting():
+    """Two transforms stacked at the SAME default seed must not replay each
+    other's randomness (same mask twice would make rand-k biased: 4v on
+    one subset), and stacked accounting composes like Chain stages — a
+    later quantizer shrinks VALUE bits only, never the sparsifier's int32
+    index bits."""
+    base = FedCET(alpha=0.01, c=0.3, tau=2, n_clients=4)
+    algo = with_compression(with_compression(base, compressor="randk:0.5"),
+                            compressor="randk:0.5")
+    t0, t1 = algo.transforms
+    v = {"v": _leaf(jax.random.key(11))}
+    s0 = np.asarray(t0.apply(v, None, step=0)[0]["v"]) != 0
+    s1 = np.asarray(t1.apply(v, None, step=0)[0]["v"]) != 0
+    assert (s0 != s1).any()
+    stacked = with_compression(with_compression(base, compressor="topk:0.3"),
+                               compressor="q8")
+    assert stacked.bits_per_coord == pytest.approx(0.3 * (8 + 32))
+    # ...identical to expressing the same stack as one Chain transform
+    assert with_compression(base, compressor="topk:0.3+q8").bits_per_coord \
+        == pytest.approx(0.3 * (8 + 32))
+
+
+def test_empty_prefixed_spec_raises():
+    for bad in ("ef:", "shift:", "ef: + "):
+        with pytest.raises(ValueError, match="empty compressor spec"):
+            from_spec(bad)
+
+
+def test_comm_meter_bits_down_zero_is_honored():
+    """bits_down=0.0 (a downlink-free scheme) must meter 0 down bytes, not
+    silently fall back to dense 32 (the falsy-zero trap)."""
+    m = CommMeter(n_params=10, n_clients=2, bits_up=32.0, bits_down=0.0)
+    m.tick(1, 1)
+    assert m.bytes_down == 0 and m.bytes_up == 10 * 2 * 4
+
+
+# ------------------------------------------------------------------ parsing
+def test_from_spec_round_trips():
+    assert from_spec("none") is None and from_spec("") is None
+    assert from_spec(None) is None
+    assert from_spec("topk:0.3") == TopK(0.3, per_client=True)
+    assert from_spec("topk_global:0.3") == TopK(0.3, per_client=False)
+    assert from_spec("randk:0.25") == RandK(0.25)
+    assert from_spec("q8") == StochasticQuant(bits=8)
+    assert from_spec("quant:4") == StochasticQuant(bits=4)
+    assert from_spec("bf16") == Bf16()
+    assert from_spec("topk:0.3+bf16") == Chain((TopK(0.3), Bf16()))
+    assert from_spec("ef:topk:0.3") == ErrorFeedback(TopK(0.3))
+    assert from_spec("shift:q8") == Shifted(StochasticQuant(8))
+    comp = RandK(0.5)
+    assert from_spec(comp) is comp
+    with pytest.raises(ValueError, match="unknown compressor"):
+        from_spec("zstd:9")
+    with pytest.raises(TypeError):
+        as_compressor(None)
+
+
+# ----------------------------------------------------------------- metering
+def test_comm_meter_bit_true_mode():
+    algo = with_compression(FedCET(alpha=0.01, c=0.3, tau=2, n_clients=3),
+                            compressor="randk:0.25")
+    params = {"w": jnp.zeros((100,))}
+    m = CommMeter.for_params(params, algo=algo, n_clients=3)
+    m.tick_round(algo)
+    assert m.bytes_up == int(1 * 100 * 3 * 8 / 8)     # 8 bits/coord up
+    assert m.bytes_down == int(1 * 100 * 3 * 32 / 8)  # dense f32 down
+    with pytest.raises(ValueError, match="double-count"):
+        m.tick(1, 1, up_frac=0.5)
+
+
+def test_comm_meter_itemsize_deprecated():
+    params = {"w": jnp.zeros((10,))}
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        with pytest.raises(DeprecationWarning):
+            CommMeter.for_params(params, itemsize=2)
+    # legacy mode still works (and still takes an explicit up_frac)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        m = CommMeter.for_params(params, itemsize=4, n_clients=2)
+    m.tick(2, 1, up_frac=0.5)
+    assert m.bytes_up == int(2 * 10 * 4 * 2 * 0.5)
+    assert m.bytes_down == 10 * 4 * 2
+
+
+# ------------------------------------------------------------- launch knob
+def test_fed_scenario_apply():
+    from repro.configs import FedScenario
+    from repro.core.engine import EngineState
+
+    base = FedCET(alpha=0.01, c=0.3, tau=2, n_clients=4)
+    assert FedScenario().apply(base) is base          # identity is a no-op
+    algo = FedScenario(compression="shift:q8", participation=0.5).apply(base)
+    assert algo.sampling is not None and algo.sampling.rate == 0.5
+    assert algo.bits_per_coord == 8.0
+    assert isinstance(algo.transforms[0], MessageCompression)
+    assert isinstance(algo.transforms[0].compressor, Shifted)
+    # biased spec gets auto error feedback; unbiased stays bare
+    ef_algo = FedScenario(compression="topk:0.3").apply(base)
+    assert isinstance(ef_algo.transforms[0].compressor, ErrorFeedback)
+    del EngineState  # imported for documentation parity

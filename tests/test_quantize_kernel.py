@@ -1,0 +1,66 @@
+"""Pallas stochastic-quantize kernel vs its ref.py oracle.
+
+Separate from tests/test_kernels.py on purpose: that module needs
+``hypothesis`` (absent in some environments, skipped by the conftest
+guard), while the quantize kernel is on the compressed-uplink hot path and
+must stay covered by the tier-1 suite everywhere.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(7,), (1024,), (1025,), (256, 1024), (3, 5, 17)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("bits", [4, 8])
+def test_stochastic_quantize_sweep(shape, dtype, bits):
+    """Kernel == oracle across shapes/dtypes/bit-widths (the dither and
+    scale are kernel INPUTS, so both see identical randomness and must
+    agree to fusion rounding)."""
+    ka, ku = jax.random.split(jax.random.key(7))
+    a = (jax.random.normal(ka, shape) * 3.0).astype(dtype)
+    u = jax.random.uniform(ku, shape, dtype=jnp.float32).astype(dtype)
+    levels = 2 ** (bits - 1) - 1
+    scale = (jnp.max(jnp.abs(a.astype(jnp.float32))) / levels).astype(dtype)
+    out = ops.stochastic_quantize(a, u, scale, bits)
+    want = ref.stochastic_quantize(a, u, scale, bits)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+    assert out.shape == shape and out.dtype == dtype
+
+
+def test_stochastic_quantize_zero_scale_and_grid():
+    """scale=0 (an all-zero leaf) maps to exactly 0 everywhere, and outputs
+    land exactly on the quantization grid {q * scale, |q| <= levels}."""
+    a = jax.random.normal(jax.random.key(1), (300,), dtype=jnp.float32)
+    u = jax.random.uniform(jax.random.key(2), (300,), dtype=jnp.float32)
+    zero = ops.stochastic_quantize(jnp.zeros_like(a), u, jnp.float32(0.0), 8)
+    np.testing.assert_array_equal(np.asarray(zero), 0.0)
+    scale = jnp.max(jnp.abs(a)) / 127.0
+    out = np.asarray(ops.stochastic_quantize(a, u, scale, 8))
+    q = out / float(scale)
+    np.testing.assert_allclose(q, np.round(q), atol=1e-4)
+    assert np.max(np.abs(np.round(q))) <= 127
+
+
+def test_stochastic_quant_compressor_kernel_path():
+    """StochasticQuant(use_kernel=True) == the pure-jnp compressor path
+    (same key, same dither, same math — the kernel only changes the
+    schedule), so the flag can flip on TPU without changing semantics."""
+    from repro.core.compressors import StochasticQuant
+
+    leaf = jax.random.normal(jax.random.key(3), (4, 257), dtype=jnp.float32)
+    key = jax.random.key(9)
+    out_j = StochasticQuant(bits=8).compress(key, leaf)
+    out_k = StochasticQuant(bits=8, use_kernel=True).compress(key, leaf)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_j),
+                               rtol=1e-6, atol=1e-6)
