@@ -7,6 +7,8 @@ shrink value bits, seed-synchronized rand-k pays values only)."""
 
 from __future__ import annotations
 
+import math
+
 from repro.configs import ASSIGNED, get_config
 from repro.core import (
     FedAvg,
@@ -20,7 +22,7 @@ from repro.roofline.flops import param_counts
 
 
 def _algos(n_clients: int) -> dict:
-    from repro.core import FedCETCompressed, with_compression
+    from repro.core import FedCETCompressed, with_compression, with_delay
 
     fedcet = lambda: FedCET(alpha=1e-3, c=0.05, tau=2, n_clients=n_clients)  # noqa: E731
     return {
@@ -42,6 +44,14 @@ def _algos(n_clients: int) -> dict:
         "fedcet_shift_q8": with_compression(fedcet(), compressor="shift:q8"),
         "fedcet_randk50_q8": with_compression(fedcet(),
                                               compressor="randk:0.5+q8"),
+        # asynchronous rounds (core/staleness.py): buffered rounds transmit
+        # ZERO uplink bits — expected uplink scales by the transmit duty
+        # (fixed:2 = every 3rd round lands -> 1/3; rr:2 = 2 of n_clients
+        # stragglers per round -> (n-2)/n), and stacks with compression.
+        "fedcet_delay_fixed2": with_delay(fedcet(), "fixed:2", policy="last"),
+        "fedcet_delay_rr2": with_delay(fedcet(), "rr:2", policy="drop"),
+        "fedcet_shiftq8_rr2": with_delay(
+            with_compression(fedcet(), compressor="shift:q8"), "rr:2"),
     }
 
 
@@ -63,7 +73,8 @@ def run(csv_rows=None, n_clients: int = 16):
                     f"comm/{arch}/{name}", 0.0,
                     f"bytes_per_round={total}"
                     f";bits_per_round={int(bits['total_bits'])}"
-                    f";up_bits_per_coord={algo.bits_per_coord:g}"))
+                    f";up_bits_per_coord={algo.bits_per_coord:g}"
+                    f";up_duty={getattr(algo, 'transmit_frac', 1.0):g}"))
         assert out[(arch, "fedcet")] * 2 == out[(arch, "scaffold")]
         assert out[(arch, "fedcet")] == out[(arch, "fedavg")]
         # bit-true sanity: seed-synchronized rand-k pays no index traffic,
@@ -71,6 +82,20 @@ def run(csv_rows=None, n_clients: int = 16):
         assert algos["fedcet_randk25"].bits_per_coord == 8.0
         # ...while per-client top-k at 30% pays values + int32 indices.
         assert algos["fedcet_topk30_pc"].bits_per_coord == 0.3 * 64.0
+        # delay duty: fixed:2 lands every 3rd round (expected uplink /3,
+        # downlink broadcast stays dense), rr:2 idles 2 of n_clients.
+        # isclose, not ==: a * (1/3) * 3 is not exact for every int a.
+        sync_up = comm_bits_per_round(algos["fedcet"], n,
+                                      n_clients=n_clients)["up_bits"]
+        dly = comm_bits_per_round(algos["fedcet_delay_fixed2"], n,
+                                  n_clients=n_clients)
+        assert math.isclose(dly["up_bits"] * 3, sync_up, rel_tol=1e-12)
+        assert dly["down_bits"] == sync_up
+        assert algos["fedcet_delay_rr2"].transmit_frac \
+            == (n_clients - 2) / n_clients
+        # duty composes with compression: shift:q8 is 8 bits/coord BEFORE
+        # the duty scaling.
+        assert algos["fedcet_shiftq8_rr2"].bits_per_coord == 8.0
     return out
 
 

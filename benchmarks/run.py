@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows. Modules:
   kernel_bench     — Pallas fedcet-update kernels (interpret mode)
   roofline_table   — (arch x shape x mesh) roofline terms from the dry-run
                      results JSON, when present
+  staleness_sweep  — error floors under asynchronous rounds: delay model x
+                     stale policy x compression (runs LAST: it enables x64)
 """
 
 from __future__ import annotations
@@ -24,6 +26,7 @@ def main() -> None:
         kernel_bench,
         lr_search_bench,
         roofline_table,
+        staleness_sweep,
     )
 
     rows: list[tuple] = []
@@ -35,6 +38,7 @@ def main() -> None:
         ("fed_lm_bench", fed_lm_bench),
         ("kernel_bench", kernel_bench),
         ("roofline_table", roofline_table),
+        ("staleness_sweep", staleness_sweep),  # enables x64: keep last
     ]:
         t = time.time()
         try:

@@ -1,0 +1,116 @@
+"""Benchmark: staleness sweep — error floors under asynchronous rounds.
+
+FedCET vs FedAvg vs SCAFFOLD on the paper's quadratic (Section IV), across
+delay model x stale-aggregation policy x compression stack. Emits one CSV
+row per cell with the final error at ``ROUNDS`` rounds plus the uplink duty
+cycle, and asserts the PINNED MEASURED FINDINGS (committed table in
+results/staleness_sweep.csv; recorded in ARCHITECTURE.md):
+
+1. FedCET keeps EXACT convergence at delay >= 2 under ``drop`` AND
+   ``last`` — final error ~1e-14 for fixed:2 / rr:2 / geom:0.5, with or
+   without a shift:q8 compressed uplink (8 bits/coord). Its single
+   transmitted vector v is ABSOLUTE, so the server reusing a buffered
+   copy is safe, and uniform aggregation weights keep the drift updates
+   mean-zero (Lemma 2 survives staleness).
+2. SCAFFOLD's two-vector message is a DELTA pair (dy, dc): ``last``
+   re-applies buffered control updates every stale round and the error
+   explodes to ~1e0-4e0; only ``drop`` keeps it convergent. FedAvg
+   (absolute model message) tolerates both policies on this problem (its
+   drift floor needs heterogeneous Hessians — see tests/test_baselines).
+3. ``poly:1`` staleness-discounted weights — the classic async-FL
+   heuristic — BREAK FedCET's exactness whenever ages are non-uniform
+   (floor ~5e-2 under rr:2, ~3e-1 under geom:0.5): non-uniform weights
+   destroy the mean-zero drift structure. Under fixed:k all ages are
+   equal, weights stay uniform, and exactness survives.
+
+Run directly (``python benchmarks/staleness_sweep.py``) or via
+benchmarks/run.py; ``--quick`` shrinks the grid/rounds for CI smoke.
+"""
+
+from __future__ import annotations
+
+import time
+
+ROUNDS = 1500
+DELAYS = ("none", "fixed:2", "rr:2", "geom:0.5")
+POLICIES = ("drop", "last", "poly:1")
+COMPRESSIONS = ("none", "shift:q8")
+
+
+def _algos(problem, tau=2):
+    from repro.core import FedAvg, FedCET, Scaffold, max_weight_c
+    from repro.core.lr_search import lr_search
+
+    mu, L, n = problem.mu, problem.L, problem.n_clients
+    alpha = lr_search(mu, L, tau)
+    return {
+        "fedcet": FedCET(alpha=alpha, c=max_weight_c(mu, alpha), tau=tau,
+                         n_clients=n),
+        "fedavg": FedAvg(alpha=1.0 / (2 * tau * L), tau=tau, n_clients=n),
+        "scaffold": Scaffold(alpha_l=1.0 / (81 * tau * L), tau=tau,
+                             n_clients=n),
+    }
+
+
+def run(csv_rows=None, rounds: int = ROUNDS, quick: bool = False):
+    import jax
+
+    jax.config.update("jax_enable_x64", True)  # floors sit below f32 eps
+
+    from repro.core import with_compression, with_delay
+    from repro.core.simulate import simulate_quadratic
+    from repro.data.quadratic import make_quadratic_problem
+
+    if quick:
+        rounds = min(rounds, 400)
+    problem = make_quadratic_problem(0)
+    algos = _algos(problem)
+    delays = DELAYS if not quick else ("none", "rr:2")
+    comps = COMPRESSIONS if not quick else ("none",)
+
+    err = {}
+    for aname, base in algos.items():
+        for comp in comps:
+            algo0 = base if comp == "none" else with_compression(
+                base, compressor=comp)
+            for dspec in delays:
+                for pol in POLICIES if dspec != "none" else ("sync",):
+                    algo = algo0 if dspec == "none" else with_delay(
+                        algo0, dspec, policy=pol)
+                    t0 = time.perf_counter()
+                    res = simulate_quadratic(algo, problem, rounds=rounds)
+                    dt = (time.perf_counter() - t0) * 1e6 / rounds
+                    e = res.final_error
+                    err[(aname, comp, dspec, pol)] = e
+                    if csv_rows is not None:
+                        csv_rows.append((
+                            f"staleness/{aname}/{comp}/{dspec}/{pol}", dt,
+                            f"final_err={e:.3e}"
+                            f";rounds={rounds}"
+                            f";up_duty={algo.transmit_frac:g}"
+                            f";up_bits_per_coord={algo.bits_per_coord:g}"))
+
+    # ---- pinned measured findings (full grid only; see module docstring)
+    if not quick:
+        for dspec in ("fixed:2", "rr:2", "geom:0.5"):
+            for pol in ("drop", "last"):
+                for comp in comps:
+                    e = err[("fedcet", comp, dspec, pol)]
+                    assert e < 1e-9, ("fedcet stays exact", comp, dspec, pol, e)
+        assert err[("scaffold", "none", "rr:2", "last")] > 1e-1
+        assert err[("scaffold", "none", "rr:2", "drop")] < 1e-2
+        assert err[("fedcet", "none", "rr:2", "poly:1")] > 1e-4
+        assert err[("fedcet", "none", "geom:0.5", "poly:1")] > 1e-4
+        # fixed:k ages are uniform -> poly weights uniform -> still exact
+        assert err[("fedcet", "none", "fixed:2", "poly:1")] < 1e-9
+    return err
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = []
+    run(csv_rows=rows, quick="--quick" in sys.argv)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(",".join(map(str, r)))

@@ -126,7 +126,8 @@ class ArchConfig:
 @dataclasses.dataclass(frozen=True)
 class FedScenario:
     """Launch-level federated-scenario knob: which compressor stack rides
-    the uplink and what fraction of clients participates per round.
+    the uplink, what fraction of clients participates per round, and which
+    delay model / stale-aggregation policy simulates asynchronous uplinks.
 
     ``compression`` is a spec string for
     :func:`repro.core.compressors.from_spec` — ``"none"``, ``"bf16"``,
@@ -135,18 +136,27 @@ class FedScenario:
     (``"randk:0.5+q8"``), ``"ef:"`` prefix to force error feedback.
     ``error_feedback=None`` auto-wraps biased compressors only.
 
+    ``delay`` is a spec string for :func:`repro.core.staleness.parse_delay`
+    — ``"none"``, ``"fixed:2"`` (periodic uplink), ``"rr:1"`` (round-robin
+    straggler), ``"geom:0.5"`` (Bernoulli arrivals) — with
+    ``stale_policy`` one of ``"drop"`` / ``"last"`` / ``"poly:<a>"``.
+
     ``apply`` composes the scenario onto ANY engine algorithm — the same
     expression the simulation tests pin, now reachable from the production
-    LM loop (`launch/train.py --compression ... --participation ...`)."""
+    LM loop (`launch/train.py --compression ... --participation ...
+    --delay ... --stale-policy ...`)."""
 
     compression: str = "none"
     participation: float = 1.0
+    delay: str = "none"
+    stale_policy: str = "last"
     error_feedback: bool | None = None
     seed: int = 0
 
     def apply(self, algo):
         from repro.core.compressors import from_spec
-        from repro.core.engine import with_compression, with_participation
+        from repro.core.engine import (with_compression, with_delay,
+                                       with_participation)
 
         algo = with_participation(algo, self.participation, seed=self.seed)
         comp = from_spec(self.compression)  # one normalizer for the grammar
@@ -154,7 +164,8 @@ class FedScenario:
             algo = with_compression(algo, compressor=comp,
                                     error_feedback=self.error_feedback,
                                     seed=self.seed)
-        return algo
+        return with_delay(algo, self.delay, policy=self.stale_policy,
+                          seed=self.seed)
 
 
 @dataclasses.dataclass(frozen=True)

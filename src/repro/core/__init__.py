@@ -2,7 +2,7 @@
 the unified round engine + message transforms they all run on."""
 
 from repro.core.api import FederatedAlgorithm, comm_bytes_per_round, replicate, vmap_grads
-from repro.core.baselines import FedAvg, FedLin, FedTrack, Scaffold
+from repro.core.baselines import FedAvg, FedLin, FedProx, FedTrack, Scaffold
 from repro.core.comm import (
     CommMeter,
     bits_per_coord_of,
@@ -31,7 +31,15 @@ from repro.core.engine import (
     participation_mask,
     run_rounds,
     with_compression,
+    with_delay,
     with_participation,
+)
+from repro.core.staleness import (
+    DelayState,
+    StalenessConfig,
+    StalePolicy,
+    parse_delay,
+    parse_policy,
 )
 from repro.core.fedcet import FedCET, FedCETLiteral, max_weight_c
 from repro.core.fedcet_compressed import FedCETCompressed
@@ -50,6 +58,7 @@ __all__ = [
     "ClientSampling",
     "CommMeter",
     "Compressor",
+    "DelayState",
     "EngineState",
     "ErrorFeedback",
     "ErrorFeedbackCompression",
@@ -59,12 +68,15 @@ __all__ = [
     "FedCETLiteral",
     "FedCETPartial",
     "FedLin",
+    "FedProx",
     "FedTrack",
     "FederatedAlgorithm",
     "MessageCompression",
     "RandK",
     "RoundEngine",
     "Scaffold",
+    "StalePolicy",
+    "StalenessConfig",
     "StochasticQuant",
     "TopK",
     "alpha0_upper_bound",
@@ -78,6 +90,8 @@ __all__ = [
     "make_round_runner",
     "masked_client_mean",
     "max_weight_c",
+    "parse_delay",
+    "parse_policy",
     "participation_mask",
     "quantize_bf16",
     "replicate",
@@ -86,5 +100,6 @@ __all__ = [
     "topk_sparsify",
     "vmap_grads",
     "with_compression",
+    "with_delay",
     "with_participation",
 ]

@@ -1,5 +1,6 @@
 from repro.core.baselines.fedavg import FedAvg
 from repro.core.baselines.fedlin import FedLin, FedTrack
+from repro.core.baselines.fedprox import FedProx
 from repro.core.baselines.scaffold import Scaffold
 
-__all__ = ["FedAvg", "FedLin", "FedTrack", "Scaffold"]
+__all__ = ["FedAvg", "FedLin", "FedProx", "FedTrack", "Scaffold"]

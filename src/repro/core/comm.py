@@ -10,7 +10,9 @@ FedTrack / FedLin move two. This module provides
   ``for_params(params, algo=...)`` and it derives per-coordinate wire bits
   from the algorithm's attached compressor stack (``bits_per_coord``) — the
   old ``itemsize=4`` path silently overcounted bf16/quantized uplinks and
-  is deprecated;
+  is deprecated. With a ``with_delay`` model attached the uplink is
+  additionally scaled by the transmit duty cycle (``transmit_frac``):
+  buffered rounds where a client does not transmit count zero uplink bits;
 * ``topk_sparsify`` — magnitude top-k with the complement zeroed (FedLin's
   uplink sparsifier; the ``TopK(per_client=False)`` legacy flatten in
   repro/core/compressors.py is this exact function);
@@ -60,6 +62,18 @@ def bits_per_coord_of(algo) -> float:
     return 32.0 * float(getattr(algo, "up_frac", 1.0))
 
 
+def transmit_frac_of(algo) -> float:
+    """Uplink duty cycle: the expected fraction of rounds a client's
+    message actually lands at the server. Folds the attached delay model
+    (``with_delay`` — buffered rounds transmit ZERO uplink bits, the
+    server reuses its last-known copy) AND the client-sampling rate
+    (``with_participation`` — absent clients cannot deliver; the engine
+    ANDs the arrival mask with the presence mask, and the independent
+    schedules multiply in expectation). 1.0 for synchronous
+    full-participation algorithms; downlink broadcasts stay dense."""
+    return float(getattr(algo, "transmit_frac", 1.0))
+
+
 @dataclasses.dataclass
 class CommMeter:
     """Accumulates transmitted bytes across rounds for one algorithm.
@@ -82,6 +96,10 @@ class CommMeter:
     n_clients: int = 1
     bits_up: float | None = None
     bits_down: float | None = None
+    #: uplink duty cycle: expected fraction of rounds a client's uplink
+    #: lands (``with_delay`` algorithms transmit ZERO uplink bits on
+    #: buffered rounds; the server reuses its last-known copy).
+    up_duty: float = 1.0
     rounds: int = 0
     bytes_up: int = 0
     bytes_down: int = 0
@@ -90,7 +108,8 @@ class CommMeter:
     def for_params(cls, params, *, algo=None, itemsize: int | None = None,
                    n_clients: int = 1) -> "CommMeter":
         """Meter for one parameter pytree. Pass ``algo=`` for bit-true
-        accounting from its compressor stack; ``itemsize`` is deprecated."""
+        accounting from its compressor stack AND its delay model's uplink
+        duty cycle; ``itemsize`` is deprecated."""
         if itemsize is not None:
             warnings.warn(
                 "CommMeter.for_params(itemsize=...) is deprecated: it "
@@ -100,7 +119,8 @@ class CommMeter:
         if algo is not None:
             return cls(n_params=tree_num_params(params), n_clients=n_clients,
                        bits_up=bits_per_coord_of(algo),
-                       bits_down=32.0 * float(getattr(algo, "down_frac", 1.0)))
+                       bits_down=32.0 * float(getattr(algo, "down_frac", 1.0)),
+                       up_duty=transmit_frac_of(algo))
         return cls(n_params=tree_num_params(params),
                    itemsize=4 if itemsize is None else itemsize,
                    n_clients=n_clients)
@@ -118,7 +138,8 @@ class CommMeter:
                     "bits_up; passing up_frac would double-count")
             per_coord = self.n_params * self.n_clients
             bits_down = 32.0 if self.bits_down is None else self.bits_down
-            self.bytes_up += int(vectors_up * per_coord * self.bits_up / 8.0)
+            self.bytes_up += int(vectors_up * per_coord * self.bits_up
+                                 * self.up_duty / 8.0)
             self.bytes_down += int(vectors_down * per_coord
                                    * bits_down / 8.0 * down_frac)
             return
@@ -142,9 +163,11 @@ class CommMeter:
 
 
 def comm_bits_per_round(algo, n_params: int, n_clients: int = 1) -> dict:
-    """Bit-true wire bits per communication round (the Remark 2 accounting
-    with the compressor stack folded in; downlink stays dense f32)."""
-    up = algo.vectors_up * n_params * n_clients * bits_per_coord_of(algo)
+    """Bit-true EXPECTED wire bits per communication round (the Remark 2
+    accounting with the compressor stack and the delay model's uplink duty
+    cycle folded in; downlink stays dense f32)."""
+    up = (algo.vectors_up * n_params * n_clients * bits_per_coord_of(algo)
+          * transmit_frac_of(algo))
     down = algo.vectors_down * n_params * n_clients * 32.0
     return {"up_bits": up, "down_bits": down, "total_bits": up + down}
 

@@ -251,12 +251,22 @@ class StochasticQuant(Compressor):
     ``q = clip(floor(leaf/s + u), -L, L)``; the round-trip transmits
     ``q * s``. ``E_u[floor(v + u)] = v`` makes the round-trip unbiased.
 
+    ``per_client_dither=True`` draws an INDEPENDENT dither per client row
+    (non-seed-synchronized — a federation whose clients cannot share a
+    round seed). Still unbiased and the same wire bits, but it gives up
+    the synchronized-randomness consequence documented at module top:
+    clients at consensus no longer transmit identical messages, so
+    FedCET's fixed point only holds in expectation, not pathwise (scale
+    stays shared/deterministic either way: it is max|leaf| over the whole
+    stacked leaf).
+
     ``use_kernel=True`` routes the round-trip through the Pallas kernel
     (kernels/quantize.py — interpret mode off-TPU); the default pure-jnp
     path is the same math as the kernel's ref.py oracle."""
 
     bits: int = 8
     use_kernel: bool = False
+    per_client_dither: bool = False
 
     requires_key = True
     unbiased = True
@@ -274,8 +284,11 @@ class StochasticQuant(Compressor):
             else jnp.float32
         a = leaf.astype(ct)
         scale = jnp.max(jnp.abs(a)) / levels
-        u = jnp.broadcast_to(
-            jax.random.uniform(key, _coord_shape(leaf), dtype=ct), a.shape)
+        if self.per_client_dither:
+            u = jax.random.uniform(key, leaf.shape, dtype=ct)
+        else:
+            u = jnp.broadcast_to(
+                jax.random.uniform(key, _coord_shape(leaf), dtype=ct), a.shape)
         if self.use_kernel:
             from repro.kernels import ops as kops
 
@@ -505,10 +518,13 @@ def _parse_stage(tok: str) -> Compressor:
         return StochasticQuant(bits=int(arg))
     if name.startswith("q") and name[1:].isdigit():
         return StochasticQuant(bits=int(name[1:]))
+    if name.startswith("pq") and name[2:].isdigit():  # per-client dither
+        return StochasticQuant(bits=int(name[2:]), per_client_dither=True)
     if name == "bf16":
         return Bf16()
     raise ValueError(f"unknown compressor spec {tok!r} (try topk:0.3, "
-                     "topk_global:0.3, randk:0.25, q8, bf16, ef:..., a+b)")
+                     "topk_global:0.3, randk:0.25, q8, pq8, bf16, ef:..., "
+                     "a+b)")
 
 
 def from_spec(spec: str | Compressor | None) -> Compressor | None:
@@ -517,7 +533,8 @@ def from_spec(spec: str | Compressor | None) -> Compressor | None:
     Grammar: ``none`` | stage (``+`` stage)* with an optional ``ef:`` or
     ``shift:`` prefix (error feedback / DIANA shift around the whole chain).
     Stages: ``topk:<frac>`` (per-client), ``topk_global:<frac>`` (legacy
-    cross-client), ``randk:<frac>``, ``q<bits>``/``quant:<bits>``, ``bf16``.
+    cross-client), ``randk:<frac>``, ``q<bits>``/``quant:<bits>``,
+    ``pq<bits>`` (per-client — non-synchronized — dither), ``bf16``.
     Examples: ``"randk:0.25"``, ``"ef:topk:0.3+bf16"``, ``"shift:q8"``."""
     if spec is None or isinstance(spec, Compressor):
         return spec

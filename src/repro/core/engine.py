@@ -56,10 +56,20 @@ algorithm without forking its round body, and compose in either order::
   with a leading ``n_clients`` axis reverts to its pre-round value, so
   absent clients neither compute nor transmit, and redistributive invariants
   (``sum_i d_i = 0``) survive sampling.
+* ``with_delay`` simulates ASYNCHRONOUS rounds (delayed uplinks) on the
+  same seam: a per-client delay model decides which uplinks land each
+  round, the server keeps a last-known message buffer
+  (:class:`repro.core.staleness.DelayState`, riding in ``EngineState``
+  extras like transform memory), and a stale-aggregation policy
+  (``drop`` / ``last`` / ``poly:a``) folds buffered messages into the
+  server mean. Delay applies AFTER compression (the buffer holds wire
+  messages) and composes with participation (absent clients cannot
+  deliver; their buffer entry keeps aging). See staleness.py.
 
-Both factories are EXACT no-ops at their identity settings
-(``rate >= 1.0``; ``k_frac >= 1.0 and not quantize``): they return the
-algorithm object unchanged.
+All three factories are EXACT no-ops at their identity settings
+(``rate >= 1.0``; ``k_frac >= 1.0 and not quantize``; delay ``fixed:0`` /
+``rr:0`` / ``geom:1`` / ``none``): they return the algorithm object
+unchanged.
 
 The shared multi-round driver
 -----------------------------
@@ -80,14 +90,24 @@ import jax.numpy as jnp
 
 from repro.core.api import GradFn, vmap_grads
 from repro.core.comm import sparsified_up_frac
+from repro.core.staleness import (
+    DelayState,
+    StalenessConfig,
+    parse_delay,
+    parse_policy,
+    weighted_client_mean,
+)
 from repro.utils.tree import tree_client_mean
 
 
 class EngineState(NamedTuple):
     """Algorithm state plus per-transform extra state (e.g. error-feedback
-    memory). Only used when at least one message transform is attached;
-    transform-free algorithms keep their bare spec state, so existing
-    checkpoints and sharding specs are unaffected."""
+    memory), plus — when ``with_delay`` is attached — the server's
+    last-known message buffer as the FINAL extras slot
+    (:class:`repro.core.staleness.DelayState`). Only used when at least one
+    transform or a delay model is attached; bare algorithms keep their bare
+    spec state, so existing checkpoints and sharding specs are
+    unaffected."""
 
     inner: Any
     extras: tuple
@@ -285,6 +305,9 @@ class RoundEngine:
 
     transforms: tuple = dataclasses.field(default=(), kw_only=True)
     sampling: ClientSampling | None = dataclasses.field(default=None, kw_only=True)
+    #: asynchronous-round simulation (delay model + buffer + stale policy);
+    #: attach via ``with_delay`` — see repro/core/staleness.py.
+    delay: StalenessConfig | None = dataclasses.field(default=None, kw_only=True)
     #: mesh axes carrying the client dimension (production launcher only).
     spmd_client_axes: tuple = dataclasses.field(default=(), kw_only=True)
 
@@ -357,17 +380,44 @@ class RoundEngine:
     def down_frac(self) -> float:
         return 1.0
 
+    @property
+    def transmit_frac(self) -> float:
+        """Expected fraction of rounds a client's uplink actually lands
+        (1.0 synchronous). Buffered rounds transmit zero uplink bits —
+        CommMeter folds this duty cycle into bytes_up. With client
+        sampling attached the effective arrival mask is ``fresh AND
+        present`` (an absent client cannot deliver), and the two schedules
+        are independent PRNG streams, so the expectations multiply.
+        (The participation factor ignores the non-empty-mask fallback's
+        tiny upward correction at very low rates.)"""
+        frac = 1.0
+        if self.sampling is not None:
+            frac *= min(self.sampling.rate, 1.0)
+        if self.delay is not None:
+            frac *= self.delay.transmit_frac(self.n_clients)
+        return frac
+
     # ------------------------------------------------------- state wrapping
-    def _wrap(self, inner, extras):
-        return EngineState(inner, tuple(extras)) if self.transforms else inner
+    @property
+    def _wrapped(self) -> bool:
+        return bool(self.transforms) or self.delay is not None
+
+    def _wrap(self, inner, extras, dstate=None):
+        if not self._wrapped:
+            return inner
+        extras = tuple(extras) + ((dstate,) if self.delay is not None else ())
+        return EngineState(inner, extras)
 
     def _split(self, state):
-        if self.transforms:
-            return state.inner, state.extras
-        return state, ()
+        """-> (inner, transform extras, DelayState | None)."""
+        if not self._wrapped:
+            return state, (), None
+        if self.delay is not None:
+            return state.inner, state.extras[:-1], state.extras[-1]
+        return state.inner, state.extras, None
 
     def _inner(self, state):
-        return state.inner if self.transforms else state
+        return state.inner if self._wrapped else state
 
     # ------------------------------------------------------------- plumbing
     def _grad(self, grad_fn: GradFn) -> GradFn:
@@ -385,34 +435,89 @@ class RoundEngine:
         msg_shapes = jax.eval_shape(msg_of, inner, init_batch)
         return tuple(t.init_extra(msg_shapes) for t in self.transforms)
 
-    def _comm_step(self, gf, inner, extras, batch, rctx, agg, step):
-        """The single aggregating step: message -> transforms -> reduce ->
-        apply. The only place a cross-client collective fires. ``step`` is
-        the state's step counter at round entry — stochastic transforms
-        derive their per-round PRNG key from it (never reused across
-        rounds; stack multiple stochastic transforms with distinct seeds)."""
+    def _comm_step(self, gf, inner, extras, batch, rctx, agg, step,
+                   dstate=None, fresh=None):
+        """The single aggregating step: message -> transforms -> [staleness
+        buffer] -> reduce -> apply. The only place a cross-client collective
+        fires. ``step`` is the state's step counter at round entry —
+        stochastic transforms derive their per-round PRNG key from it
+        (never reused across rounds; stack multiple stochastic transforms
+        with distinct seeds).
+
+        With ``dstate``/``fresh`` set (a ``with_delay`` round), the wire
+        message lands in the server buffer only where ``fresh`` is true,
+        the stale policy turns buffer + ages into the aggregation mean,
+        and stale clients either apply the update with their BUFFERED own
+        message (``last``/``poly`` — the copy both ends kept) or take the
+        tau-th step as a pure local continuation (``drop``). Stale clients
+        never transmitted, so their transform memory (error feedback /
+        shift) reverts to its pre-round value. Returns
+        ``(inner, extras, dstate, tx)`` — ``tx`` is the post-transform
+        wire message (``init`` seeds the buffer from it)."""
         msg, mctx = self.message(gf, inner, batch, rctx)
         new_extras = []
         for t, e in zip(self.transforms, extras):
             msg, e = t.apply(msg, e, step)
             new_extras.append(e)
-        msg_bar = agg(msg)
-        inner = self.server_aggregate(inner, msg, msg_bar, mctx, rctx)
-        return inner, tuple(new_extras)
+
+        if dstate is None:  # synchronous path (and always: init)
+            msg_bar = agg(msg)
+            inner = self.server_aggregate(inner, msg, msg_bar, mctx, rctx)
+            return inner, tuple(new_extras), None, msg
+
+        # fresh arrivals replace the buffered copy and reset its age; the
+        # buffer is server state — it updates and ages every round.
+        buf = select_clients(msg, dstate.buf, fresh, self.n_clients)
+        age = jnp.where(fresh, 0, dstate.age + 1).astype(dstate.age.dtype)
+        w = self.delay.policy.weights(age, fresh)
+        msg_bar = weighted_client_mean(buf, w)
+        # each client's own-message slot is what the server attributed to
+        # it: the fresh wire message where it landed, the buffer elsewhere.
+        agg_inner = self.server_aggregate(inner, buf, msg_bar, mctx, rctx)
+        if not self.delay.policy.apply_stale:
+            # drop: no-arrival clients take the tau-th step as a pure local
+            # step instead of the aggregation update (XLA CSEs the repeated
+            # gradient evaluation at the same point).
+            local = self.local_step(gf, inner, batch, rctx)
+            agg_inner = select_clients(agg_inner, local, fresh, self.n_clients)
+        new_extras = tuple(
+            select_clients(ne, e, fresh, self.n_clients)
+            for ne, e in zip(new_extras, extras))
+        return agg_inner, new_extras, DelayState(buf=buf, age=age), msg
+
+    def _would_transmit(self, gf, inner, extras, batch):
+        """The wire message the current state WOULD transmit (begin_round
+        context and transform-memory updates discarded) — seeds the delay
+        buffer for specs whose warm-up runs no init aggregation."""
+        st, rctx = self.begin_round(gf, inner, batch, tree_client_mean)
+        msg, _ = self.message(gf, st, batch, rctx)
+        for t, e in zip(self.transforms, extras):
+            msg, _ = t.apply(msg, e, inner.t)
+        return msg
 
     # -------------------------------------------------------------- protocol
     def init(self, grad_fn: GradFn, x0, init_batch):
         """Replicate-and-warm-up, plus one aggregating step if the spec's
-        warm-up requests it. Client sampling never applies at init (matching
-        the full-participation initialization of the paper)."""
+        warm-up requests it. Client sampling and delay never apply at init
+        (matching the full-participation synchronous initialization of the
+        paper); the delay buffer is seeded with each client's (would-be)
+        init-time wire message, age 0 — so early stale rounds average real
+        messages, never zeros."""
         gf = self._grad(grad_fn)
         inner, run_comm = self.init_warmup(gf, x0, init_batch)
         extras = self._init_extras(gf, inner, init_batch)
+        tx = None
         if run_comm:
-            inner, extras = self._comm_step(gf, inner, extras, init_batch,
-                                            rctx=None, agg=tree_client_mean,
-                                            step=inner.t)
-        return self._wrap(inner, extras)
+            inner, extras, _, tx = self._comm_step(
+                gf, inner, extras, init_batch, rctx=None,
+                agg=tree_client_mean, step=inner.t)
+        dstate = None
+        if self.delay is not None:
+            if tx is None:
+                tx = self._would_transmit(gf, inner, extras, init_batch)
+            dstate = DelayState(
+                buf=tx, age=jnp.zeros((self.n_clients,), jnp.int32))
+        return self._wrap(inner, extras, dstate)
 
     def round(self, grad_fn: GradFn, state, batches):
         """One communication round: optional round-start exchange, tau-1
@@ -423,7 +528,7 @@ class RoundEngine:
         aggregation sits OUTSIDE the scan so the cross-pod all-reduce
         appears exactly once per round in the HLO."""
         gf = self._grad(grad_fn)
-        inner, extras = self._split(state)
+        inner, extras, dstate = self._split(state)
 
         step0 = inner.t  # round-entry counter: keys masks AND compressors
         mask = None
@@ -433,6 +538,11 @@ class RoundEngine:
                                      jnp.asarray(inner.t, jnp.int32))
             mask = participation_mask(key, self.n_clients, self.sampling.rate)
             agg = lambda tr: masked_client_mean(tr, mask)  # noqa: E731
+        fresh = None
+        if self.delay is not None:
+            fresh = self.delay.fresh_mask(step0, self.tau, self.n_clients)
+            if mask is not None:
+                fresh = jnp.logical_and(fresh, mask)  # absent can't deliver
         frozen_inner, frozen_extras = inner, extras
 
         first_b = jax.tree.map(lambda b: b[0], batches)
@@ -447,15 +557,18 @@ class RoundEngine:
             inner, _ = jax.lax.scan(body, inner, local_b)
 
         last_b = jax.tree.map(lambda b: b[self.tau - 1], batches)
-        inner, extras = self._comm_step(gf, inner, extras, last_b, rctx, agg,
-                                        step=step0)
+        inner, extras, dstate, _ = self._comm_step(
+            gf, inner, extras, last_b, rctx, agg, step=step0,
+            dstate=dstate, fresh=fresh)
 
         if mask is not None:
-            # absent clients keep their pre-round state entirely
+            # absent clients keep their pre-round state entirely; the delay
+            # buffer is SERVER state and is never reverted — an absent
+            # client's last-known message simply keeps aging.
             inner = select_clients(inner, frozen_inner, mask, self.n_clients)
             extras = tuple(select_clients(e, fe, mask, self.n_clients)
                            for e, fe in zip(extras, frozen_extras))
-        return self._wrap(inner, extras)
+        return self._wrap(inner, extras, dstate)
 
 
 # ------------------------------------------------------- transform factories
@@ -517,8 +630,36 @@ def with_compression(algo: RoundEngine, *, k_frac: float = 1.0,
     return dataclasses.replace(algo, transforms=algo.transforms + (t,))
 
 
+def with_delay(algo: RoundEngine, delay, *, policy="last",
+               seed: int = 0) -> RoundEngine:
+    """Asynchronous rounds for ANY engine algorithm: simulate delayed
+    uplinks with a server-side last-known message buffer and a
+    stale-aggregation policy (see repro/core/staleness.py).
+
+    ``delay`` is a spec string (``"fixed:2"``, ``"rr:1"``, ``"geom:0.5"``)
+    or a delay-model object; ``policy`` is ``"drop"`` / ``"last"`` /
+    ``"poly:<a>"`` (or a :class:`~repro.core.staleness.StalePolicy`);
+    ``seed`` keys stochastic schedules (domain-separated from the
+    participation and compression streams). Identity delays (``"none"``,
+    ``"fixed:0"``, ``"rr:0"``, ``"geom:1"``) are exact no-ops — the
+    algorithm object is returned unchanged, for every policy.
+
+    Delay applies at the aggregation seam AFTER any compression transforms
+    (the buffer holds wire messages), so composition with
+    ``with_compression`` / ``with_participation`` is order-independent."""
+    model = parse_delay(delay)
+    if model is None:
+        return algo
+    if algo.delay is not None:
+        raise ValueError("algorithm already has a delay model attached "
+                         f"({algo.delay!r}); stacked delays are undefined")
+    cfg = StalenessConfig(model=model, policy=parse_policy(policy), seed=seed)
+    return dataclasses.replace(algo, delay=cfg)
+
+
 # --------------------------------------------------------- multi-round driver
-def make_round_runner(algo, grad_fn: GradFn, *, metric_fn=None, repeat: bool = False):
+def make_round_runner(algo, grad_fn: GradFn, *, metric_fn=None,
+                      repeat: bool = False, metric_with_batch: bool = False):
     """Build the jitted K-round scan over ``algo.round``.
 
     * ``repeat=False`` (default): the returned ``run(state, batches)`` scans
@@ -528,13 +669,21 @@ def make_round_runner(algo, grad_fn: GradFn, *, metric_fn=None, repeat: bool = F
       rounds — the full-batch simulation mode.
 
     ``metric_fn(state) -> pytree`` is evaluated after every round and stacked
-    into the second return value. Keep ONE runner per training loop: jit
-    caching is per function instance."""
+    into the second return value; with ``metric_with_batch=True`` it is
+    called as ``metric_fn(state, round_batches)`` instead (the per-round
+    ``[tau, clients, ...]`` pytree) — this is how ``FedTrainer.fit`` keeps
+    its eval-loss series on-device inside the scan. Keep ONE runner per
+    training loop: jit caching is per function instance."""
+    def _metric(s, b):
+        if metric_fn is None:
+            return None
+        return metric_fn(s, b) if metric_with_batch else metric_fn(s)
+
     if repeat:
         def run(state, batches, rounds):
             def body(s, _):
                 s = algo.round(grad_fn, s, batches)
-                return s, (metric_fn(s) if metric_fn is not None else None)
+                return s, _metric(s, batches)
 
             return jax.lax.scan(body, state, None, length=rounds)
 
@@ -543,7 +692,7 @@ def make_round_runner(algo, grad_fn: GradFn, *, metric_fn=None, repeat: bool = F
     def run(state, batches):
         def body(s, b):
             s = algo.round(grad_fn, s, b)
-            return s, (metric_fn(s) if metric_fn is not None else None)
+            return s, _metric(s, b)
 
         return jax.lax.scan(body, state, batches)
 

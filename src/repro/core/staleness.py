@@ -1,0 +1,307 @@
+"""Staleness: asynchronous (delayed-uplink) federated rounds.
+
+The paper's round model is fully synchronous — every client's message
+arrives in the round it was computed. Real federations have stragglers and
+delayed uplinks. This module simulates them INSIDE the jitted round loop on
+the engine's message/aggregate seam (the same seam ``with_compression`` /
+``with_participation`` ride): clients always compute their round, but a
+per-client *delay model* decides on which rounds each client's uplink
+actually lands at the server. The server keeps a **last-known message
+buffer** per client (:class:`DelayState`: the most recent successfully
+transmitted — post-compression — wire message, plus its integer age in
+rounds), and a pluggable *stale-aggregation policy* decides how buffered
+messages enter the server mean.
+
+Delay models (``parse_delay`` grammar — the ``FedScenario(delay=...)`` /
+``--delay`` knob):
+
+* ``fixed:k`` — periodic uplink: EVERY client's message lands only on
+  rounds ``r % (k+1) == 0``, so between arrivals the server's copy ages
+  ``1..k``. ``fixed:0`` is the synchronous engine (exact no-op: the
+  factory returns the algorithm object unchanged).
+* ``rr:k`` — deterministic round-robin straggler: at round ``r`` the ``k``
+  clients ``{r, .., r+k-1} mod N`` miss the round; each client goes stale
+  for ``k`` consecutive rounds per cycle of ``N`` (max age ``k``).
+  ``rr:0`` is an exact no-op.
+* ``geom:p`` — each client's uplink lands independently with probability
+  ``p`` per round (inter-arrival times geometric, mean ``1/p``; expected
+  age ``(1-p)/p``). Drawn from the step counter via a domain-separated
+  PRNG stream (same restart-stable schedule discipline as the
+  participation-mask and compression keys). ``geom:1`` is an exact no-op.
+
+Stale-aggregation policies (``parse_policy``):
+
+* ``drop`` — aggregate FRESH arrivals only (present-clients mean, exactly
+  the participation-mask machinery); clients whose message did not land
+  take the *local continuation* instead of the aggregation update — the
+  tau-th step applied as a pure local step (``local_step`` on the comm
+  batch), so they keep training and their transform/drift state freezes.
+  On rounds where NOTHING lands (``fixed:k`` between arrivals) the server
+  skips the aggregation entirely and every client continues locally.
+* ``last`` — the server averages the full buffer (fresh messages where
+  they landed, last-known copies elsewhere) uniformly; every client
+  applies the update using the server's copy of its OWN message (the
+  buffered one — clients keep what they last transmitted). Uniform
+  weights keep FedCET's redistributive invariant ``sum_i d_i = 0`` exact
+  under staleness: the drift updates sum over the buffer deviations from
+  the buffer mean.
+* ``poly:a`` — staleness-discounted weights ``w_i = (1+age_i)^(-a)``
+  (normalized) over the buffer; ``poly:0`` degenerates to ``last``. The
+  weighted mean intentionally breaks the unweighted mean-zero structure —
+  whether FedCET's invariant survives is a *measured* question
+  (benchmarks/staleness_sweep.py).
+
+All policies are weighted buffer means (:func:`weighted_client_mean`), so
+when every client is fresh every round they all reduce to the plain
+cross-client mean and the attached machinery is a bit-identical no-op on
+the algorithm state (pinned in tests/test_staleness.py).
+
+The buffer is SERVER state: it updates (and ages) every round regardless
+of client participation, is checkpointed with the run inside
+``EngineState`` extras, and is seeded at ``init`` with each client's
+would-be first message so early stale rounds never average zeros.
+Composition with the other transforms is defined once in the engine
+(repro/core/engine.py ``_comm_step``): compression runs first (the buffer
+holds wire messages; stale clients' error-feedback / shift memory reverts
+— they did not transmit), participation masks freshness (an absent client
+cannot deliver) while its buffer keeps aging.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "DelayState",
+    "FixedDelay",
+    "GeometricDelay",
+    "RoundRobinStraggler",
+    "StalePolicy",
+    "StalenessConfig",
+    "parse_delay",
+    "parse_policy",
+    "weighted_client_mean",
+]
+
+#: domain-separation tag folded into geometric-delay keys so the freshness
+#: stream never collides with the participation-mask (bare seed) or
+#: compression (0x7A11A5 + index) schedules at the shared default seed=0.
+_DELAY_KEY_TAG = 0x57A1E
+
+
+class DelayState(NamedTuple):
+    """The server-side message buffer riding in ``EngineState`` extras.
+
+    ``buf`` mirrors the (post-transform) message pytree — stacked
+    ``[clients, ...]`` leaves holding each client's last successfully
+    transmitted wire message; ``age`` is ``[clients] int32``, the number of
+    rounds since that client's last arrival (0 = landed this round)."""
+
+    buf: Any
+    age: jax.Array
+
+
+def weighted_client_mean(tree, w: jax.Array):
+    """Weighted mean over the leading clients axis with weights ``w``
+    (normalized here; an all-zero ``w`` yields zeros — callers only hit
+    that when no client applies the result). Reduces to the plain client
+    mean for any uniform positive ``w``. The zero-sum guard must not
+    clamp small positive sums (``poly:a`` weights can sum below 1 for
+    very stale buffers — clamping would silently shrink the mean)."""
+    s = jnp.sum(w)
+    denom = jnp.where(s > 0, s, 1.0)
+
+    def mean_leaf(a):
+        wb = w.reshape((-1,) + (1,) * (a.ndim - 1)).astype(a.dtype)
+        return jnp.sum(a * wb, axis=0, keepdims=True) / denom.astype(a.dtype)
+
+    return jax.tree.map(mean_leaf, tree)
+
+
+# ------------------------------------------------------------- delay models
+@dataclasses.dataclass(frozen=True)
+class FixedDelay:
+    """Periodic uplink: all clients land every ``k+1`` rounds (age cycles
+    ``0..k``). ``k=0`` = synchronous."""
+
+    k: int
+
+    requires_key = False
+
+    @property
+    def identity(self) -> bool:
+        return self.k <= 0
+
+    @property
+    def max_age(self) -> int:
+        return max(self.k, 0)
+
+    def fresh(self, key, round_index: jax.Array, n_clients: int) -> jax.Array:
+        del key
+        hit = (round_index % (self.k + 1)) == 0
+        return jnp.broadcast_to(hit, (n_clients,))
+
+    def transmit_frac(self, n_clients: int) -> float:
+        del n_clients
+        return 1.0 / (self.k + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRobinStraggler:
+    """Deterministic rotating stragglers: at round ``r`` the ``k`` clients
+    ``(r + j) mod N`` (``j < k``) miss the round. Each client is stale for
+    ``k`` consecutive rounds per ``N``-round cycle (max age ``k``)."""
+
+    k: int
+
+    requires_key = False
+
+    @property
+    def identity(self) -> bool:
+        return self.k <= 0
+
+    @property
+    def max_age(self) -> int:
+        return max(self.k, 0)
+
+    def fresh(self, key, round_index: jax.Array, n_clients: int) -> jax.Array:
+        del key
+        idx = jnp.arange(n_clients)
+        return ((idx - round_index) % n_clients) >= self.k
+
+    def transmit_frac(self, n_clients: int) -> float:
+        return max(n_clients - self.k, 0) / n_clients
+
+
+@dataclasses.dataclass(frozen=True)
+class GeometricDelay:
+    """Independent per-client Bernoulli(``p``) arrival per round —
+    geometric inter-arrival times with mean ``1/p``, expected staleness
+    ``(1-p)/p``. ``p=1`` = synchronous."""
+
+    p: float
+
+    requires_key = True
+
+    def __post_init__(self):
+        assert 0.0 < self.p <= 1.0, self.p
+
+    @property
+    def identity(self) -> bool:
+        return self.p >= 1.0
+
+    def fresh(self, key, round_index: jax.Array, n_clients: int) -> jax.Array:
+        del round_index  # already folded into the key by StalenessConfig
+        return jax.random.bernoulli(key, self.p, (n_clients,))
+
+    def transmit_frac(self, n_clients: int) -> float:
+        del n_clients
+        return self.p
+
+
+# ----------------------------------------------------------------- policies
+@dataclasses.dataclass(frozen=True)
+class StalePolicy:
+    """Stale-robust aggregation over the server buffer.
+
+    ``kind`` selects the weight rule over (age, fresh); ``apply_stale``
+    says whether clients with no fresh arrival still apply the aggregation
+    update (using their buffered own message) or take the local
+    continuation instead (``drop``)."""
+
+    kind: str            # "drop" | "last" | "poly"
+    a: float = 0.0       # poly discount exponent
+
+    @property
+    def apply_stale(self) -> bool:
+        return self.kind != "drop"
+
+    def weights(self, age: jax.Array, fresh: jax.Array) -> jax.Array:
+        # canonical float width (f64 under x64): f32 weights would leave a
+        # ~1e-8 non-cancellation in the weighted mean even when all ages
+        # are equal, flooring otherwise-exact f64 convergence runs.
+        ft = jax.dtypes.canonicalize_dtype(jnp.float64)
+        if self.kind == "drop":
+            return fresh.astype(ft)
+        if self.kind == "last":
+            return jnp.ones_like(age, dtype=ft)
+        if self.kind == "poly":
+            return (1.0 + age.astype(ft)) ** (-self.a)
+        raise ValueError(f"unknown stale policy kind {self.kind!r}")
+
+
+def parse_policy(spec: "str | StalePolicy") -> StalePolicy:
+    """``drop`` | ``last`` | ``poly:<a>`` (``poly:0`` == ``last`` weights)."""
+    if isinstance(spec, StalePolicy):
+        return spec
+    s = spec.strip().lower()
+    name, _, arg = s.partition(":")
+    if name == "drop":
+        return StalePolicy("drop")
+    if name == "last":
+        return StalePolicy("last")
+    if name == "poly":
+        return StalePolicy("poly", a=float(arg) if arg else 1.0)
+    raise ValueError(f"unknown stale policy {spec!r} (try drop, last, poly:1)")
+
+
+def parse_delay(spec):
+    """Parse a delay-model spec; returns ``None`` for synchronous specs
+    (``none``/``off``/``fixed:0``/``rr:0``/``geom:1``), so ``with_delay``
+    can be an exact no-op at the identity settings, like the other
+    transform factories."""
+    if spec is None:
+        return None
+    if isinstance(spec, (FixedDelay, RoundRobinStraggler, GeometricDelay)):
+        return None if spec.identity else spec
+    s = str(spec).strip().lower()
+    if s in ("", "none", "off", "sync"):
+        return None
+    name, _, arg = s.partition(":")
+    if name == "fixed":
+        model = FixedDelay(int(arg))
+    elif name == "rr":
+        model = RoundRobinStraggler(int(arg))
+    elif name == "geom":
+        model = GeometricDelay(float(arg))
+    else:
+        raise ValueError(
+            f"unknown delay spec {spec!r} (try fixed:2, rr:1, geom:0.5)")
+    return None if model.identity else model
+
+
+# ------------------------------------------------------------ configuration
+@dataclasses.dataclass(frozen=True)
+class StalenessConfig:
+    """The engine-level staleness knob (``RoundEngine.delay``): a delay
+    model + a stale-aggregation policy + the PRNG seed for stochastic
+    schedules. Frozen/hashable so it is jit-static like the rest of the
+    algorithm spec."""
+
+    model: Any
+    policy: StalePolicy = StalePolicy("last")
+    seed: int = 0
+
+    def fresh_mask(self, step, tau: int, n_clients: int) -> jax.Array:
+        """[n_clients] bool arrival mask for the round entered at step
+        counter ``step`` (the engine advances ``t`` by exactly ``tau`` per
+        round, so ``step // tau`` is the round index). Stochastic models
+        key off the raw step through a domain-separated stream —
+        deterministic under restart, never shared with the participation
+        or compression schedules."""
+        r = jnp.asarray(step, jnp.int32) // tau
+        key = None
+        if getattr(self.model, "requires_key", False):
+            key = jax.random.fold_in(jax.random.key(self.seed), _DELAY_KEY_TAG)
+            key = jax.random.fold_in(key, jnp.asarray(step, jnp.int32))
+        return self.model.fresh(key, r, n_clients)
+
+    def transmit_frac(self, n_clients: int) -> float:
+        """Expected fraction of rounds on which a client's uplink lands —
+        the duty cycle CommMeter folds into uplink bytes (buffered rounds
+        transmit ZERO uplink bits)."""
+        return float(self.model.transmit_frac(n_clients))

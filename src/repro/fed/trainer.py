@@ -6,9 +6,13 @@ Responsibilities a real deployment needs beyond the algorithm step:
   running through the shared scan driver (``engine.make_round_runner``):
   rounds between eval/checkpoint boundaries execute as ONE jitted
   ``lax.scan`` segment rather than a python-level round loop,
-* periodic held-out evaluation: global-model loss AND per-client local
-  losses (the heterogeneity gap — mean local minus global — is the
-  practical drift diagnostic),
+* periodic evaluation: global-model loss AND per-client local losses (the
+  heterogeneity gap — mean local minus global — is the practical drift
+  diagnostic). In the default (train-batch) mode the losses are computed
+  INSIDE the round scan via the runner's per-round metric hook, so a
+  segment never leaves the device between eval boundaries — ``fit`` pulls
+  one metric row per boundary; a held-out ``eval_batch_for`` falls back to
+  the out-of-scan evaluator,
 * checkpoint/resume of the FULL algorithm state (round counter and any
   transform state such as error-feedback / shift memory included),
 * BIT-TRUE communication metering via the algorithm's declared vector
@@ -60,9 +64,23 @@ class FedTrainer:
         self.loss_fn = loss_fn
         self.cfg = cfg
         self.grad_fn = jax.grad(loss_fn)
-        # ONE runner for the whole fit: jit caches a compilation per distinct
-        # segment length, so steady-state segments never retrace.
+        # ONE runner per mode for the whole fit: jit caches a compilation
+        # per distinct segment length, so steady-state segments never
+        # retrace.
         self._runner = make_round_runner(algo, self.grad_fn)
+
+        def _scan_metrics(state, batches):
+            """Per-round eval losses ON-DEVICE inside the scan (same math
+            as ``evaluate``: first tau-slice of that round's batches)."""
+            b = jax.tree.map(lambda a: a[0], batches)
+            local = jax.vmap(loss_fn)(algo.client_params(state), b)
+            glob = jnp.mean(jax.vmap(loss_fn, in_axes=(None, 0))(
+                algo.global_params(state), b))
+            return {"loss_global": glob, "loss_local_mean": jnp.mean(local)}
+
+        self._metric_runner = make_round_runner(
+            algo, self.grad_fn, metric_fn=_scan_metrics,
+            metric_with_batch=True)
         self._eval_clients = jax.jit(
             lambda xs, b: jax.vmap(loss_fn)(xs, b))
         self._eval_global = jax.jit(
@@ -103,6 +121,10 @@ class FedTrainer:
             meter = CommMeter.for_params(params1, itemsize=self.cfg.itemsize,
                                          n_clients=self.algo.n_clients)
         t0 = time.time()
+        # train-batch eval rides the scan's metric hook (no host round-trip
+        # inside a segment); a held-out eval fn needs the out-of-scan path.
+        scan_eval = bool(self.cfg.eval_every) and eval_batch_for is None
+        runner = self._metric_runner if scan_eval else self._runner
         for r, stop in scan_segments(
                 start_round, self.cfg.rounds,
                 lambda s: self._eval_at(s) or self._ckpt_at(s),
@@ -110,12 +132,17 @@ class FedTrainer:
             stacked = jax.tree.map(
                 lambda *bs: jnp.stack(bs),
                 *[batches_for(i) for i in range(r, stop + 1)])
-            state, _ = self._runner(state, stacked)
+            state, metrics = runner(state, stacked)
             for _ in range(r, stop + 1):
                 meter.tick_round(self.algo)
             if self._eval_at(stop):
-                row = self.evaluate(state, eval_batch_for(stop)
-                                    if eval_batch_for else batches_for(stop))
+                if scan_eval:  # the segment's last round == stop
+                    glob = float(metrics["loss_global"][-1])
+                    loc = float(metrics["loss_local_mean"][-1])
+                    row = {"loss_global": glob, "loss_local_mean": loc,
+                           "heterogeneity_gap": loc - glob}
+                else:
+                    row = self.evaluate(state, eval_batch_for(stop))
                 row.update(round=stop, comm_bytes=meter.total,
                            wall_s=round(time.time() - t0, 2))
                 self.history.append(row)

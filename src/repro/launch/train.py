@@ -30,6 +30,7 @@ from repro.configs import get_config
 from repro.configs.base import INPUT_SHAPES, ArchConfig, FedScenario
 from repro.core.engine import EngineState, make_round_runner, scan_segments
 from repro.core.fedcet import FedCET, FedCETState
+from repro.core.staleness import DelayState
 from repro.launch import input_specs as ispec
 from repro.launch import partition
 from repro.launch.mesh import client_axes, n_clients, tp_size
@@ -78,8 +79,10 @@ def _fsdp(plan: TrainPlan) -> str | None:
 
 def state_shardings(plan: TrainPlan, state_shapes):
     """Shardings for the algorithm state: x and d are stacked-client param
-    trees; transform extras (error-feedback / shift memory) are
-    message-shaped — the same stacked layout as x — and shard identically."""
+    trees; transform extras (error-feedback / shift memory) and the delay
+    buffer are message-shaped — the same stacked layout as x — and shard
+    identically (the buffer's ``[clients] int32`` age vector shards over
+    the client axes)."""
     mesh, tp, ca = plan.mesh, tp_size(plan.mesh), plan.client_axes
     inner_shapes = (state_shapes.inner
                     if isinstance(state_shapes, EngineState) else state_shapes)
@@ -98,7 +101,9 @@ def abstract_state(plan: TrainPlan):
     """Shape-only algorithm state (no allocation) for AOT lowering:
     FedCETState, wrapped in EngineState when the plan's scenario attaches
     message transforms (extras shaped via ``eval_shape`` over each
-    transform's ``init_extra`` on the message = x-shaped tree)."""
+    transform's ``init_extra`` on the message = x-shaped tree) and/or a
+    delay model (final extras slot = the server buffer: an x-shaped
+    last-known message tree plus the ``[clients] int32`` age vector)."""
     model = build_model(plan.cfg)
     params = jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
     stack = lambda tree: jax.tree.map(
@@ -106,10 +111,15 @@ def abstract_state(plan: TrainPlan):
     inner = FedCETState(x=stack(params), d=stack(params),
                         t=jax.ShapeDtypeStruct((), jnp.int64))
     transforms = getattr(plan.algo, "transforms", ())
-    if not transforms:
+    delay = getattr(plan.algo, "delay", None)
+    if not transforms and delay is None:
         return inner
     extras = tuple(jax.eval_shape(lambda t=t: t.init_extra(inner.x))
                    for t in transforms)
+    if delay is not None:
+        extras = extras + (DelayState(
+            buf=inner.x,
+            age=jax.ShapeDtypeStruct((plan.n_clients,), jnp.int32)),)
     return EngineState(inner=inner, extras=extras)
 
 
@@ -170,16 +180,20 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
                  alpha: float = 3e-3, c: float = 0.05, heterogeneity: float = 0.8,
                  reduced: bool = True, seed: int = 0,
                  compression: str = "none", participation: float = 1.0,
+                 delay: str = "none", stale_policy: str = "last",
                  log_every: int = 10, ckpt_dir: str | None = None,
                  callback=None) -> dict:
     """End-to-end FedCET LM training on the host device(s). Returns metrics
     history. Used by examples/fed_train_lm.py.
 
     ``compression`` (a compressor spec — ``"randk:0.25"``, ``"shift:q8"``,
-    ``"ef:topk:0.3+bf16"``, ...) and ``participation`` compose the
-    corresponding engine transforms onto the FedCET spec, so the production
-    LM loop runs any scenario the simulation tests pin; comm metering is
-    bit-true from the resulting compressor stack."""
+    ``"ef:topk:0.3+bf16"``, ...), ``participation``, and ``delay`` /
+    ``stale_policy`` (asynchronous rounds — ``"fixed:2"``, ``"rr:1"``,
+    ``"geom:0.5"`` with ``drop``/``last``/``poly:a`` aggregation) compose
+    the corresponding engine transforms onto the FedCET spec, so the
+    production LM loop runs any scenario the simulation tests pin; comm
+    metering is bit-true from the resulting compressor stack and the delay
+    model's uplink duty cycle."""
     from repro.checkpoint.ckpt import save
     from repro.core.comm import CommMeter
     from repro.data.synthetic import make_hetero_lm_dataset
@@ -190,7 +204,8 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
     model = build_model(cfg)
     params = model.init(jax.random.key(seed))
     scenario = FedScenario(compression=compression,
-                           participation=participation, seed=seed)
+                           participation=participation, delay=delay,
+                           stale_policy=stale_policy, seed=seed)
     algo = scenario.apply(FedCET(alpha=alpha, c=c, tau=tau, n_clients=n_clients))
     ds = make_hetero_lm_dataset(cfg.vocab_size, n_clients, seq_len, batch,
                                 heterogeneity=heterogeneity, seed=seed)
@@ -250,6 +265,10 @@ def main(argv=None):
                          "randk:0.25 | q8 | shift:q8 | randk:0.5+q8 | ef:...")
     ap.add_argument("--participation", type=float, default=1.0,
                     help="per-round Bernoulli client participation rate")
+    ap.add_argument("--delay", default="none",
+                    help="uplink delay model: none | fixed:2 | rr:1 | geom:0.5")
+    ap.add_argument("--stale-policy", default="last",
+                    help="stale-aggregation policy: drop | last | poly:1")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
     hist = run_training(
@@ -257,6 +276,7 @@ def main(argv=None):
         batch=args.batch, seq_len=args.seq_len, alpha=args.alpha,
         reduced=not args.full, ckpt_dir=args.ckpt_dir,
         compression=args.compression, participation=args.participation,
+        delay=args.delay, stale_policy=args.stale_policy,
         callback=lambda r, l, b: print(f"round {r:5d}  loss {l:.4f}  comm {b/1e6:.1f} MB"))
     print("final loss:", hist["loss"][-1])
 

@@ -342,3 +342,49 @@ def test_fed_scenario_apply():
     ef_algo = FedScenario(compression="topk:0.3").apply(base)
     assert isinstance(ef_algo.transforms[0].compressor, ErrorFeedback)
     del EngineState  # imported for documentation parity
+
+
+# -------------------------------------------------- per-client dither option
+def test_per_client_dither_unbiased():
+    """StochasticQuant(per_client_dither=True) — each client row gets an
+    INDEPENDENT dither — remains unbiased: the empirical mean over many
+    keys matches v within the binomial dither-flip envelope (the same
+    bound as the shared-dither test above)."""
+    comp = StochasticQuant(bits=8, per_client_dither=True)
+    v = _leaf(jax.random.key(0))
+    n_keys = 4000
+    outs = jax.vmap(lambda k: comp.compress(k, v))(
+        jax.random.split(jax.random.key(1), n_keys))
+    mean = np.asarray(jnp.mean(outs, axis=0))
+    se = np.asarray(jnp.std(outs, axis=0)) / np.sqrt(n_keys)
+    step = float(jnp.max(jnp.abs(v))) / (2 ** 7 - 1)
+    se = se + step / (2.0 * np.sqrt(n_keys))
+    np.testing.assert_array_less(np.abs(mean - np.asarray(v)), 5.0 * se + 1e-9)
+
+
+def test_per_client_dither_desynchronizes_clients():
+    """Regression for the option's semantics: with identical rows, the
+    shared dither quantizes every client identically (the synchronized-
+    randomness invariant), while per_client_dither=True yields different
+    wire messages per client — same wire bits, no seed synchronization."""
+    row = jax.random.normal(jax.random.key(7), (40,))
+    v = jnp.broadcast_to(row[None], (6, 40))
+    key = jax.random.key(8)
+    shared = np.asarray(StochasticQuant(bits=8).compress(key, v))
+    for r in range(1, 6):
+        np.testing.assert_array_equal(shared[r], shared[0])
+    per_client = np.asarray(
+        StochasticQuant(bits=8, per_client_dither=True).compress(key, v))
+    assert any(not np.array_equal(per_client[r], per_client[0])
+               for r in range(1, 6))
+    # accounting is identical: the dither never rides the wire
+    assert StochasticQuant(8, per_client_dither=True).bits_per_coord \
+        == StochasticQuant(8).bits_per_coord == 8.0
+
+
+def test_per_client_dither_spec():
+    comp = from_spec("pq8")
+    assert isinstance(comp, StochasticQuant) and comp.per_client_dither
+    assert comp.bits == 8
+    shifted = from_spec("shift:pq4")
+    assert isinstance(shifted, Shifted) and shifted.inner.per_client_dither

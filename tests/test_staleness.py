@@ -1,0 +1,355 @@
+"""The staleness subsystem (repro/core/staleness.py + engine with_delay).
+
+Pins, in order:
+
+* identity delays are EXACT no-ops (the factory returns the algorithm
+  object unchanged, for every policy) and the attached machinery with an
+  always-fresh schedule is trajectory-identical (<= 1e-12) to the
+  synchronous engine for FedCET, FedAvg, SCAFFOLD and FedLin;
+* composition with ``with_compression`` / ``with_participation`` in either
+  order, including drop + always-fresh + sampling == sampling alone;
+* determinism: same seed => identical delay schedule across runs, and
+  resume-from-checkpoint reproduces the server buffer state exactly;
+* measured convergence boundaries on the paper's quadratic (full sweep in
+  benchmarks/staleness_sweep.py): FedCET stays EXACTLY convergent at
+  delay 2 under ``drop`` and ``last`` (the buffered message is the
+  absolute vector v, so reusing it is safe and uniform weighting keeps
+  ``sum_i d_i = 0``), while ``poly:1`` staleness-discounted weights break
+  the mean-zero drift structure (floor ~5e-2) and SCAFFOLD's
+  delta-encoded message makes ``last`` re-apply stale control updates
+  (error ~1e0);
+* the uplink duty cycle in CommMeter / comm_bits_per_round: buffered
+  rounds transmit zero uplink bits.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CommMeter,
+    DelayState,
+    EngineState,
+    FedAvg,
+    FedCET,
+    FedLin,
+    Scaffold,
+    StalenessConfig,
+    max_weight_c,
+    parse_policy,
+    run_rounds,
+    with_compression,
+    with_delay,
+    with_participation,
+)
+from repro.core.comm import comm_bits_per_round
+from repro.core.lr_search import lr_search
+from repro.core.simulate import simulate_quadratic
+from repro.core.staleness import (
+    FixedDelay,
+    GeometricDelay,
+    RoundRobinStraggler,
+    parse_delay,
+)
+from repro.data.quadratic import make_quadratic_problem
+
+jax.config.update("jax_enable_x64", True)
+
+TAU = 2
+_TOL = dict(rtol=1e-12, atol=1e-12)
+POLICIES = ("drop", "last", "poly:1")
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_quadratic_problem(0)
+
+
+def _fedcet(problem, tau=TAU):
+    alpha = lr_search(problem.mu, problem.L, tau)
+    return FedCET(alpha=alpha, c=max_weight_c(problem.mu, alpha), tau=tau,
+                  n_clients=problem.n_clients)
+
+
+def _all_algos(problem):
+    n, L = problem.n_clients, problem.L
+    return {
+        "fedcet": _fedcet(problem),
+        "fedavg": FedAvg(alpha=1.0 / (2 * TAU * L), tau=TAU, n_clients=n),
+        "scaffold": Scaffold(alpha_l=1.0 / (81 * TAU * L), tau=TAU, n_clients=n),
+        "fedlin": FedLin(alpha=1.0 / (18 * TAU * L), tau=TAU, n_clients=n,
+                         k_frac=0.3),
+    }
+
+
+def _always_fresh(algo, policy):
+    """Attach the FULL delay machinery (buffer, ages, weighted aggregation)
+    with a schedule that never delays — bypassing the factory's identity
+    shortcut."""
+    cfg = StalenessConfig(GeometricDelay(1.0), policy=parse_policy(policy))
+    return dataclasses.replace(algo, delay=cfg)
+
+
+# ------------------------------------------------------------ exact no-ops
+def test_identity_delay_specs_are_exact_noops(problem):
+    """``with_delay(algo, <zero delay>)`` returns the SAME object for every
+    policy — synchronous runs are bit-identical by construction, for every
+    algorithm."""
+    for algo in _all_algos(problem).values():
+        for spec in ("none", "off", "fixed:0", "rr:0", "geom:1", None,
+                     FixedDelay(0), RoundRobinStraggler(0)):
+            for pol in POLICIES:
+                assert with_delay(algo, spec, policy=pol) is algo
+
+
+def test_always_fresh_machinery_is_noop_every_algorithm(problem):
+    """With the buffer/weighting machinery ATTACHED but an always-fresh
+    schedule, every policy reproduces the synchronous trajectory <= 1e-12
+    on every algorithm (all policies degenerate to the uniform mean when
+    every client is fresh)."""
+    for name, algo in _all_algos(problem).items():
+        ref = simulate_quadratic(algo, problem, rounds=12)
+        for pol in POLICIES:
+            res = simulate_quadratic(_always_fresh(algo, pol), problem,
+                                     rounds=12)
+            np.testing.assert_allclose(np.asarray(res.errors),
+                                       np.asarray(ref.errors), **_TOL,
+                                       err_msg=f"{name}/{pol}")
+
+
+def test_parse_delay_grammar():
+    assert parse_delay("fixed:2") == FixedDelay(2)
+    assert parse_delay("rr:1") == RoundRobinStraggler(1)
+    assert parse_delay("geom:0.5") == GeometricDelay(0.5)
+    assert parse_delay("geom:1.0") is None
+    assert parse_delay("") is None
+    with pytest.raises(ValueError, match="unknown delay"):
+        parse_delay("exp:3")
+    with pytest.raises(ValueError, match="unknown stale policy"):
+        parse_policy("oldest")
+
+
+# ------------------------------------------------------------- composition
+def test_delay_composes_with_transforms_in_either_order(problem):
+    """Delay is an engine field applied at the aggregation seam after all
+    message transforms, so factory order cannot change the algorithm —
+    the two orders build EQUAL specs (and the composed run converges)."""
+    base = _fedcet(problem)
+    a = with_delay(with_compression(base, compressor="randk:0.5"),
+                   "rr:2", policy="last")
+    b = with_compression(with_delay(base, "rr:2", policy="last"),
+                         compressor="randk:0.5")
+    assert a == b
+    res = simulate_quadratic(a, problem, rounds=1500)
+    assert res.final_error < 1e-9, res.final_error
+
+
+def test_drop_with_sampling_matches_participation_alone(problem):
+    """drop + always-fresh + Bernoulli sampling IS partial participation:
+    freshness is masked by presence, the drop weights reproduce the
+    present-clients mean, and absent clients revert — trajectory-identical
+    to ``with_participation`` alone (the server buffer just rides along)."""
+    base = _fedcet(problem)
+    ref = simulate_quadratic(with_participation(base, 0.6, seed=7), problem,
+                             rounds=40)
+    res = simulate_quadratic(
+        _always_fresh(with_participation(base, 0.6, seed=7), "drop"),
+        problem, rounds=40)
+    np.testing.assert_allclose(np.asarray(res.errors),
+                               np.asarray(ref.errors), **_TOL)
+
+
+def test_stacked_delay_raises(problem):
+    algo = with_delay(_fedcet(problem), "fixed:2")
+    with pytest.raises(ValueError, match="already has a delay"):
+        with_delay(algo, "rr:1")
+
+
+# ------------------------------------------------------------- determinism
+def test_delay_schedule_deterministic_across_runs(problem):
+    """Same seed => identical stochastic arrival schedule => bit-equal
+    error curves across independent runs (the schedule is keyed off the
+    step counter, restart-stable)."""
+    algo = with_delay(_fedcet(problem), "geom:0.5", policy="last", seed=11)
+    r1 = simulate_quadratic(algo, problem, rounds=60)
+    r2 = simulate_quadratic(algo, problem, rounds=60)
+    np.testing.assert_array_equal(np.asarray(r1.errors), np.asarray(r2.errors))
+
+
+def test_fresh_mask_restart_stable():
+    cfg = StalenessConfig(GeometricDelay(0.4), policy=parse_policy("last"),
+                          seed=5)
+    m1 = cfg.fresh_mask(jnp.asarray(6), TAU, 8)
+    m2 = cfg.fresh_mask(jnp.asarray(6), TAU, 8)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    # distinct rounds draw distinct masks (with overwhelming probability
+    # over 20 consecutive rounds at p = 0.4)
+    masks = [np.asarray(cfg.fresh_mask(jnp.asarray(s), TAU, 8))
+             for s in range(0, 40, TAU)]
+    assert any(not np.array_equal(masks[0], m) for m in masks[1:])
+
+
+@pytest.mark.parametrize("spec", ["rr:2", "geom:0.5"])
+def test_checkpoint_resume_reproduces_buffer(problem, spec, tmp_path):
+    """Save/restore mid-run: the server buffer (last-known messages + ages)
+    rides in EngineState, round-trips the npz checkpoint exactly, and the
+    resumed run continues bit-compatibly with the uninterrupted one."""
+    from repro.checkpoint.ckpt import load_pytree, save_pytree
+
+    algo = with_delay(_fedcet(problem), spec, policy="last", seed=3)
+    gf = jax.grad(problem.client_loss)
+    batches = problem.stacked_batches(TAU)
+    init_b = jax.tree.map(lambda b: b[0], batches)
+    x0 = jnp.zeros((problem.dim,), problem.b.dtype)
+    state0 = algo.init(gf, x0, init_b)
+    assert isinstance(state0, EngineState)
+    dstate = state0.extras[-1]
+    assert isinstance(dstate, DelayState)
+    np.testing.assert_array_equal(np.asarray(dstate.age),
+                                  np.zeros(problem.n_clients, np.int32))
+
+    full, _ = run_rounds(algo, gf, state0, batches, rounds=8)
+    half, _ = run_rounds(algo, gf, state0, batches, rounds=4)
+    path = str(tmp_path / "mid.npz")
+    save_pytree(path, half)
+    back = load_pytree(path, half)
+    for a, b in zip(jax.tree.leaves(half), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    resumed, _ = run_rounds(algo, gf, back, batches, rounds=4)
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(resumed)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), **_TOL)
+
+
+# ------------------------------------------- measured convergence boundaries
+def test_fedcet_exact_under_delay_drop_and_last(problem):
+    """THE pinned result (full sweep in benchmarks/staleness_sweep.py):
+    FedCET keeps EXACT linear convergence at delay >= 2 under both ``drop``
+    (fresh-only aggregation, stragglers continue locally) and ``last``
+    (uniform last-known aggregation) — measured ~1e-14 at 800 rounds for
+    fixed:2 and rr:2 alike. The buffered message is the ABSOLUTE vector v
+    (not a delta), so the server reusing it is safe, and uniform weights
+    keep the drift updates mean-zero."""
+    base = _fedcet(problem)
+    for spec in ("fixed:2", "rr:2"):
+        for pol in ("drop", "last"):
+            res = simulate_quadratic(with_delay(base, spec, policy=pol),
+                                     problem, rounds=800)
+            assert res.final_error < 1e-9, (spec, pol, res.final_error)
+
+
+def test_poly_discount_breaks_fedcet_exactness(problem):
+    """Measured boundary: staleness-discounted weights (poly:1 — the
+    classic async-FL heuristic) make the aggregation a NON-uniform mean,
+    the drift updates stop summing to zero, and FedCET floors (~4.7e-2
+    under rr:2). Pinning the failure keeps the mechanism honest: it is the
+    uniform weighting, not buffering per se, that preserves Lemma 2."""
+    algo = with_delay(_fedcet(problem), "rr:2", policy="poly:1")
+    res = simulate_quadratic(algo, problem, rounds=800)
+    assert 1e-4 < res.final_error < 1.0, res.final_error
+    # ...and the invariant itself measurably drifts
+    inner = res.state.inner
+    d_mean = float(jnp.linalg.norm(jnp.mean(inner.d, axis=0)))
+    assert d_mean > 1e-6, d_mean
+
+
+def test_fedcet_drift_invariant_survives_uniform_staleness(problem):
+    """sum_i d_i = 0 survives stale messages under the uniform policies:
+    drop aggregates fresh-only deviations (stragglers' d frozen), last
+    aggregates buffer deviations from the buffer mean — both mean-zero."""
+    base = _fedcet(problem)
+    for pol in ("drop", "last"):
+        res = simulate_quadratic(with_delay(base, "rr:2", policy=pol),
+                                 problem, rounds=60)
+        d_mean = np.asarray(jnp.mean(res.state.inner.d, axis=0))
+        np.testing.assert_allclose(d_mean, 0.0, atol=1e-10, err_msg=pol)
+
+
+def test_scaffold_delta_messages_not_stale_safe(problem):
+    """Measured contrast pinned from the sweep: SCAFFOLD's message is a
+    DELTA pair (dy, dc) — re-aggregating a buffered copy re-applies old
+    control-variate updates, so ``last`` breaks outright (error ~1e0 at
+    rr:2) where FedCET's absolute-vector message stays exact. ``drop``
+    keeps SCAFFOLD convergent (merely slower)."""
+    scaffold = _all_algos(problem)["scaffold"]
+    res_last = simulate_quadratic(with_delay(scaffold, "rr:2", policy="last"),
+                                  problem, rounds=800)
+    assert res_last.final_error > 1e-1, res_last.final_error
+    res_drop = simulate_quadratic(with_delay(scaffold, "rr:2", policy="drop"),
+                                  problem, rounds=800)
+    assert res_drop.final_error < 1e-2, res_drop.final_error
+
+
+# -------------------------------------------------------- comm duty account
+def test_comm_meter_delay_duty(problem):
+    """Buffered rounds transmit zero uplink bits: expected uplink scales by
+    the transmit duty (fixed:2 -> 1/3, rr:2 -> (N-2)/N, geom:p -> p);
+    downlink broadcasts stay dense."""
+    n = problem.n_clients
+    base = _fedcet(problem)
+    assert base.transmit_frac == 1.0
+    assert with_delay(base, "fixed:2").transmit_frac == pytest.approx(1 / 3)
+    assert with_delay(base, "rr:2").transmit_frac == pytest.approx((n - 2) / n)
+    assert with_delay(base, "geom:0.25").transmit_frac == pytest.approx(0.25)
+
+    params = {"w": jnp.zeros((problem.dim,))}
+    sync = CommMeter.for_params(params, algo=base, n_clients=n)
+    dly = CommMeter.for_params(params, algo=with_delay(base, "fixed:2"),
+                               n_clients=n)
+    sync.tick_round(base)
+    dly.tick_round(base)
+    # bytes are int-truncated per tick and the duty is 1/3: allow 1 byte
+    assert abs(dly.bytes_up * 3 - sync.bytes_up) <= 3
+    assert dly.bytes_down == sync.bytes_down
+
+    bits = comm_bits_per_round(with_delay(base, "fixed:2"), problem.dim,
+                               n_clients=n)
+    bits_sync = comm_bits_per_round(base, problem.dim, n_clients=n)
+    assert bits["up_bits"] * 3 == pytest.approx(bits_sync["up_bits"])
+    assert bits["down_bits"] == bits_sync["down_bits"]
+
+    # duty composes with compression: the wire width shrinks AND the duty
+    # scales what remains.
+    comp = with_delay(with_compression(base, compressor="shift:q8"), "fixed:2")
+    assert comp.bits_per_coord == 8.0
+    cbits = comm_bits_per_round(comp, problem.dim, n_clients=n)
+    assert cbits["up_bits"] == pytest.approx(bits_sync["up_bits"] / 4 / 3)
+
+
+# -------------------------------------------------------------- integration
+def test_fed_trainer_runs_delayed_scenario(problem, tmp_path):
+    """FedTrainer end-to-end with a delayed, compressed, sampled FedCET:
+    the in-scan eval metric, the duty-cycled comm meter and checkpointing
+    all handle the EngineState-with-buffer layout."""
+    from repro.fed import FedTrainer, TrainerConfig
+
+    algo = with_delay(
+        with_compression(with_participation(_fedcet(problem), 0.8, seed=3),
+                         compressor="randk:0.5"),
+        "rr:2", policy="last")
+    tc = TrainerConfig(rounds=6, eval_every=3, ckpt_every=3,
+                       ckpt_dir=str(tmp_path / "ck"))
+    trainer = FedTrainer(algo, problem.client_loss, tc)
+    batches_for = lambda r: problem.stacked_batches(TAU)  # noqa: E731
+    state = trainer.init_state(
+        jnp.zeros((problem.dim,), problem.b.dtype),
+        jax.tree.map(lambda b: b[0], batches_for(0)))
+    state = trainer.fit(state, batches_for)
+    assert trainer.history and all(
+        np.isfinite(h["loss_global"]) for h in trainer.history)
+    # metered bytes from first principles: randk:0.5 puts 16 bits/coord on
+    # the wire, duty = participation 0.8 x rr:2's (N-2)/N, downlink dense.
+    n, dim, rounds = problem.n_clients, problem.dim, 6
+    duty = 0.8 * (n - 2) / n
+    per_round_up = int(dim * n * 16 * duty / 8)
+    per_round_down = int(dim * n * 32 / 8)
+    assert algo.transmit_frac == pytest.approx(duty)
+    assert trainer.history[-1]["comm_bytes"] \
+        == rounds * (per_round_up + per_round_down)
+    # resume restores the buffer-bearing state
+    restored, start = trainer.maybe_resume(state)
+    assert start == 6
+    assert isinstance(restored, EngineState)
+    assert isinstance(restored.extras[-1], DelayState)
