@@ -22,7 +22,8 @@ from repro.roofline.flops import param_counts
 
 
 def _algos(n_clients: int) -> dict:
-    from repro.core import FedCETCompressed, with_compression, with_delay
+    from repro.core import (FedCETCompressed, with_compression, with_delay,
+                            with_topology)
 
     fedcet = lambda: FedCET(alpha=1e-3, c=0.05, tau=2, n_clients=n_clients)  # noqa: E731
     return {
@@ -52,6 +53,17 @@ def _algos(n_clients: int) -> dict:
         "fedcet_delay_rr2": with_delay(fedcet(), "rr:2", policy="drop"),
         "fedcet_shiftq8_rr2": with_delay(
             with_compression(fedcet(), compressor="shift:q8"), "rr:2"),
+        # natural (exponent-only) quantization: 9 bits/coord, no shared
+        # scale, unbiased with omega = 1/8.
+        "fedcet_nat": with_compression(fedcet(), compressor="nat"),
+        # aggregation topologies (core/topology.py): the hierarchy's root
+        # ingests 4 messages instead of n_clients (aggregator tiers billed
+        # dense f32 per hop, client tier pays the compressed width); ring
+        # gossip bills one message per directed edge and NO broadcast.
+        "fedcet_hier4": with_topology(fedcet(), "hier:g4"),
+        "fedcet_hier4_shiftq8": with_topology(
+            with_compression(fedcet(), compressor="shift:q8"), "hier:g4"),
+        "fedcet_ring": with_topology(fedcet(), "ring"),
     }
 
 
@@ -96,6 +108,23 @@ def run(csv_rows=None, n_clients: int = 16):
         # duty composes with compression: shift:q8 is 8 bits/coord BEFORE
         # the duty scaling.
         assert algos["fedcet_shiftq8_rr2"].bits_per_coord == 8.0
+        # natural compression: sign + 8-bit exponent.
+        assert algos["fedcet_nat"].bits_per_coord == 9.0
+        # per-hop topology accounting: the 2-level hierarchy adds 4 dense
+        # f32 tier messages each way on top of the client tier (which
+        # still pays the compressed width)...
+        from repro.core import comm_hops_per_round
+        hops = comm_hops_per_round(algos["fedcet_hier4_shiftq8"], n,
+                                   n_clients=n_clients)
+        assert [h["messages"] for h in hops] == [n_clients, 4]
+        assert hops[0]["bits"] == n * n_clients * 8.0   # shift:q8 clients
+        assert hops[1]["bits"] == n * 4 * 32.0          # dense tier->root
+        # ...while ring gossip transmits to 2 neighbors and broadcasts
+        # nothing (vectors_down bits are billed zero).
+        ring_bits = comm_bits_per_round(algos["fedcet_ring"], n,
+                                        n_clients=n_clients)
+        assert ring_bits["up_bits"] == n * n_clients * 2 * 32.0
+        assert ring_bits["down_bits"] == 0.0
     return out
 
 

@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows. Modules:
                      results JSON, when present
   staleness_sweep  — error floors under asynchronous rounds: delay model x
                      stale policy x compression (runs LAST: it enables x64)
+  topology_sweep   — aggregation geometry: hierarchical exactness, NIDS
+                     gossip rate vs spectral gap (also x64: keep last)
 """
 
 from __future__ import annotations
@@ -27,6 +29,7 @@ def main() -> None:
         lr_search_bench,
         roofline_table,
         staleness_sweep,
+        topology_sweep,
     )
 
     rows: list[tuple] = []
@@ -39,6 +42,7 @@ def main() -> None:
         ("kernel_bench", kernel_bench),
         ("roofline_table", roofline_table),
         ("staleness_sweep", staleness_sweep),  # enables x64: keep last
+        ("topology_sweep", topology_sweep),    # also x64
     ]:
         t = time.time()
         try:

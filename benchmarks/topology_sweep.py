@@ -1,0 +1,169 @@
+"""Benchmark: topology sweep — aggregation geometry vs exactness and rate.
+
+FedCET and NIDS on the paper's quadratic (Section IV) across aggregation
+topologies (star / 2- and 3-level hierarchical / ring / torus /
+Erdős–Rényi gossip), with and without a shift:q8 compressed client
+uplink. Because the doubly-stochastic mixing keeps the CLIENT MEAN on the
+centralized trajectory regardless of topology, the sweep measures the
+consensus-aware error ``max_i ||x_i - x*||`` (the mean error is blind to
+gossip disagreement), emits one CSV row per cell with the final error,
+rounds-to-1e-6, spectral gap and per-hop uplink accounting, and asserts
+the PINNED MEASURED FINDINGS (committed table in
+results/topology_sweep.csv; recorded in ARCHITECTURE.md):
+
+1. FedCET stays EXACT under 2-level (and 3-level) HIERARCHICAL
+   aggregation — final ~4.5e-15 at 2000 rounds, with or without a
+   shift:q8 8-bit client uplink — and its rounds-to-1e-6 (180) are
+   IDENTICAL to star: the tree is an exact regrouping of the weighted
+   mean, so Lemma 2 never notices the extra hop, while the root ingress
+   drops from N=10 messages to g=5 (the scaling story).
+2. NIDS proper (the decentralized optimizer FedCET descends from, run as
+   the ~70-line engine spec + a mixing matrix) converges EXACTLY on every
+   CONNECTED gossip graph, at a rate ordered by the spectral gap of W:
+   er:0.7 (gap .47) 57 rounds < torus 2x5 (gap .35) 79 < er:0.5
+   (gap .17) 170 < ring (gap .13) 229 — and the answer to "when does
+   ring-NIDS match star-FedCET's 180 rounds?" is gap ~0.17: the er:0.5
+   graph already matches (170 <= 180), the N=10 ring (gap 0.13) needs
+   ~1.3x. FedCET's own aggregating step over the ring stays exact too
+   (~2e-14) but needs 840 rounds — its c-damped correction mixes slower
+   than NIDS's lazy (I+W)/2 step.
+3. The spectral gap is the WHOLE story: the seed-0 G(10, 0.3) draw is
+   disconnected (gap = 0, two isolated nodes) and NIDS stalls at the
+   initial disagreement (~7.3) — while the MEAN error still reads ~9e-15,
+   which is why this sweep pins the per-client metric.
+
+Run directly (``python benchmarks/topology_sweep.py``) or via
+benchmarks/run.py; ``--quick`` shrinks the grid/rounds for CI smoke.
+"""
+
+from __future__ import annotations
+
+import time
+
+ROUNDS = 2000
+TOL = 1e-6
+
+#: (label, topology spec) cells for each algorithm family.
+FEDCET_TOPOS = ("star", "hier:g5", "hier:4x2", "ring")
+NIDS_TOPOS = ("star", "ring", "torus", "er:0.7", "er:0.5", "er:0.3")
+COMPRESSIONS = ("none", "shift:q8")
+
+
+def _client_errors(algo, problem, rounds):
+    """Per-round consensus-aware error max_i ||x_i - x*|| (the mean error
+    is topology-blind under doubly-stochastic mixing)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import run_rounds
+
+    gf = jax.grad(problem.client_loss)
+    batches = problem.stacked_batches(algo.tau)
+    init_b = jax.tree.map(lambda b: b[0], batches)
+    state0 = algo.init(gf, jnp.zeros((problem.dim,), problem.b.dtype), init_b)
+
+    def metric(s):
+        return jnp.max(jnp.linalg.norm(
+            algo.client_params(s) - problem.x_star, axis=-1))
+
+    _, errs = run_rounds(algo, gf, state0, batches, rounds=rounds,
+                         metric_fn=metric)
+    return np.asarray(errs)
+
+
+def _rounds_to(errs, tol=TOL) -> int:
+    import numpy as np
+
+    hit = np.nonzero(errs < tol)[0]
+    return int(hit[0]) + 1 if hit.size else -1
+
+
+def run(csv_rows=None, rounds: int = ROUNDS, quick: bool = False):
+    import jax
+
+    jax.config.update("jax_enable_x64", True)  # floors sit below f32 eps
+
+    from repro.core import (NIDS, FedCET, comm_hops_per_round, max_weight_c,
+                            with_compression, with_topology)
+    from repro.core.lr_search import lr_search
+    from repro.data.quadratic import make_quadratic_problem
+
+    if quick:
+        rounds = min(rounds, 500)
+    problem = make_quadratic_problem(0)
+    n = problem.n_clients
+    alpha = lr_search(problem.mu, problem.L, 2)
+    fedcet = FedCET(alpha=alpha, c=max_weight_c(problem.mu, alpha), tau=2,
+                    n_clients=n)
+    nids = NIDS(alpha=1.0 / problem.L, n_clients=n)
+    comps = COMPRESSIONS if not quick else ("none",)
+    nids_topos = NIDS_TOPOS if not quick else ("star", "ring")
+
+    out = {}
+
+    def cell(name, algo):
+        t0 = time.perf_counter()
+        errs = _client_errors(algo, problem, rounds)
+        dt = (time.perf_counter() - t0) * 1e6 / rounds
+        final, r_to = float(errs[-1]), _rounds_to(errs)
+        out[name] = (final, r_to)
+        if csv_rows is not None:
+            topo = algo.topology
+            gap = getattr(topo, "spectral_gap", None) if topo else None
+            hops = comm_hops_per_round(algo, problem.dim, n)
+            root = hops[-1]["messages"] if len(hops) > 1 else hops[0]["messages"]
+            csv_rows.append((
+                f"topology/{name}", dt,
+                f"final_err={final:.3e}"
+                f";rounds_to_1e6={r_to}"
+                f";spectral_gap={'' if gap is None else f'{gap:.4f}'}"
+                f";root_ingress_msgs={root:g}"
+                f";up_bits_hop0={hops[0]['bits']:g}"))
+        return final, r_to
+
+    for comp in comps:
+        for spec in FEDCET_TOPOS:
+            algo = fedcet if spec == "star" else with_topology(fedcet, spec)
+            if comp != "none":
+                algo = with_compression(algo, compressor=comp)
+            cell(f"fedcet/{comp}/{spec}", algo)
+    for spec in nids_topos:
+        algo = nids if spec == "star" else with_topology(nids, spec)
+        cell(f"nids/none/{spec}", algo)
+
+    # ---- pinned measured findings (full grid only; see module docstring)
+    if not quick:
+        # 1. hierarchical aggregation keeps FedCET exact, same round count
+        #    as star, with or without the 8-bit client uplink.
+        star_rounds = out["fedcet/none/star"][1]
+        for comp in comps:
+            for spec in ("hier:g5", "hier:4x2"):
+                final, r_to = out[f"fedcet/{comp}/{spec}"]
+                assert final < 1e-9, ("fedcet stays exact", comp, spec, final)
+                assert r_to == out[f"fedcet/{comp}/star"][1], (comp, spec)
+        assert star_rounds == 180, star_rounds
+        # 2. NIDS exact on every connected graph; rounds ordered by the
+        #    spectral gap; er:0.5 (gap .17) already matches star-FedCET.
+        for spec in ("star", "ring", "torus", "er:0.7", "er:0.5"):
+            assert out[f"nids/none/{spec}"][0] < 1e-9, spec
+        r = {s: out[f"nids/none/{s}"][1] for s in NIDS_TOPOS}
+        assert r["er:0.7"] < r["torus"] < r["er:0.5"] < r["ring"], r
+        assert r["er:0.5"] <= star_rounds < r["ring"], (r, star_rounds)
+        # FedCET's own step over the ring: exact but ~4.7x slower.
+        assert out["fedcet/none/ring"][0] < 1e-9
+        assert out["fedcet/none/ring"][1] > 4 * star_rounds
+        # 3. the disconnected G(10, 0.3) draw (gap 0) never reaches
+        #    consensus — the per-client metric sees what the mean hides.
+        assert out["nids/none/er:0.3"][0] > 1.0, out["nids/none/er:0.3"]
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = []
+    run(csv_rows=rows, quick="--quick" in sys.argv)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(",".join(map(str, r)))

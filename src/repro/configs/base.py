@@ -141,23 +141,32 @@ class FedScenario:
     straggler), ``"geom:0.5"`` (Bernoulli arrivals) — with
     ``stale_policy`` one of ``"drop"`` / ``"last"`` / ``"poly:<a>"``.
 
+    ``topology`` is a spec string for
+    :func:`repro.core.topology.parse_topology` — ``"star"`` (the flat
+    default), ``"hier:g8"`` / ``"hier:16x4"`` (edge-aggregator tree with
+    per-hop comm accounting), ``"ring"`` / ``"torus"`` / ``"er:0.4"``
+    (doubly-stochastic gossip mixing; ``"er:0.4:t"`` resamples the graph
+    every round).
+
     ``apply`` composes the scenario onto ANY engine algorithm — the same
     expression the simulation tests pin, now reachable from the production
     LM loop (`launch/train.py --compression ... --participation ...
-    --delay ... --stale-policy ...`)."""
+    --delay ... --stale-policy ... --topology ...`)."""
 
     compression: str = "none"
     participation: float = 1.0
     delay: str = "none"
     stale_policy: str = "last"
+    topology: str = "star"
     error_feedback: bool | None = None
     seed: int = 0
 
     def apply(self, algo):
         from repro.core.compressors import from_spec
         from repro.core.engine import (with_compression, with_delay,
-                                       with_participation)
+                                       with_participation, with_topology)
 
+        algo = with_topology(algo, self.topology, seed=self.seed)
         algo = with_participation(algo, self.participation, seed=self.seed)
         comp = from_spec(self.compression)  # one normalizer for the grammar
         if comp is not None:

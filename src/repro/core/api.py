@@ -23,9 +23,11 @@ Algorithms do NOT hand-roll ``init``/``round``: they are slim specs —
 optionally ``begin_round``) — on top of :class:`repro.core.engine.RoundEngine`,
 which owns the round structure once: batch slicing, the ``vmap_grads`` lift,
 the ``lax.scan`` over the tau-1 local steps, the single aggregating step,
-message transforms (``with_compression``) and client sampling
-(``with_participation``). See engine.py's module docstring and
-ARCHITECTURE.md for the decomposition and the transform-composition rules.
+message transforms (``with_compression``), client sampling
+(``with_participation``), delayed uplinks (``with_delay``) and the
+aggregation geometry (``with_topology`` — hierarchical tiers / gossip
+mixing). See engine.py's module docstring and ARCHITECTURE.md for the
+decomposition and the transform-composition rules.
 Multi-round execution likewise goes through one shared scan-based driver,
 ``engine.run_rounds``, consumed by ``core/simulate.py``, ``fed/trainer.py``
 and ``launch/train.py`` alike.

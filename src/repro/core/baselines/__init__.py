@@ -1,6 +1,9 @@
 from repro.core.baselines.fedavg import FedAvg
+from repro.core.baselines.feddyn import FedDyn
 from repro.core.baselines.fedlin import FedLin, FedTrack
 from repro.core.baselines.fedprox import FedProx
+from repro.core.baselines.nids import NIDS
 from repro.core.baselines.scaffold import Scaffold
 
-__all__ = ["FedAvg", "FedLin", "FedProx", "FedTrack", "Scaffold"]
+__all__ = ["FedAvg", "FedDyn", "FedLin", "FedProx", "FedTrack", "NIDS",
+           "Scaffold"]

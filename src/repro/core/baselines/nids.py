@@ -1,0 +1,113 @@
+"""NIDS [Li, Shi & Yan, 2019] — the decentralized optimizer FedCET
+descends from, as an engine spec.
+
+NIDS (Network-InDependent Step-size) iterates, per node i over a gossip
+graph with doubly-stochastic mixing matrix W:
+
+    x(k+1) = W~ [ 2 x(k) - x(k-1) - alpha (grad(k) - grad(k-1)) ],
+    W~ = (I + W) / 2,
+
+i.e. EXACTLY FedCET's 2-point extrapolation message (Algorithm 2 /
+``FedCETLiteral``) pushed through a LAZY mixing step instead of the star
+mean. This spec closes the loop to the paper's origin: ``message`` is the
+literal extrapolation ``m = 2x - x_prev - alpha (g - g_prev)``, and
+``server_aggregate`` applies the lazy half-step ``x <- (m + m_bar) / 2``
+— so with :func:`repro.core.engine.with_topology` supplying
+``m_bar = (W m)_i``, the update is ``((I + W)/2) m``: NIDS proper.
+
+Correctness structure (the same telescoping FedCET inherits): W being
+COLUMN-stochastic makes the client mean of ``x`` evolve exactly like the
+centralized extrapolation, and the warm-up ``x(-1) = x(-2) - alpha
+g(x(-2))`` pins the conserved quantity ``mean(x(k)) - mean(x(k-1)) +
+alpha mean(g(k-1))`` to ZERO — so any fixed point has zero mean
+gradient: NIDS converges to the EXACT optimum for every connected graph,
+at a rate governed by the spectral gap of W (measured against
+star-FedCET in benchmarks/topology_sweep.py).
+
+Under the default (star) topology ``m_bar`` is the global mean and the
+update degenerates to lazy centralized averaging — identical to
+``FedCETLiteral`` with ``c * alpha = 1/2`` (pinned <= 1e-12 in
+tests/test_topology.py, which is the lineage proof in executable form).
+
+Communication: ONE n-vector per client per round each way under the
+star topology (the mixed result must reach every client, exactly like
+FedCETLiteral's broadcast). Under a gossip topology there is no server
+and no broadcast — the exchange is billed as per-edge uplink messages —
+which the Mixing topology expresses itself (``broadcast_mult() == 0``
+zeroes the downlink), so the spec declares the star cost and lets the
+attached topology reshape it. ``tau`` defaults to 1 (NIDS mixes every
+step); ``tau > 1`` runs pure extrapolated local steps between mixings,
+the same generalization FedCET makes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import replicate
+from repro.core.engine import RoundEngine
+
+
+class NIDSState(NamedTuple):
+    x_curr: Any  # stacked [clients, ...] x(k)
+    x_prev: Any  # x(k-1)
+    g_prev: Any  # grad f(x(k-1))
+    t: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class NIDS(RoundEngine):
+    alpha: float
+    n_clients: int
+    tau: int = 1
+    name: str = "nids"
+    vectors_up: int = 1
+    vectors_down: int = 1  # star broadcast; gossip topologies zero it
+
+    def init_warmup(self, gf, x0, init_batch):
+        """x(-1) = x(-2) - alpha grad(x(-2)), then one aggregating step —
+        the initialization that zeroes the conserved mean-gradient term
+        (identical to FedCET's warm-up block; Lemma 1 lineage)."""
+        x_m2 = replicate(x0, self.n_clients)
+        g_m2 = gf(x_m2, init_batch)
+        x_m1 = jax.tree.map(lambda x, g: x - self.alpha * g, x_m2, g_m2)
+        return NIDSState(x_curr=x_m1, x_prev=x_m2, g_prev=g_m2,
+                         t=jnp.asarray(-1)), True
+
+    def _extrapolate(self, gf, state, batch):
+        """m = 2 x(k) - x(k-1) - alpha (grad(k) - grad(k-1))."""
+        a = self.alpha
+        g = gf(state.x_curr, batch)
+        m = jax.tree.map(
+            lambda xc, xp, gc, gp: 2.0 * xc - xp - a * gc + a * gp,
+            state.x_curr, state.x_prev, g, state.g_prev,
+        )
+        return m, g
+
+    def local_step(self, gf, state, batch, rctx):
+        m, g = self._extrapolate(gf, state, batch)
+        return NIDSState(x_curr=m, x_prev=state.x_curr, g_prev=g,
+                         t=state.t + 1)
+
+    def message(self, gf, state, batch, rctx):
+        """The transmitted vector is the extrapolation m; mctx carries the
+        EXACT (m, grad) pair — a gossip node knows its own m exactly, so
+        under an attached compressor only the neighbors' copies are
+        compressed (the CHOCO-SGD convention)."""
+        m, g = self._extrapolate(gf, state, batch)
+        return m, (m, g)
+
+    def server_aggregate(self, state, msg, msg_bar, mctx, rctx):
+        """The lazy mixing half-step x <- (m + m_bar)/2: with a gossip
+        topology supplying m_bar = (W m)_i this is ((I+W)/2) m — NIDS."""
+        m_exact, g = mctx
+        x_next = jax.tree.map(lambda mm, mb: 0.5 * (mm + mb), m_exact, msg_bar)
+        return NIDSState(x_curr=x_next, x_prev=state.x_curr, g_prev=g,
+                         t=state.t + 1)
+
+    def client_params(self, state):
+        return self._inner(state).x_curr

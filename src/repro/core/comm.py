@@ -12,7 +12,12 @@ FedTrack / FedLin move two. This module provides
   old ``itemsize=4`` path silently overcounted bf16/quantized uplinks and
   is deprecated. With a ``with_delay`` model attached the uplink is
   additionally scaled by the transmit duty cycle (``transmit_frac``):
-  buffered rounds where a client does not transmit count zero uplink bits;
+  buffered rounds where a client does not transmit count zero uplink bits.
+  With client sampling attached the DOWNLINK scales by ``receive_frac``
+  (present-only downlink: absent clients keep frozen replicas, no phantom
+  broadcasts), and an attached topology contributes its per-hop traffic
+  shape (:func:`comm_hops_per_round`: gossip edges on the client hop,
+  dense f32 aggregator-tier messages for hierarchies, both directions);
 * ``topk_sparsify`` — magnitude top-k with the complement zeroed (FedLin's
   uplink sparsifier; the ``TopK(per_client=False)`` legacy flatten in
   repro/core/compressors.py is this exact function);
@@ -74,6 +79,44 @@ def transmit_frac_of(algo) -> float:
     return float(getattr(algo, "transmit_frac", 1.0))
 
 
+def receive_frac_of(algo) -> float:
+    """Downlink duty cycle: the expected fraction of rounds a client
+    RECEIVES the broadcast. Present-only downlink: under client sampling
+    absent clients keep frozen replicas instead of receiving phantom
+    broadcasts, so the meter bills downlink at the participation rate
+    (1.0 for full participation; delay models do not reduce downlink —
+    stale-but-present clients still apply the buffered-mean update)."""
+    return float(getattr(algo, "receive_frac", 1.0))
+
+
+def topology_of(algo):
+    """The algorithm's aggregation topology, or None for the flat star."""
+    return getattr(algo, "topology", None)
+
+
+def comm_hops_per_round(algo, n_params: int, n_clients: int = 1) -> list:
+    """Per-hop EXPECTED uplink traffic for one round, as dicts of
+    ``{hop, messages, bits}``. The client (first) hop pays the compressor
+    stack's wire width x the transmit duty cycle — once per message,
+    where a gossip topology sends one message per directed graph edge and
+    star/hierarchical send one per client. Aggregator-tier hops
+    (edge->root re-transmissions in a hierarchy) carry DENSE f32 partial
+    aggregates: the client-side compressor applies to the first hop only
+    (re-compressing interior tiers is future work)."""
+    topo = topology_of(algo)
+    up_mult = topo.client_up_mult(n_clients) if topo is not None else 1.0
+    hops = [{
+        "hop": "client",
+        "messages": n_clients * up_mult,
+        "bits": (algo.vectors_up * n_params * n_clients * up_mult
+                 * bits_per_coord_of(algo) * transmit_frac_of(algo)),
+    }]
+    for label, msgs in (topo.aggregator_hops(n_clients) if topo else ()):
+        hops.append({"hop": label, "messages": msgs,
+                     "bits": algo.vectors_up * n_params * msgs * 32.0})
+    return hops
+
+
 @dataclasses.dataclass
 class CommMeter:
     """Accumulates transmitted bytes across rounds for one algorithm.
@@ -100,6 +143,16 @@ class CommMeter:
     #: lands (``with_delay`` algorithms transmit ZERO uplink bits on
     #: buffered rounds; the server reuses its last-known copy).
     up_duty: float = 1.0
+    #: downlink duty cycle: present-only downlink — under client sampling
+    #: absent clients keep frozen replicas and are NOT billed a broadcast.
+    down_duty: float = 1.0
+    #: topology traffic shape (repro/core/topology.py): first-hop uplink
+    #: messages per client (gossip degree), downlink client-hop multiplier
+    #: (0 = no broadcast at all), and aggregator-tier messages per vector
+    #: (edge->root re-transmissions, billed dense f32 both directions).
+    up_mult: float = 1.0
+    down_mult: float = 1.0
+    agg_msgs: float = 0.0
     rounds: int = 0
     bytes_up: int = 0
     bytes_down: int = 0
@@ -108,8 +161,9 @@ class CommMeter:
     def for_params(cls, params, *, algo=None, itemsize: int | None = None,
                    n_clients: int = 1) -> "CommMeter":
         """Meter for one parameter pytree. Pass ``algo=`` for bit-true
-        accounting from its compressor stack AND its delay model's uplink
-        duty cycle; ``itemsize`` is deprecated."""
+        accounting from its compressor stack, its delay model's uplink
+        duty cycle, its sampling rate's downlink duty cycle, and its
+        topology's per-hop traffic shape; ``itemsize`` is deprecated."""
         if itemsize is not None:
             warnings.warn(
                 "CommMeter.for_params(itemsize=...) is deprecated: it "
@@ -117,10 +171,19 @@ class CommMeter:
                 "uplinks. Pass algo= for bit-true accounting.",
                 DeprecationWarning, stacklevel=2)
         if algo is not None:
+            topo = topology_of(algo)
             return cls(n_params=tree_num_params(params), n_clients=n_clients,
                        bits_up=bits_per_coord_of(algo),
                        bits_down=32.0 * float(getattr(algo, "down_frac", 1.0)),
-                       up_duty=transmit_frac_of(algo))
+                       up_duty=transmit_frac_of(algo),
+                       down_duty=receive_frac_of(algo),
+                       up_mult=(topo.client_up_mult(n_clients)
+                                if topo is not None else 1.0),
+                       down_mult=(topo.broadcast_mult(n_clients)
+                                  if topo is not None else 1.0),
+                       agg_msgs=float(sum(m for _, m in
+                                          topo.aggregator_hops(n_clients))
+                                      if topo is not None else 0.0))
         return cls(n_params=tree_num_params(params),
                    itemsize=4 if itemsize is None else itemsize,
                    n_clients=n_clients)
@@ -129,7 +192,9 @@ class CommMeter:
              up_frac: float | None = None, down_frac: float = 1.0) -> None:
         """Record one communication round. In legacy mode ``up_frac`` < 1
         models sparsified uplinks; in bit-true mode the compressed width is
-        already baked into ``bits_up`` and passing ``up_frac`` raises."""
+        already baked into ``bits_up`` and passing ``up_frac`` raises.
+        Aggregator-tier hops (hierarchical topologies) are billed dense
+        f32 in BOTH directions — the tree is traversed up and down."""
         self.rounds += 1
         if self.bits_up is not None:
             if up_frac is not None:
@@ -138,10 +203,14 @@ class CommMeter:
                     "bits_up; passing up_frac would double-count")
             per_coord = self.n_params * self.n_clients
             bits_down = 32.0 if self.bits_down is None else self.bits_down
-            self.bytes_up += int(vectors_up * per_coord * self.bits_up
-                                 * self.up_duty / 8.0)
-            self.bytes_down += int(vectors_down * per_coord
-                                   * bits_down / 8.0 * down_frac)
+            agg_bits = self.agg_msgs * self.n_params * 32.0
+            self.bytes_up += int(vectors_up * (per_coord * self.up_mult
+                                               * self.bits_up * self.up_duty
+                                               + agg_bits) / 8.0)
+            self.bytes_down += int(vectors_down * (per_coord * self.down_mult
+                                                   * bits_down * down_frac
+                                                   * self.down_duty
+                                                   + agg_bits) / 8.0)
             return
         per_vec = self.n_params * self.itemsize * self.n_clients
         self.bytes_up += int(vectors_up * per_vec
@@ -164,11 +233,19 @@ class CommMeter:
 
 def comm_bits_per_round(algo, n_params: int, n_clients: int = 1) -> dict:
     """Bit-true EXPECTED wire bits per communication round (the Remark 2
-    accounting with the compressor stack and the delay model's uplink duty
-    cycle folded in; downlink stays dense f32)."""
-    up = (algo.vectors_up * n_params * n_clients * bits_per_coord_of(algo)
-          * transmit_frac_of(algo))
-    down = algo.vectors_down * n_params * n_clients * 32.0
+    accounting with the compressor stack, the delay model's uplink duty
+    cycle, the sampling rate's downlink duty cycle, and the topology's
+    per-hop traffic folded in; downlink stays dense f32). ``up_bits``
+    sums all uplink hops (see :func:`comm_hops_per_round`); the
+    hierarchy's downward tier re-broadcasts mirror the upward hops."""
+    topo = topology_of(algo)
+    up = sum(h["bits"] for h in comm_hops_per_round(algo, n_params, n_clients))
+    down_mult = topo.broadcast_mult(n_clients) if topo is not None else 1.0
+    agg_msgs = (sum(m for _, m in topo.aggregator_hops(n_clients))
+                if topo is not None else 0)
+    down = algo.vectors_down * n_params * (
+        n_clients * down_mult * 32.0 * receive_frac_of(algo)
+        + agg_msgs * 32.0)
     return {"up_bits": up, "down_bits": down, "total_bits": up + down}
 
 

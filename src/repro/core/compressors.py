@@ -49,7 +49,8 @@ stage's survival fraction. Per-leaf scalar overheads (one f32 scale per
 leaf for :class:`StochasticQuant`) are O(1) per tensor and excluded.
 
 ``from_spec`` parses the launch-config grammar (configs/base.py):
-``"topk:0.3"``, ``"randk:0.25"``, ``"q8"``, ``"bf16"``, chained with ``+``
+``"topk:0.3"``, ``"randk:0.25"``, ``"q8"``, ``"nat"`` (natural /
+exponent-only quantization), ``"bf16"``, chained with ``+``
 (``"topk:0.3+bf16"``), with an optional ``"ef:"`` (error feedback) or
 ``"shift:"`` (DIANA-style shifted compression — see :class:`Shifted`)
 prefix around the whole chain.
@@ -72,6 +73,7 @@ __all__ = [
     "Compressor",
     "ErrorFeedback",
     "Identity",
+    "NaturalQuant",
     "RandK",
     "Shifted",
     "StochasticQuant",
@@ -300,6 +302,56 @@ class StochasticQuant(Compressor):
 
 
 @dataclasses.dataclass(frozen=True)
+class NaturalQuant(Compressor):
+    """Natural (exponent-only) compression [Horvath et al., 2019] —
+    UNBIASED. Each value keeps its sign and is stochastically rounded to
+    one of the two nearest powers of two: for ``2^a <= |v| < 2^(a+1)``,
+    transmit ``2^(a+1)`` with probability ``|v|/2^a - 1`` and ``2^a``
+    otherwise, so ``E[C(v)] = v`` per coordinate. The mantissa never
+    rides the wire: a sign bit plus an 8-bit exponent field (the full f32
+    exponent range) is 9 bits/coordinate, with NO shared scale to
+    synchronize — unlike :class:`StochasticQuant` there is no per-leaf
+    max to agree on, which is what makes natural compression compose
+    freely with sparsifiers in practice. Relative variance is bounded by
+    construction: ``omega = 1/8``, independent of dimension.
+
+    The rounding dither is shared across clients (one draw per
+    coordinate per round, broadcast over the client axis), preserving the
+    synchronized-randomness invariant: clients at consensus transmit
+    identical messages."""
+
+    requires_key = True
+    unbiased = True
+
+    @property
+    def value_bits(self) -> float:
+        return 9.0  # sign + 8-bit exponent; mantissa dropped
+
+    @property
+    def omega(self) -> float:
+        """E|C(x) - x|^2 <= (1/8) |x|^2 (Horvath et al., Thm. 7)."""
+        return 0.125
+
+    def compress(self, key, leaf):
+        ct = leaf.dtype if leaf.dtype in (jnp.float32, jnp.float64) \
+            else jnp.float32
+        a = leaf.astype(ct)
+        mag = jnp.abs(a)
+        e = jnp.floor(jnp.log2(jnp.where(mag > 0, mag, 1.0)))
+        # ldexp, not exp2: XLA lowers exp2 to exp(x ln 2), which is off by
+        # an ulp — the wire value must be an EXACT power of two (that is
+        # the whole point: only the exponent is transmitted).
+        low = jnp.ldexp(jnp.ones_like(a), e.astype(jnp.int32))
+        # clip guards the floor(log2) edge at exact powers of two, where
+        # float rounding could leave p infinitesimally outside [0, 1).
+        p_up = jnp.clip(mag / low - 1.0, 0.0, 1.0)
+        u = jnp.broadcast_to(
+            jax.random.uniform(key, _coord_shape(leaf), dtype=ct), a.shape)
+        out = jnp.sign(a) * low * jnp.where(u < p_up, 2.0, 1.0)
+        return jnp.where(mag > 0, out, 0.0).astype(leaf.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
 class Bf16(Compressor):
     """bfloat16 round-trip (deterministic nearest-even rounding — biased)."""
 
@@ -520,11 +572,13 @@ def _parse_stage(tok: str) -> Compressor:
         return StochasticQuant(bits=int(name[1:]))
     if name.startswith("pq") and name[2:].isdigit():  # per-client dither
         return StochasticQuant(bits=int(name[2:]), per_client_dither=True)
+    if name == "nat":
+        return NaturalQuant()
     if name == "bf16":
         return Bf16()
     raise ValueError(f"unknown compressor spec {tok!r} (try topk:0.3, "
-                     "topk_global:0.3, randk:0.25, q8, pq8, bf16, ef:..., "
-                     "a+b)")
+                     "topk_global:0.3, randk:0.25, q8, pq8, nat, bf16, "
+                     "ef:..., a+b)")
 
 
 def from_spec(spec: str | Compressor | None) -> Compressor | None:

@@ -65,11 +65,22 @@ algorithm without forking its round body, and compose in either order::
   server mean. Delay applies AFTER compression (the buffer holds wire
   messages) and composes with participation (absent clients cannot
   deliver; their buffer entry keeps aging). See staleness.py.
+* ``with_topology`` replaces the flat all-to-one reduction itself:
+  hierarchical edge-aggregator trees (per-hop comm accounting, root
+  ingress of ``g`` messages instead of ``n_clients``) or doubly-stochastic
+  gossip mixing (per-client neighborhood means — no server at all; the
+  NIDS lineage FedCET descends from). Every reduction is a WEIGHTED one,
+  fed the same weight vector the star engine uses (uniform / the
+  participation mask / the stale policy's weights), so topology composes
+  with all three transforms above with no algorithm-side code. Stateful
+  topologies (per-round resampled graphs) ride a
+  :class:`repro.core.topology.TopoState` in ``EngineState`` extras, just
+  before the delay buffer. See topology.py.
 
-All three factories are EXACT no-ops at their identity settings
+All four factories are EXACT no-ops at their identity settings
 (``rate >= 1.0``; ``k_frac >= 1.0 and not quantize``; delay ``fixed:0`` /
-``rr:0`` / ``geom:1`` / ``none``): they return the algorithm object
-unchanged.
+``rr:0`` / ``geom:1`` / ``none``; topology ``star``): they return the
+algorithm object unchanged.
 
 The shared multi-round driver
 -----------------------------
@@ -97,17 +108,20 @@ from repro.core.staleness import (
     parse_policy,
     weighted_client_mean,
 )
+from repro.core.topology import TopoState, parse_topology
 from repro.utils.tree import tree_client_mean
 
 
 class EngineState(NamedTuple):
     """Algorithm state plus per-transform extra state (e.g. error-feedback
-    memory), plus — when ``with_delay`` is attached — the server's
-    last-known message buffer as the FINAL extras slot
+    memory), plus — when a STATEFUL topology is attached — its
+    :class:`repro.core.topology.TopoState` (the mixing round index), plus
+    — when ``with_delay`` is attached — the server's last-known message
+    buffer as the FINAL extras slot
     (:class:`repro.core.staleness.DelayState`). Only used when at least one
-    transform or a delay model is attached; bare algorithms keep their bare
-    spec state, so existing checkpoints and sharding specs are
-    unaffected."""
+    transform, a stateful topology or a delay model is attached; bare
+    algorithms keep their bare spec state, so existing checkpoints and
+    sharding specs are unaffected."""
 
     inner: Any
     extras: tuple
@@ -308,6 +322,9 @@ class RoundEngine:
     #: asynchronous-round simulation (delay model + buffer + stale policy);
     #: attach via ``with_delay`` — see repro/core/staleness.py.
     delay: StalenessConfig | None = dataclasses.field(default=None, kw_only=True)
+    #: aggregation geometry (hierarchical tiers / gossip mixing); attach via
+    #: ``with_topology`` — see repro/core/topology.py. None = the flat star.
+    topology: Any | None = dataclasses.field(default=None, kw_only=True)
     #: mesh axes carrying the client dimension (production launcher only).
     spmd_client_axes: tuple = dataclasses.field(default=(), kw_only=True)
 
@@ -397,24 +414,51 @@ class RoundEngine:
             frac *= self.delay.transmit_frac(self.n_clients)
         return frac
 
+    @property
+    def receive_frac(self) -> float:
+        """Expected fraction of rounds a client RECEIVES the downlink
+        broadcast (1.0 synchronous). Under client sampling the server
+        broadcasts to PRESENT clients only — absent clients keep their
+        frozen replica instead of receiving a phantom broadcast, so
+        CommMeter bills downlink bytes at the participation rate. Delay
+        models do not reduce downlink: stale-but-present clients still
+        apply the (buffered-mean) update, which still has to reach them."""
+        return min(self.sampling.rate, 1.0) if self.sampling is not None else 1.0
+
     # ------------------------------------------------------- state wrapping
     @property
-    def _wrapped(self) -> bool:
-        return bool(self.transforms) or self.delay is not None
+    def _topo_stateful(self) -> bool:
+        return self.topology is not None and self.topology.stateful
 
-    def _wrap(self, inner, extras, dstate=None):
+    @property
+    def _wrapped(self) -> bool:
+        return (bool(self.transforms) or self.delay is not None
+                or self._topo_stateful)
+
+    def _wrap(self, inner, extras, tstate=None, dstate=None):
         if not self._wrapped:
             return inner
-        extras = tuple(extras) + ((dstate,) if self.delay is not None else ())
+        extras = tuple(extras)
+        if self._topo_stateful:
+            extras += (tstate,)
+        if self.delay is not None:
+            extras += (dstate,)
         return EngineState(inner, extras)
 
     def _split(self, state):
-        """-> (inner, transform extras, DelayState | None)."""
+        """-> (inner, transform extras, TopoState | None, DelayState | None).
+
+        Extras layout: per-transform slots first, then the stateful
+        topology's TopoState (when attached), then the delay buffer as the
+        FINAL slot (when attached)."""
         if not self._wrapped:
-            return state, (), None
+            return state, (), None, None
+        extras, tstate, dstate = state.extras, None, None
         if self.delay is not None:
-            return state.inner, state.extras[:-1], state.extras[-1]
-        return state.inner, state.extras, None
+            extras, dstate = extras[:-1], extras[-1]
+        if self._topo_stateful:
+            extras, tstate = extras[:-1], extras[-1]
+        return state.inner, extras, tstate, dstate
 
     def _inner(self, state):
         return state.inner if self._wrapped else state
@@ -436,7 +480,7 @@ class RoundEngine:
         return tuple(t.init_extra(msg_shapes) for t in self.transforms)
 
     def _comm_step(self, gf, inner, extras, batch, rctx, agg, step,
-                   dstate=None, fresh=None):
+                   tstate=None, dstate=None, fresh=None):
         """The single aggregating step: message -> transforms -> [staleness
         buffer] -> reduce -> apply. The only place a cross-client collective
         fires. ``step`` is the state's step counter at round entry —
@@ -459,18 +503,26 @@ class RoundEngine:
         for t, e in zip(self.transforms, extras):
             msg, e = t.apply(msg, e, step)
             new_extras.append(e)
+        tstate_next = (self.topology.advance(tstate)
+                       if self.topology is not None else None)
 
         if dstate is None:  # synchronous path (and always: init)
             msg_bar = agg(msg)
             inner = self.server_aggregate(inner, msg, msg_bar, mctx, rctx)
-            return inner, tuple(new_extras), None, msg
+            return inner, tuple(new_extras), tstate_next, None, msg
 
         # fresh arrivals replace the buffered copy and reset its age; the
         # buffer is server state — it updates and ages every round.
         buf = select_clients(msg, dstate.buf, fresh, self.n_clients)
         age = jnp.where(fresh, 0, dstate.age + 1).astype(dstate.age.dtype)
         w = self.delay.policy.weights(age, fresh)
-        msg_bar = weighted_client_mean(buf, w)
+        # the stale policy's weights feed the TOPOLOGY's reduction (the
+        # same weighted seam as the synchronous path), so hierarchical /
+        # gossip aggregation composes with staleness with no extra code.
+        if self.topology is not None:
+            msg_bar = self.topology.reduce(buf, w, tstate)
+        else:
+            msg_bar = weighted_client_mean(buf, w)
         # each client's own-message slot is what the server attributed to
         # it: the fresh wire message where it landed, the buffer elsewhere.
         agg_inner = self.server_aggregate(inner, buf, msg_bar, mctx, rctx)
@@ -483,7 +535,8 @@ class RoundEngine:
         new_extras = tuple(
             select_clients(ne, e, fresh, self.n_clients)
             for ne, e in zip(new_extras, extras))
-        return agg_inner, new_extras, DelayState(buf=buf, age=age), msg
+        return (agg_inner, new_extras, tstate_next,
+                DelayState(buf=buf, age=age), msg)
 
     def _would_transmit(self, gf, inner, extras, batch):
         """The wire message the current state WOULD transmit (begin_round
@@ -495,29 +548,48 @@ class RoundEngine:
             msg, _ = t.apply(msg, e, inner.t)
         return msg
 
+    def _aggregator(self, mask, tstate):
+        """The round's cross-client reduction (fed to ``begin_round`` and
+        the aggregating step): the attached topology's weighted reduce
+        (uniform weights, or the participation mask as weights), else the
+        star mean / masked mean the engine always used."""
+        if self.topology is not None:
+            ft = jax.dtypes.canonicalize_dtype(jnp.float64)
+            w = (mask.astype(ft) if mask is not None
+                 else jnp.ones((self.n_clients,), ft))
+            return lambda tr: self.topology.reduce(tr, w, tstate)
+        if mask is not None:
+            return lambda tr: masked_client_mean(tr, mask)
+        return tree_client_mean
+
     # -------------------------------------------------------------- protocol
     def init(self, grad_fn: GradFn, x0, init_batch):
         """Replicate-and-warm-up, plus one aggregating step if the spec's
         warm-up requests it. Client sampling and delay never apply at init
         (matching the full-participation synchronous initialization of the
-        paper); the delay buffer is seeded with each client's (would-be)
-        init-time wire message, age 0 — so early stale rounds average real
-        messages, never zeros."""
+        paper) but the TOPOLOGY does — it is the physical network, so a
+        warm-up aggregation already flows through the tree / gossip graph.
+        The delay buffer is seeded with each client's (would-be) init-time
+        wire message, age 0 — so early stale rounds average real messages,
+        never zeros."""
         gf = self._grad(grad_fn)
         inner, run_comm = self.init_warmup(gf, x0, init_batch)
         extras = self._init_extras(gf, inner, init_batch)
+        tstate = (self.topology.init_state()
+                  if self.topology is not None else None)
         tx = None
         if run_comm:
-            inner, extras, _, tx = self._comm_step(
+            inner, extras, tstate, _, tx = self._comm_step(
                 gf, inner, extras, init_batch, rctx=None,
-                agg=tree_client_mean, step=inner.t)
+                agg=self._aggregator(None, tstate), step=inner.t,
+                tstate=tstate)
         dstate = None
         if self.delay is not None:
             if tx is None:
                 tx = self._would_transmit(gf, inner, extras, init_batch)
             dstate = DelayState(
                 buf=tx, age=jnp.zeros((self.n_clients,), jnp.int32))
-        return self._wrap(inner, extras, dstate)
+        return self._wrap(inner, extras, tstate, dstate)
 
     def round(self, grad_fn: GradFn, state, batches):
         """One communication round: optional round-start exchange, tau-1
@@ -528,16 +600,15 @@ class RoundEngine:
         aggregation sits OUTSIDE the scan so the cross-pod all-reduce
         appears exactly once per round in the HLO."""
         gf = self._grad(grad_fn)
-        inner, extras, dstate = self._split(state)
+        inner, extras, tstate, dstate = self._split(state)
 
         step0 = inner.t  # round-entry counter: keys masks AND compressors
         mask = None
-        agg = tree_client_mean
         if self.sampling is not None:
             key = jax.random.fold_in(jax.random.key(self.sampling.seed),
                                      jnp.asarray(inner.t, jnp.int32))
             mask = participation_mask(key, self.n_clients, self.sampling.rate)
-            agg = lambda tr: masked_client_mean(tr, mask)  # noqa: E731
+        agg = self._aggregator(mask, tstate)
         fresh = None
         if self.delay is not None:
             fresh = self.delay.fresh_mask(step0, self.tau, self.n_clients)
@@ -557,18 +628,19 @@ class RoundEngine:
             inner, _ = jax.lax.scan(body, inner, local_b)
 
         last_b = jax.tree.map(lambda b: b[self.tau - 1], batches)
-        inner, extras, dstate, _ = self._comm_step(
+        inner, extras, tstate, dstate, _ = self._comm_step(
             gf, inner, extras, last_b, rctx, agg, step=step0,
-            dstate=dstate, fresh=fresh)
+            tstate=tstate, dstate=dstate, fresh=fresh)
 
         if mask is not None:
             # absent clients keep their pre-round state entirely; the delay
-            # buffer is SERVER state and is never reverted — an absent
-            # client's last-known message simply keeps aging.
+            # buffer and the topology round index are SERVER/NETWORK state
+            # and are never reverted — an absent client's last-known
+            # message simply keeps aging.
             inner = select_clients(inner, frozen_inner, mask, self.n_clients)
             extras = tuple(select_clients(e, fe, mask, self.n_clients)
                            for e, fe in zip(extras, frozen_extras))
-        return self._wrap(inner, extras, dstate)
+        return self._wrap(inner, extras, tstate, dstate)
 
 
 # ------------------------------------------------------- transform factories
@@ -655,6 +727,36 @@ def with_delay(algo: RoundEngine, delay, *, policy="last",
                          f"({algo.delay!r}); stacked delays are undefined")
     cfg = StalenessConfig(model=model, policy=parse_policy(policy), seed=seed)
     return dataclasses.replace(algo, delay=cfg)
+
+
+def with_topology(algo: RoundEngine, topology, *, seed: int = 0) -> RoundEngine:
+    """Non-star aggregation geometry for ANY engine algorithm: hierarchical
+    (edge-aggregator tree) or gossip (doubly-stochastic mixing) reduction
+    at the aggregation seam (see repro/core/topology.py).
+
+    ``topology`` is a spec string (``"hier:g8"``, ``"hier:16x4"``,
+    ``"ring"``, ``"torus"``, ``"er:0.4"``, ``"er:0.4:t"`` for a per-round
+    resampled graph) or a :class:`~repro.core.topology.Topology` object;
+    ``seed`` keys stochastic graph draws (domain-separated from the
+    participation / compression / delay streams). Star specs (``"star"`` /
+    ``"none"`` / a :class:`~repro.core.topology.Star` object) are exact
+    no-ops — the algorithm object is returned unchanged.
+
+    The topology applies wherever the engine reduces across clients — the
+    aggregating step, FedLin's round-start gradient exchange, and the
+    warm-up aggregation at ``init`` — and receives the SAME per-client
+    weight vector the star engine uses (uniform, the participation mask,
+    or the stale policy's weights), so it composes with
+    ``with_compression`` / ``with_participation`` / ``with_delay`` in any
+    factory order."""
+    topo = parse_topology(topology, algo.n_clients, seed=seed)
+    if topo is None:
+        return algo
+    if algo.topology is not None:
+        raise ValueError("algorithm already has a topology attached "
+                         f"({algo.topology!r}); stacked topologies are "
+                         "undefined")
+    return dataclasses.replace(algo, topology=topo)
 
 
 # --------------------------------------------------------- multi-round driver

@@ -1,0 +1,463 @@
+"""Topology: WHERE the aggregation happens — star, hierarchical, gossip.
+
+The paper's round model (and everything in this repo up to now) is the
+degenerate STAR topology: one server, flat all-to-one aggregation — every
+client's message crosses the network to a single root, which is the
+scaling bottleneck once "clients" means millions of edge devices. FedCET
+itself descends from the DECENTRALIZED optimizer NIDS, where there is no
+server at all: each node mixes with its graph neighbors through a
+doubly-stochastic matrix. This module makes the aggregation geometry a
+first-class scenario axis on the engine's message/aggregate seam (the
+same seam ``with_compression`` / ``with_participation`` / ``with_delay``
+ride):
+
+* :class:`Star` — the flat all-to-one mean, exactly today's engine. The
+  ``with_topology`` factory returns the algorithm object UNCHANGED for
+  star specs (the identity-shortcut discipline every transform factory
+  follows); attaching the ``Star`` machinery explicitly is pinned
+  trajectory-identical (<= 1e-12) to the bare engine in
+  tests/test_topology.py.
+* :class:`Hierarchical` — 2-or-more-level tree aggregation: EDGE
+  aggregators each take a contiguous block of clients, compute the
+  weighted partial mean of their block, and forward ONE message up the
+  tree; the root combines tier aggregates into the global mean. The
+  value is numerically the star mean up to float reassociation (the
+  grouped sums associate differently — measured ~1e-14 trajectory
+  drift, NOT bit-identical), but the traffic shape changes completely:
+  the root ingests ``groups[-1]`` messages instead of ``n_clients``
+  (the production scaling story), and comm accounting bills each hop
+  separately — see `Per-hop accounting` below.
+* :class:`Mixing` — no server: client i receives the W-weighted
+  neighborhood mean ``sum_j W_ij m_j`` of a doubly-stochastic gossip
+  matrix (ring, torus, Erdős–Rényi; Metropolis–Hastings weights). The
+  aggregate is PER-CLIENT (a stacked ``[clients, ...]`` tree, not a
+  broadcast ``[1, ...]`` mean); every engine spec already broadcasts
+  ``msg_bar`` leaf-wise, so the same ``server_aggregate`` math runs
+  decentralized unchanged. Column-stochasticity is what preserves
+  FedCET's redistributive invariant: ``sum_i (m_i - (W m)_i) = 0``, so
+  the drift updates stay mean-zero under gossip. Composed with the
+  :class:`repro.core.baselines.nids.NIDS` spec this implements NIDS
+  proper — closing the loop to the paper's origin.
+
+Weighted reduction contract
+---------------------------
+A topology reduces a stacked ``[clients, ...]`` tree under per-client
+weights ``w`` (``reduce(tree, w, tstate)``): uniform weights for plain
+rounds, the participation mask under client sampling, and the stale
+policy's ``(age, fresh)`` weights under ``with_delay`` — the SAME weight
+vector the star engine feeds ``weighted_client_mean``, so every topology
+composes with every transform with no algorithm-side code. Star and
+Hierarchical return the ``[1, ...]`` weighted mean (hierarchical
+grouping of a weighted mean is exact regrouping — same value, different
+association); Mixing row-renormalizes ``W * w`` so absent/stale
+neighbors drop out of each node's neighborhood mean.
+
+Topology state
+--------------
+Topologies that evolve per round (an Erdős–Rényi graph resampled every
+aggregation, keyed by a domain-separated PRNG stream) carry a
+:class:`TopoState` (the mixing round index) in the ``EngineState``
+extras slot, just before ``DelayState`` — checkpointed with the run,
+restart-stable, threaded through the AOT ``abstract_state`` /
+``state_shardings`` path in launch/train.py. Static topologies are
+stateless frozen dataclasses like every other engine knob.
+
+Per-hop accounting
+------------------
+A topology declares its traffic shape instead of letting the meter
+assume ``n_clients`` flat uplinks:
+
+* ``client_up_mult(n)`` — uplink messages per client on the FIRST hop
+  (1 for star/hierarchical; the node degree for gossip, where a client
+  transmits its wire message to each neighbor);
+* ``aggregator_hops(n)`` — ``(label, messages)`` per aggregator tier
+  (edge->root re-transmissions). These carry DENSE f32 partial
+  aggregates: the client-side compressor stack applies to the
+  client->edge hop only (re-compressing partial means at interior tiers
+  is future work, noted in ARCHITECTURE.md);
+* ``broadcast_mult(n)`` — downlink client-hop multiplier (0 for gossip:
+  there is no broadcast; the exchange is billed as uplink edges).
+
+``CommMeter.for_params(algo=...)`` and ``comm_bits_per_round`` /
+``comm_hops_per_round`` (repro/core/comm.py) fold these in, so
+``hier:g8`` shows the root ingesting 8 messages while the client tier
+still pays the compressed wire width x the delay duty cycle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.staleness import weighted_client_mean
+
+__all__ = [
+    "Hierarchical",
+    "Mixing",
+    "Star",
+    "TopoState",
+    "Topology",
+    "parse_topology",
+]
+
+#: domain-separation tag folded into resampled-graph keys so the topology
+#: stream never collides with the participation (bare seed), compression
+#: (0x7A11A5 + index) or delay (0x57A1E) schedules at the default seed=0.
+_TOPO_KEY_TAG = 0x70_70
+
+
+class TopoState(NamedTuple):
+    """Per-run topology state riding in ``EngineState`` extras (just
+    before the delay buffer when both are attached): the aggregation
+    round index ``k`` that keys time-varying mixing matrices. Scalar,
+    checkpointed, restart-stable."""
+
+    k: jax.Array  # int32 aggregation counter (init included)
+
+
+# ------------------------------------------------------------------ protocol
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Base: a weighted cross-client reduction with a declared traffic
+    shape. Subclasses implement ``reduce`` and override the accounting
+    hooks; stateful topologies also override ``init_state``/``advance``."""
+
+    #: does this topology carry a TopoState in EngineState extras?
+    stateful = False
+
+    # --------------------------------------------------------------- state
+    def init_state(self) -> TopoState | None:
+        return TopoState(k=jnp.zeros((), jnp.int32)) if self.stateful else None
+
+    def advance(self, tstate: TopoState | None) -> TopoState | None:
+        return TopoState(k=tstate.k + 1) if self.stateful else None
+
+    # -------------------------------------------------------------- compute
+    def reduce(self, tree, w: jax.Array, tstate: TopoState | None = None):
+        """Aggregate a stacked ``[clients, ...]`` tree under per-client
+        weights ``w`` — ``[1, ...]`` (star/hierarchical mean) or
+        ``[clients, ...]`` (per-client gossip neighborhood means)."""
+        raise NotImplementedError
+
+    # ----------------------------------------------------------- accounting
+    def client_up_mult(self, n_clients: int) -> float:
+        """Uplink messages per client on the first hop (gossip: degree)."""
+        del n_clients
+        return 1.0
+
+    def aggregator_hops(self, n_clients: int) -> tuple:
+        """``(label, messages)`` per aggregator tier above the clients."""
+        del n_clients
+        return ()
+
+    def broadcast_mult(self, n_clients: int) -> float:
+        """Downlink client-hop multiplier (0 = no broadcast at all)."""
+        del n_clients
+        return 1.0
+
+    def validate(self, n_clients: int) -> None:
+        """Raise if the topology cannot serve ``n_clients`` nodes."""
+        del n_clients
+
+
+# ---------------------------------------------------------------------- star
+@dataclasses.dataclass(frozen=True)
+class Star(Topology):
+    """Flat all-to-one aggregation — the engine's native geometry, kept
+    as an explicit object so tests can attach the topology MACHINERY and
+    pin it trajectory-identical to the bare engine. ``with_topology``
+    never attaches it (star specs are identity shortcuts)."""
+
+    def reduce(self, tree, w, tstate=None):
+        del tstate
+        return weighted_client_mean(tree, w)
+
+
+# -------------------------------------------------------------- hierarchical
+@dataclasses.dataclass(frozen=True)
+class Hierarchical(Topology):
+    """Tree aggregation: ``groups = (g1, g2, ...)`` aggregators per tier,
+    clients in contiguous near-equal blocks. ``(8,)`` is the 2-level
+    edge+root production shape (8 edge aggregators, root ingests 8
+    messages); ``(16, 4)`` adds a mid tier. Each tier forwards weighted
+    partial means with their weight sums, so the root value equals the
+    star weighted mean exactly up to float reassociation — whether
+    FedCET's exactness survives the regrouped arithmetic (it does,
+    ~1e-14, even under a shift:q8 client uplink) is pinned in
+    benchmarks/topology_sweep.py."""
+
+    groups: tuple
+
+    def __post_init__(self):
+        g = (self.groups,) if isinstance(self.groups, int) else tuple(self.groups)
+        object.__setattr__(self, "groups", g)
+        if not g or any(int(x) < 1 for x in g):
+            raise ValueError(f"need >= 1 aggregator per tier: {g}")
+        if any(b >= a for a, b in zip(g, g[1:])):
+            raise ValueError(f"tier sizes must strictly decrease: {g}")
+
+    def validate(self, n_clients: int) -> None:
+        if self.groups[0] > n_clients:
+            raise ValueError(
+                f"hierarchical tier of {self.groups[0]} aggregators over "
+                f"only {n_clients} clients (want fan-in > 1)")
+
+    @staticmethod
+    def _segments(n_in: int, n_out: int) -> jax.Array:
+        """Contiguous near-equal block assignment ``[n_in] -> n_out``."""
+        return jnp.asarray([i * n_out // n_in for i in range(n_in)], jnp.int32)
+
+    def reduce(self, tree, w, tstate=None):
+        del tstate
+        n = w.shape[0]
+        tiers = [g for g in self.groups if g < n]  # degenerate tiers drop out
+
+        def mean_leaf(a):
+            vals = a
+            wt = w.astype(a.dtype)
+            cur = n
+            for g in tiers:
+                ids = self._segments(cur, g)
+                wb = wt.reshape((-1,) + (1,) * (vals.ndim - 1))
+                sums = jax.ops.segment_sum(vals * wb, ids, num_segments=g)
+                wsum = jax.ops.segment_sum(wt, ids, num_segments=g)
+                denom = jnp.where(wsum > 0, wsum, 1.0)
+                # the edge aggregator transmits its PARTIAL MEAN (one
+                # message regardless of block size) + the weight mass.
+                vals = sums / denom.reshape((-1,) + (1,) * (vals.ndim - 1))
+                wt, cur = wsum, g
+            wb = wt.reshape((-1,) + (1,) * (vals.ndim - 1))
+            total = jnp.sum(wt)
+            denom = jnp.where(total > 0, total, jnp.ones((), a.dtype))
+            return jnp.sum(vals * wb, axis=0, keepdims=True) / denom
+
+        return jax.tree.map(mean_leaf, tree)
+
+    def aggregator_hops(self, n_clients: int) -> tuple:
+        tiers = [g for g in self.groups if g < n_clients]
+        return tuple(
+            (f"tier{i + 1}->" + ("root" if i == len(tiers) - 1
+                                 else f"tier{i + 2}"), int(g))
+            for i, g in enumerate(tiers))
+
+
+# -------------------------------------------------------------------- mixing
+def _metropolis(n: int, edges: set) -> list:
+    """Doubly-stochastic Metropolis–Hastings weights for an undirected
+    graph: ``W_ij = 1 / (1 + max(d_i, d_j))`` on edges, diagonal absorbs
+    the slack. Symmetric, nonnegative, rows and columns sum to 1."""
+    deg = [0] * n
+    for i, j in edges:
+        deg[i] += 1
+        deg[j] += 1
+    W = [[0.0] * n for _ in range(n)]
+    for i, j in edges:
+        wij = 1.0 / (1.0 + max(deg[i], deg[j]))
+        W[i][j] = W[j][i] = wij
+    for i in range(n):
+        W[i][i] = 1.0 - sum(W[i])
+    return W
+
+
+@dataclasses.dataclass(frozen=True)
+class Mixing(Topology):
+    """Gossip aggregation through a doubly-stochastic matrix ``W``:
+    client i receives ``sum_j W_ij w_j m_j / sum_j W_ij w_j`` — its
+    weight-renormalized neighborhood mean — instead of the global mean.
+    Build with :meth:`ring` / :meth:`torus` / :meth:`erdos_renyi`, or
+    pass any doubly-stochastic ``w`` (nested tuples, so the spec stays
+    hashable/jit-static like every engine knob).
+
+    ``resample=True`` (Erdős–Rényi only) redraws the graph at every
+    aggregation from a domain-separated PRNG stream keyed by the
+    :class:`TopoState` round index — the stateful-topology path."""
+
+    w: tuple | None = None
+    n: int = 0
+    graph: str = "custom"
+    p: float = 0.0
+    seed: int = 0
+    resample: bool = False
+
+    def __post_init__(self):
+        if self.w is not None:
+            object.__setattr__(self, "w", tuple(tuple(float(x) for x in r)
+                                                for r in self.w))
+            object.__setattr__(self, "n", len(self.w))
+        if self.w is None and not self.resample:
+            raise ValueError("Mixing needs a matrix (w=) or resample=True")
+        if self.resample and not (0.0 < self.p <= 1.0):
+            raise ValueError(f"resampled Erdos-Renyi needs 0 < p <= 1: {self.p}")
+
+    # ------------------------------------------------------------- builders
+    @classmethod
+    def ring(cls, n: int) -> "Mixing":
+        if n < 2:
+            raise ValueError(f"ring needs >= 2 nodes: {n}")
+        edges = {(min(i, (i + 1) % n), max(i, (i + 1) % n)) for i in range(n)}
+        return cls(w=tuple(map(tuple, _metropolis(n, edges))), graph="ring")
+
+    @classmethod
+    def torus(cls, n: int | None = None, shape: tuple | None = None) -> "Mixing":
+        """2-D periodic grid; ``shape=(rows, cols)`` or the most-square
+        factorization of ``n`` (prime ``n`` degenerates to a ring and is
+        rejected — ask for ``ring`` explicitly)."""
+        if shape is None:
+            r = max(d for d in range(1, int(math.isqrt(n)) + 1) if n % d == 0)
+            shape = (r, n // r)
+        rows, cols = shape
+        if min(rows, cols) < 2:
+            raise ValueError(
+                f"torus needs both dims >= 2, got {shape} (use ring)")
+        n = rows * cols
+        edges = set()
+        for i in range(rows):
+            for j in range(cols):
+                a = i * cols + j
+                for b in (i * cols + (j + 1) % cols, ((i + 1) % rows) * cols + j):
+                    if a != b:
+                        edges.add((min(a, b), max(a, b)))
+        return cls(w=tuple(map(tuple, _metropolis(n, edges))),
+                   graph=f"torus{rows}x{cols}")
+
+    @classmethod
+    def erdos_renyi(cls, n: int, p: float, seed: int = 0,
+                    resample: bool = False) -> "Mixing":
+        """G(n, p) with Metropolis weights. ``resample=False`` samples
+        ONE graph here (host-side, from ``seed``) and fixes it;
+        ``resample=True`` defers sampling into the traced round, redrawn
+        per aggregation (the TopoState-keyed stream)."""
+        if resample:
+            return cls(w=None, n=n, graph="er", p=p, seed=seed, resample=True)
+        import numpy as np
+
+        rng = np.random.default_rng(seed)
+        edges = {(i, j) for i in range(n) for j in range(i + 1, n)
+                 if rng.random() < p}
+        return cls(w=tuple(map(tuple, _metropolis(n, edges))),
+                   graph="er", p=p, seed=seed)
+
+    # ---------------------------------------------------------------- state
+    @property
+    def stateful(self) -> bool:  # type: ignore[override]
+        return self.resample
+
+    # -------------------------------------------------------------- compute
+    def _matrix(self, tstate, n: int, dtype):
+        if not self.resample:
+            return jnp.asarray(self.w, dtype=dtype)
+        key = jax.random.fold_in(jax.random.key(self.seed), _TOPO_KEY_TAG)
+        key = jax.random.fold_in(key, tstate.k)
+        upper = jnp.triu(jax.random.bernoulli(key, self.p, (n, n)), k=1)
+        adj = jnp.logical_or(upper, upper.T)
+        deg = jnp.sum(adj, axis=1)
+        mw = 1.0 / (1.0 + jnp.maximum(deg[:, None], deg[None, :]).astype(dtype))
+        W = jnp.where(adj, mw, 0.0)
+        return W + jnp.diag(1.0 - jnp.sum(W, axis=1))
+
+    def reduce(self, tree, w, tstate=None):
+        n = w.shape[0]
+        if self.w is not None and self.n != n:
+            raise ValueError(f"mixing matrix is {self.n}x{self.n}, "
+                             f"state has {n} clients")
+
+        def mean_leaf(a):
+            W = self._matrix(tstate, n, a.dtype)
+            Ww = W * w.astype(a.dtype)[None, :]       # row i: W_ij * w_j
+            denom = jnp.sum(Ww, axis=1)
+            denom = jnp.where(denom > 0, denom, 1.0)
+            flat = a.reshape(n, -1)
+            out = (Ww @ flat) / denom[:, None]
+            return out.reshape(a.shape)
+
+        return jax.tree.map(mean_leaf, tree)
+
+    # ----------------------------------------------------------- accounting
+    def _directed_edges(self, n: int) -> float:
+        if self.resample:
+            return n * (n - 1) * self.p  # expected
+        return sum(1 for i, row in enumerate(self.w)
+                   for j, x in enumerate(row) if i != j and x != 0.0)
+
+    def client_up_mult(self, n_clients: int) -> float:
+        """Gossip clients transmit their wire message to each neighbor:
+        the first (and only) hop carries one message per directed edge."""
+        return self._directed_edges(n_clients) / n_clients
+
+    def broadcast_mult(self, n_clients: int) -> float:
+        return 0.0  # no server, no broadcast — the exchange is the uplink
+
+    def validate(self, n_clients: int) -> None:
+        if self.n and self.n != n_clients:
+            raise ValueError(f"{self.graph} mixing is over {self.n} nodes but "
+                             f"the algorithm has {n_clients} clients")
+
+    # ------------------------------------------------------------- analysis
+    @property
+    def spectral_gap(self) -> float | None:
+        """``1 - |lambda_2(W)|`` — the consensus rate driver (1.0 = one-shot
+        averaging, -> 0 = disconnected). None for resampled graphs (no
+        single matrix to analyze)."""
+        if self.w is None:
+            return None
+        import numpy as np
+
+        lam = np.sort(np.abs(np.linalg.eigvalsh(np.asarray(self.w))))
+        return float(1.0 - lam[-2])
+
+
+# ------------------------------------------------------------------- parsing
+def parse_topology(spec, n_clients: int, seed: int = 0):
+    """Parse a topology spec; returns ``None`` for star specs (``star`` /
+    ``none`` / ``""``) so ``with_topology`` can be an exact no-op at the
+    identity setting, like every other transform factory.
+
+    Grammar: ``star`` | ``hier:g8`` / ``hier:8`` / ``hier:16x4`` (tree
+    tiers, coarsest last) | ``ring`` | ``torus`` / ``torus:2x5`` |
+    ``er:0.4`` (one fixed G(n,p) graph) | ``er:0.4:t`` (resampled every
+    round — the stateful path)."""
+    if spec is None:
+        return None
+    if isinstance(spec, Topology):
+        if isinstance(spec, Star):
+            return None
+        spec.validate(n_clients)
+        return spec
+    s = str(spec).strip().lower()
+    if s in ("", "star", "none", "off"):
+        return None
+    name, _, arg = s.partition(":")
+    if name == "hier":
+        arg = arg.lstrip("g")
+        try:
+            groups = tuple(int(tok) for tok in arg.split("x") if tok)
+        except ValueError:
+            groups = ()
+        if not groups:
+            raise ValueError(f"bad hierarchical spec {spec!r} "
+                             "(try hier:g8 or hier:16x4)")
+        topo = Hierarchical(groups)
+    elif name == "ring":
+        topo = Mixing.ring(n_clients)
+    elif name == "torus":
+        shape = None
+        if arg:
+            r, _, c = arg.partition("x")
+            shape = (int(r), int(c))
+            if shape[0] * shape[1] != n_clients:
+                raise ValueError(f"torus {shape} has {shape[0] * shape[1]} "
+                                 f"nodes but the algorithm has {n_clients}")
+        topo = Mixing.torus(n_clients, shape=shape)
+    elif name == "er":
+        p, _, flag = arg.partition(":")
+        topo = Mixing.erdos_renyi(n_clients, float(p), seed=seed,
+                                  resample=flag in ("t", "resample"))
+    else:
+        raise ValueError(f"unknown topology spec {spec!r} "
+                         "(try star, hier:g8, ring, torus, er:0.4)")
+    topo.validate(n_clients)
+    return topo

@@ -18,12 +18,16 @@ Responsibilities a real deployment needs beyond the algorithm step:
 * BIT-TRUE communication metering via the algorithm's declared vector
   counts and its compressor stack's ``bits_per_coord`` (a bf16 uplink
   meters 16 bits/coordinate, ``randk:0.25`` meters 8 — the old fixed
-  ``itemsize`` bytes silently overcounted compressed uplinks),
+  ``itemsize`` bytes silently overcounted compressed uplinks), plus the
+  delay model's uplink duty cycle, the sampling rate's PRESENT-ONLY
+  downlink duty, and the topology's per-hop traffic shape (hierarchical
+  tier messages; gossip edges, no broadcast),
 * CSV metrics logging.
 
-Works with any engine algorithm (FedCET — plain, compressed and/or
-sampled via ``with_compression`` / ``with_participation`` — FedAvg,
-SCAFFOLD, FedTrack, FedLin) and any model exposing ``loss(params, batch)``.
+Works with any engine algorithm (FedCET — plain, compressed, sampled,
+delayed and/or re-topologized via the ``with_*`` factories — FedAvg,
+SCAFFOLD, FedTrack, FedLin, FedProx, FedDyn, NIDS) and any model
+exposing ``loss(params, batch)``.
 """
 
 from __future__ import annotations

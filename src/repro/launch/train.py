@@ -31,6 +31,7 @@ from repro.configs.base import INPUT_SHAPES, ArchConfig, FedScenario
 from repro.core.engine import EngineState, make_round_runner, scan_segments
 from repro.core.fedcet import FedCET, FedCETState
 from repro.core.staleness import DelayState
+from repro.core.topology import TopoState
 from repro.launch import input_specs as ispec
 from repro.launch import partition
 from repro.launch.mesh import client_axes, n_clients, tp_size
@@ -82,7 +83,8 @@ def state_shardings(plan: TrainPlan, state_shapes):
     trees; transform extras (error-feedback / shift memory) and the delay
     buffer are message-shaped — the same stacked layout as x — and shard
     identically (the buffer's ``[clients] int32`` age vector shards over
-    the client axes)."""
+    the client axes); a stateful topology's ``TopoState`` is a replicated
+    scalar (the mixing round index)."""
     mesh, tp, ca = plan.mesh, tp_size(plan.mesh), plan.client_axes
     inner_shapes = (state_shapes.inner
                     if isinstance(state_shapes, EngineState) else state_shapes)
@@ -92,18 +94,27 @@ def state_shardings(plan: TrainPlan, state_shapes):
                            t=NamedSharding(mesh, P()))
     if not isinstance(state_shapes, EngineState):
         return inner_sh
-    extras_sh = tuple(None if e is None else tree_sh(e)
-                      for e in state_shapes.extras)
-    return EngineState(inner=inner_sh, extras=extras_sh)
+
+    def extra_sh(e):
+        if e is None:
+            return None
+        if isinstance(e, TopoState):
+            return jax.tree.map(lambda _: NamedSharding(mesh, P()), e)
+        return tree_sh(e)
+
+    return EngineState(inner=inner_sh,
+                       extras=tuple(extra_sh(e) for e in state_shapes.extras))
 
 
 def abstract_state(plan: TrainPlan):
     """Shape-only algorithm state (no allocation) for AOT lowering:
     FedCETState, wrapped in EngineState when the plan's scenario attaches
     message transforms (extras shaped via ``eval_shape`` over each
-    transform's ``init_extra`` on the message = x-shaped tree) and/or a
-    delay model (final extras slot = the server buffer: an x-shaped
-    last-known message tree plus the ``[clients] int32`` age vector)."""
+    transform's ``init_extra`` on the message = x-shaped tree), a
+    STATEFUL topology (a scalar ``TopoState`` round index, just before
+    the delay slot) and/or a delay model (final extras slot = the server
+    buffer: an x-shaped last-known message tree plus the ``[clients]
+    int32`` age vector)."""
     model = build_model(plan.cfg)
     params = jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
     stack = lambda tree: jax.tree.map(
@@ -112,10 +123,14 @@ def abstract_state(plan: TrainPlan):
                         t=jax.ShapeDtypeStruct((), jnp.int64))
     transforms = getattr(plan.algo, "transforms", ())
     delay = getattr(plan.algo, "delay", None)
-    if not transforms and delay is None:
+    topo = getattr(plan.algo, "topology", None)
+    topo_stateful = topo is not None and topo.stateful
+    if not transforms and delay is None and not topo_stateful:
         return inner
     extras = tuple(jax.eval_shape(lambda t=t: t.init_extra(inner.x))
                    for t in transforms)
+    if topo_stateful:
+        extras = extras + (TopoState(k=jax.ShapeDtypeStruct((), jnp.int32)),)
     if delay is not None:
         extras = extras + (DelayState(
             buf=inner.x,
@@ -181,19 +196,23 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
                  reduced: bool = True, seed: int = 0,
                  compression: str = "none", participation: float = 1.0,
                  delay: str = "none", stale_policy: str = "last",
+                 topology: str = "star",
                  log_every: int = 10, ckpt_dir: str | None = None,
                  callback=None) -> dict:
     """End-to-end FedCET LM training on the host device(s). Returns metrics
     history. Used by examples/fed_train_lm.py.
 
     ``compression`` (a compressor spec — ``"randk:0.25"``, ``"shift:q8"``,
-    ``"ef:topk:0.3+bf16"``, ...), ``participation``, and ``delay`` /
+    ``"ef:topk:0.3+bf16"``, ...), ``participation``, ``delay`` /
     ``stale_policy`` (asynchronous rounds — ``"fixed:2"``, ``"rr:1"``,
-    ``"geom:0.5"`` with ``drop``/``last``/``poly:a`` aggregation) compose
+    ``"geom:0.5"`` with ``drop``/``last``/``poly:a`` aggregation) and
+    ``topology`` (aggregation geometry — ``"hier:g8"`` edge-aggregator
+    tree, ``"ring"``/``"torus"``/``"er:0.4"`` gossip mixing) compose
     the corresponding engine transforms onto the FedCET spec, so the
     production LM loop runs any scenario the simulation tests pin; comm
-    metering is bit-true from the resulting compressor stack and the delay
-    model's uplink duty cycle."""
+    metering is bit-true from the resulting compressor stack, the delay
+    model's uplink duty cycle, the sampling rate's downlink duty cycle,
+    and the topology's per-hop traffic shape."""
     from repro.checkpoint.ckpt import save
     from repro.core.comm import CommMeter
     from repro.data.synthetic import make_hetero_lm_dataset
@@ -205,7 +224,8 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
     params = model.init(jax.random.key(seed))
     scenario = FedScenario(compression=compression,
                            participation=participation, delay=delay,
-                           stale_policy=stale_policy, seed=seed)
+                           stale_policy=stale_policy, topology=topology,
+                           seed=seed)
     algo = scenario.apply(FedCET(alpha=alpha, c=c, tau=tau, n_clients=n_clients))
     ds = make_hetero_lm_dataset(cfg.vocab_size, n_clients, seq_len, batch,
                                 heterogeneity=heterogeneity, seed=seed)
@@ -269,6 +289,9 @@ def main(argv=None):
                     help="uplink delay model: none | fixed:2 | rr:1 | geom:0.5")
     ap.add_argument("--stale-policy", default="last",
                     help="stale-aggregation policy: drop | last | poly:1")
+    ap.add_argument("--topology", default="star",
+                    help="aggregation geometry: star | hier:g8 | hier:16x4 "
+                         "| ring | torus | er:0.4")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
     hist = run_training(
@@ -277,6 +300,7 @@ def main(argv=None):
         reduced=not args.full, ckpt_dir=args.ckpt_dir,
         compression=args.compression, participation=args.participation,
         delay=args.delay, stale_policy=args.stale_policy,
+        topology=args.topology,
         callback=lambda r, l, b: print(f"round {r:5d}  loss {l:.4f}  comm {b/1e6:.1f} MB"))
     print("final loss:", hist["loss"][-1])
 

@@ -20,6 +20,7 @@ from repro.core.compressors import (
     Chain,
     ErrorFeedback,
     Identity,
+    NaturalQuant,
     RandK,
     Shifted,
     StochasticQuant,
@@ -41,6 +42,7 @@ def _leaf(key, clients=6, dim=40):
     (RandK(0.25), None), (RandK(0.5), None),
     (StochasticQuant(bits=4), 4), (StochasticQuant(bits=8), 8),
     (Chain((RandK(0.5), StochasticQuant(bits=8))), 8),
+    (NaturalQuant(), None),
 ])
 def test_statistical_unbiasedness(comp, qbits):
     """E[compress(v)] == v over the key distribution: the empirical mean
@@ -388,3 +390,49 @@ def test_per_client_dither_spec():
     assert comp.bits == 8
     shifted = from_spec("shift:pq4")
     assert isinstance(shifted, Shifted) and shifted.inner.per_client_dither
+
+
+# --------------------------------------------------- natural (exponent-only)
+def test_natural_quant_outputs_signed_powers_of_two():
+    """Every nonzero output is EXACTLY a signed power of two (only the
+    exponent rides the wire — the kernel must use ldexp, not exp2, whose
+    XLA lowering is off by an ulp), one of the two bracketing v."""
+    v = _leaf(jax.random.key(12))
+    out = np.asarray(NaturalQuant().compress(jax.random.key(13), v))
+    nz = out[out != 0]
+    exps = np.log2(np.abs(nz))
+    np.testing.assert_array_equal(exps, np.round(exps))
+    assert np.array_equal(np.sign(out), np.sign(np.asarray(v)))
+    ratio = np.abs(nz) / np.abs(np.asarray(v)[out != 0])
+    assert (ratio >= 0.5 - 1e-12).all() and (ratio <= 2.0 + 1e-12).all()
+    # zeros stay zero
+    z = jnp.zeros((3, 5))
+    np.testing.assert_array_equal(
+        np.asarray(NaturalQuant().compress(jax.random.key(0), z)), 0.0)
+
+
+def test_natural_quant_accounting_and_spec():
+    """Sign + 8-bit exponent = 9 wire bits/coordinate, omega = 1/8 (the
+    Horvath et al. variance bound), parsed by the ``nat`` spec token and
+    wrappable by shift:."""
+    comp = NaturalQuant()
+    assert comp.bits_per_coord == 9.0 and comp.value_bits == 9.0
+    assert comp.omega == pytest.approx(1.0 / 8.0)
+    assert comp.unbiased and comp.requires_key
+    assert from_spec("nat") == NaturalQuant()
+    shifted = from_spec("shift:nat")
+    assert isinstance(shifted, Shifted) and shifted.inner == NaturalQuant()
+    assert shifted.step == pytest.approx(1.0 / (1.0 + 0.125))
+    assert Chain((RandK(0.5), NaturalQuant())).bits_per_coord \
+        == pytest.approx(4.5)
+
+
+def test_natural_quant_dither_shared_across_clients():
+    """The rounding dither is one draw per coordinate per round,
+    broadcast over the client axis: identical rows quantize identically
+    (the synchronized-randomness/consensus invariant)."""
+    row = jax.random.normal(jax.random.key(14), (30,))
+    v = jnp.stack([row, row, row])
+    out = np.asarray(NaturalQuant().compress(jax.random.key(15), v))
+    np.testing.assert_array_equal(out[0], out[1])
+    np.testing.assert_array_equal(out[0], out[2])

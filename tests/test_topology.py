@@ -1,0 +1,437 @@
+"""The topology subsystem (repro/core/topology.py + engine with_topology).
+
+Pins, in order:
+
+* star specs are EXACT no-ops (the factory returns the algorithm object
+  unchanged) and the attached ``Star`` machinery is trajectory-identical
+  (<= 1e-12) to the bare engine for FedCET, FedAvg, SCAFFOLD and FedLin —
+  bare AND composed with compression + participation;
+* the spec grammar, mixing-matrix structure (doubly stochastic,
+  Metropolis weights, spectral gap) and the weighted-reduce contract
+  (hierarchical == star up to reassociation, for uniform, masked and
+  zero-group weights; gossip rows renormalize);
+* the NIDS lineage: the NIDS spec under the star topology IS
+  ``FedCETLiteral`` with ``c * alpha = 1/2`` (<= 1e-12), and NIDS over
+  ring / torus / Erdős–Rényi gossip converges to the EXACT optimum —
+  FedCET's origin recovered as a ~70-line engine spec + a mixing matrix;
+* measured convergence: FedCET stays exact (~1e-14) under 2-level
+  hierarchical aggregation — alone, with a shift:q8 8-bit uplink, with
+  client sampling, and with rr:2 staleness (full sweep in
+  benchmarks/topology_sweep.py) — and under ring gossip;
+* determinism and checkpoint/resume: a per-round resampled
+  Erdős–Rényi graph (the stateful-topology path) draws the same schedule
+  across runs, and the ``TopoState`` round index rides ``EngineState``
+  extras through save/restore, also when composed with ``with_delay``
+  (TopoState just before the final DelayState slot);
+* per-hop comm accounting: the hierarchy's root ingests ``g`` messages
+  (billed dense f32 per tier) while the client tier pays the compressed
+  wire width x the duty cycle; gossip bills one message per directed
+  edge and NO downlink broadcast; present-only downlink bills the
+  broadcast at the participation rate.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    NIDS,
+    CommMeter,
+    EngineState,
+    FedAvg,
+    FedCET,
+    FedCETLiteral,
+    FedLin,
+    Hierarchical,
+    Mixing,
+    Scaffold,
+    Star,
+    TopoState,
+    comm_bits_per_round,
+    comm_hops_per_round,
+    max_weight_c,
+    parse_topology,
+    run_rounds,
+    with_compression,
+    with_delay,
+    with_participation,
+    with_topology,
+)
+from repro.core.lr_search import lr_search
+from repro.core.simulate import simulate_quadratic
+from repro.core.staleness import DelayState
+from repro.data.quadratic import make_quadratic_problem
+
+jax.config.update("jax_enable_x64", True)
+
+TAU = 2
+_TOL = dict(rtol=1e-12, atol=1e-12)
+N = 10  # the paper problem's client count
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_quadratic_problem(0)
+
+
+def _fedcet(problem, tau=TAU):
+    alpha = lr_search(problem.mu, problem.L, tau)
+    return FedCET(alpha=alpha, c=max_weight_c(problem.mu, alpha), tau=tau,
+                  n_clients=problem.n_clients)
+
+
+def _all_algos(problem):
+    n, L = problem.n_clients, problem.L
+    return {
+        "fedcet": _fedcet(problem),
+        "fedavg": FedAvg(alpha=1.0 / (2 * TAU * L), tau=TAU, n_clients=n),
+        "scaffold": Scaffold(alpha_l=1.0 / (81 * TAU * L), tau=TAU, n_clients=n),
+        "fedlin": FedLin(alpha=1.0 / (18 * TAU * L), tau=TAU, n_clients=n,
+                         k_frac=0.3),
+    }
+
+
+# ------------------------------------------------------------ exact no-ops
+def test_star_specs_are_exact_noops(problem):
+    algo = _fedcet(problem)
+    for spec in ("star", "none", "", None, Star()):
+        assert with_topology(algo, spec) is algo
+
+
+def test_star_machinery_seed_equivalent_all_algorithms(problem):
+    """The Star object attached EXPLICITLY (bypassing the factory's
+    identity shortcut) runs the full weighted-reduce machinery and must
+    reproduce the bare engine <= 1e-12 on every algorithm — including
+    FedLin, whose round-start gradient exchange also flows through the
+    topology's aggregator."""
+    for name, algo in _all_algos(problem).items():
+        ref = simulate_quadratic(algo, problem, rounds=12)
+        res = simulate_quadratic(dataclasses.replace(algo, topology=Star()),
+                                 problem, rounds=12)
+        np.testing.assert_allclose(np.asarray(res.errors),
+                                   np.asarray(ref.errors), **_TOL,
+                                   err_msg=name)
+
+
+def test_star_machinery_noop_composed_with_transforms(problem):
+    """Star equivalence must survive composition: the topology's weighted
+    reduce receives the participation mask as weights and must match the
+    masked mean path bit-for-bit-ish (<= 1e-12)."""
+    base = with_compression(with_participation(_fedcet(problem), 0.7, seed=5),
+                            compressor="shift:q8")
+    ref = simulate_quadratic(base, problem, rounds=30)
+    res = simulate_quadratic(dataclasses.replace(base, topology=Star()),
+                             problem, rounds=30)
+    np.testing.assert_allclose(np.asarray(res.errors),
+                               np.asarray(ref.errors), **_TOL)
+
+
+def test_stacked_topology_raises(problem):
+    algo = with_topology(_fedcet(problem), "hier:g5")
+    with pytest.raises(ValueError, match="already has a topology"):
+        with_topology(algo, "ring")
+
+
+# ------------------------------------------------------------------ grammar
+def test_parse_topology_grammar():
+    assert parse_topology("star", N) is None
+    assert parse_topology(None, N) is None
+    assert parse_topology("hier:g5", N) == Hierarchical((5,))
+    assert parse_topology("hier:5", N) == Hierarchical((5,))
+    assert parse_topology("hier:5x2", N) == Hierarchical((5, 2))
+    assert parse_topology("ring", N).graph == "ring"
+    assert parse_topology("torus", N).graph == "torus2x5"
+    assert parse_topology("torus:2x5", N).graph == "torus2x5"
+    er = parse_topology("er:0.4", N)
+    assert er.graph == "er" and er.p == 0.4 and not er.resample
+    ert = parse_topology("er:0.4:t", N)
+    assert ert.resample and ert.stateful and ert.n == N
+    with pytest.raises(ValueError, match="unknown topology"):
+        parse_topology("tree:3", N)
+    with pytest.raises(ValueError, match="bad hierarchical"):
+        parse_topology("hier:", N)
+    with pytest.raises(ValueError, match="strictly decrease"):
+        parse_topology("hier:2x5", N)
+    with pytest.raises(ValueError, match="torus"):
+        parse_topology("torus:3x5", N)
+    with pytest.raises(ValueError, match="nodes"):
+        parse_topology(Mixing.ring(8), N)  # 8-node matrix, 10 clients
+
+
+def test_mixing_matrices_doubly_stochastic():
+    for topo in (Mixing.ring(N), Mixing.torus(N), Mixing.erdos_renyi(N, 0.5),
+                 Mixing.torus(12, shape=(3, 4))):
+        W = np.asarray(topo.w)
+        np.testing.assert_allclose(W, W.T, atol=0)
+        np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-12)
+        np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-12)
+        assert (W >= 0).all()
+        assert 0.0 < topo.spectral_gap <= 1.0
+    # denser graphs mix faster: ER(0.8) gap > ring gap at N=10
+    assert Mixing.erdos_renyi(N, 0.9, seed=1).spectral_gap \
+        > Mixing.ring(N).spectral_gap
+
+
+# ------------------------------------------------------- weighted reduction
+def test_hierarchical_reduce_matches_star_weighted_mean():
+    """Grouped two-stage (and three-stage) weighted means are exact
+    regroupings of the flat weighted mean — same value up to float
+    reassociation — including non-uniform weights, non-divisible group
+    sizes and groups whose weight mass is entirely zero."""
+    key = jax.random.key(0)
+    tree = {"a": jax.random.normal(key, (N, 7)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (N,))}
+    star = Star()
+    for w in (jnp.ones((N,)),
+              jax.random.uniform(jax.random.fold_in(key, 2), (N,)),
+              jnp.asarray([0.0, 0.0, 1, 1, 1, 0, 1, 1, 1, 1.0])):  # group 0 dead
+        ref = star.reduce(tree, w)
+        for groups in ((5,), (3,), (4, 2), (7,)):
+            out = Hierarchical(groups).reduce(tree, w)
+            np.testing.assert_allclose(
+                np.asarray(out["a"]), np.asarray(ref["a"]), rtol=1e-12,
+                err_msg=str(groups))
+            np.testing.assert_allclose(
+                np.asarray(out["b"]), np.asarray(ref["b"]), rtol=1e-12)
+
+
+def test_mixing_reduce_neighborhood_means():
+    """Gossip reduce returns PER-CLIENT rows: W-weighted neighborhood
+    means, renormalized over the surviving weights when some clients are
+    masked out."""
+    topo = Mixing.ring(4)
+    tree = {"v": jnp.asarray([[1.0], [2.0], [3.0], [4.0]])}
+    out = topo.reduce(tree, jnp.ones((4,)))["v"]
+    assert out.shape == (4, 1)
+    W = np.asarray(topo.w)
+    np.testing.assert_allclose(np.asarray(out)[:, 0],
+                               W @ np.array([1, 2, 3, 4.0]), rtol=1e-12)
+    # mask client 0 out: each row renormalizes over its remaining neighbors
+    w = jnp.asarray([0.0, 1.0, 1.0, 1.0])
+    out = np.asarray(topo.reduce(tree, w)["v"])[:, 0]
+    Wm = W * np.array([0, 1, 1, 1.0])
+    np.testing.assert_allclose(out, (Wm @ np.array([1, 2, 3, 4.0]))
+                               / Wm.sum(axis=1), rtol=1e-12)
+    # column-stochasticity preserves the uniform-weight client mean:
+    # mean_i (W m)_i == mean_i m_i — the invariant FedCET's drift needs
+    full = topo.reduce(tree, jnp.ones((4,)))["v"]
+    np.testing.assert_allclose(float(jnp.mean(full)), 2.5, rtol=1e-12)
+
+
+# ------------------------------------------------------------- NIDS lineage
+def test_nids_star_is_fedcet_literal_lineage(problem):
+    """The lineage proof in executable form: under the star topology the
+    NIDS spec's lazy half-step ``x <- (m + m_bar)/2`` is FedCETLiteral's
+    aggregation with ``c * alpha = 1/2`` — identical trajectories."""
+    alpha = 1.0 / problem.L
+    nids = NIDS(alpha=alpha, n_clients=problem.n_clients)
+    literal = FedCETLiteral(alpha=alpha, c=0.5 / alpha, tau=1,
+                            n_clients=problem.n_clients)
+    r_n = simulate_quadratic(nids, problem, rounds=150)
+    r_l = simulate_quadratic(literal, problem, rounds=150)
+    np.testing.assert_allclose(np.asarray(r_n.errors),
+                               np.asarray(r_l.errors), **_TOL)
+
+
+def test_nids_gossip_converges_exactly(problem):
+    """NIDS proper: the decentralized optimizer FedCET descends from,
+    over actual gossip graphs — exact linear convergence to the global
+    optimum for every connected doubly-stochastic topology (measured
+    ~5e-15 at 2000 rounds; the rate-vs-spectral-gap sweep is pinned in
+    benchmarks/topology_sweep.py)."""
+    nids = NIDS(alpha=1.0 / problem.L, n_clients=problem.n_clients)
+    for spec in ("ring", "torus", "er:0.5"):
+        algo = with_topology(nids, spec)
+        res = simulate_quadratic(algo, problem, rounds=2000)
+        assert res.final_error < 1e-9, (spec, res.final_error)
+
+
+# ------------------------------------------- measured convergence boundaries
+def test_fedcet_exact_under_hierarchical_aggregation(problem):
+    """THE tentpole result: FedCET's exact linear convergence SURVIVES
+    multi-hop aggregation — 2-level (and 3-level) hierarchical trees are
+    exact regroupings of the mean, so the fixed-point structure is
+    untouched (~3e-15), including with a shift:q8 8-bit uplink, client
+    sampling, and rr:2 staleness riding the same weighted reduce."""
+    base = _fedcet(problem)
+    for spec in ("hier:g5", "hier:4x2"):
+        hier = with_topology(base, spec)
+        assert simulate_quadratic(hier, problem, rounds=800).final_error \
+            < 1e-9, spec
+    hier = with_topology(base, "hier:g5")
+    stacks = {
+        "shift:q8": with_compression(hier, compressor="shift:q8"),
+        "part": with_participation(hier, 0.8, seed=3),
+        "q8+part": with_compression(with_participation(hier, 0.8, seed=3),
+                                    compressor="shift:q8"),
+        "rr2:last": with_delay(hier, "rr:2", policy="last"),
+    }
+    for name, algo in stacks.items():
+        res = simulate_quadratic(algo, problem, rounds=1200)
+        assert res.final_error < 1e-9, (name, res.final_error)
+
+
+def test_fedcet_exact_under_ring_gossip(problem):
+    """Beyond the paper: FedCET's aggregating step run through a
+    doubly-stochastic RING instead of the server mean still converges
+    exactly — column-stochasticity keeps ``sum_i d_i = 0``."""
+    algo = with_topology(_fedcet(problem), "ring")
+    res = simulate_quadratic(algo, problem, rounds=1200)
+    assert res.final_error < 1e-9, res.final_error
+    d_mean = np.asarray(jnp.mean(res.state.d, axis=0))
+    np.testing.assert_allclose(d_mean, 0.0, atol=1e-10)
+
+
+def test_hierarchical_trajectory_tracks_star(problem):
+    """Short-horizon check that hierarchy is pure reassociation: 12
+    rounds stay within 1e-12 of the flat star trajectory."""
+    ref = simulate_quadratic(_fedcet(problem), problem, rounds=12)
+    res = simulate_quadratic(with_topology(_fedcet(problem), "hier:g5"),
+                             problem, rounds=12)
+    np.testing.assert_allclose(np.asarray(res.errors),
+                               np.asarray(ref.errors), **_TOL)
+
+
+# ------------------------------------------------------------- determinism
+def test_resampled_graph_deterministic_across_runs(problem):
+    """er:p:t redraws the graph every aggregation from the TopoState
+    round index through a domain-separated stream — same seed, same
+    schedule, bit-equal error curves across independent runs."""
+    algo = with_topology(_fedcet(problem), "er:0.5:t", seed=11)
+    r1 = simulate_quadratic(algo, problem, rounds=40)
+    r2 = simulate_quadratic(algo, problem, rounds=40)
+    np.testing.assert_array_equal(np.asarray(r1.errors), np.asarray(r2.errors))
+    assert isinstance(r1.state, EngineState)
+    assert isinstance(r1.state.extras[-1], TopoState)
+    # init ran one warm-up aggregation + 40 rounds
+    assert int(r1.state.extras[-1].k) == 41
+
+
+def test_topology_seed_varies_resampled_schedule(problem):
+    algo_a = with_topology(_fedcet(problem), "er:0.5:t", seed=0)
+    algo_b = with_topology(_fedcet(problem), "er:0.5:t", seed=1)
+    ra = simulate_quadratic(algo_a, problem, rounds=40)
+    rb = simulate_quadratic(algo_b, problem, rounds=40)
+    assert (np.asarray(ra.errors) != np.asarray(rb.errors)).any()
+
+
+@pytest.mark.parametrize("delayed", [False, True])
+def test_checkpoint_resume_reproduces_topo_state(problem, delayed, tmp_path):
+    """Save/restore mid-sweep: the TopoState round index rides in
+    EngineState (just before the DelayState slot when with_delay is also
+    attached), round-trips the npz checkpoint exactly, and the resumed
+    run continues bit-compatibly with the uninterrupted one."""
+    from repro.checkpoint.ckpt import load_pytree, save_pytree
+
+    algo = with_topology(_fedcet(problem), "er:0.6:t", seed=3)
+    if delayed:
+        algo = with_delay(algo, "rr:2", policy="last")
+    gf = jax.grad(problem.client_loss)
+    batches = problem.stacked_batches(TAU)
+    init_b = jax.tree.map(lambda b: b[0], batches)
+    x0 = jnp.zeros((problem.dim,), problem.b.dtype)
+    state0 = algo.init(gf, x0, init_b)
+    tstate = state0.extras[-2] if delayed else state0.extras[-1]
+    assert isinstance(tstate, TopoState) and int(tstate.k) == 1
+    if delayed:
+        assert isinstance(state0.extras[-1], DelayState)
+
+    full, _ = run_rounds(algo, gf, state0, batches, rounds=8)
+    half, _ = run_rounds(algo, gf, state0, batches, rounds=4)
+    path = str(tmp_path / "mid.npz")
+    save_pytree(path, half)
+    back = load_pytree(path, half)
+    for a, b in zip(jax.tree.leaves(half), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    resumed, _ = run_rounds(algo, gf, back, batches, rounds=4)
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(resumed)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), **_TOL)
+
+
+def test_abstract_state_matches_topology_extras():
+    """The AOT lowering path: abstract_state inserts the TopoState slot
+    (scalar int32) for a stateful topology, before the DelayState slot."""
+    from repro.configs.base import FedScenario
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.train import abstract_state, make_plan, state_shardings
+
+    mesh = make_test_mesh((1, 1))  # single-host CPU mesh
+    plan = make_plan("qwen3-1.7b", mesh,
+                     scenario=FedScenario(topology="er:0.5:t", delay="rr:1"))
+    shapes = abstract_state(plan)
+    assert isinstance(shapes, EngineState)
+    assert isinstance(shapes.extras[-2], TopoState)
+    assert shapes.extras[-2].k.shape == ()
+    assert isinstance(shapes.extras[-1], DelayState)
+    sh = state_shardings(plan, shapes)
+    assert isinstance(sh.extras[-2], TopoState)
+
+
+# -------------------------------------------------------- per-hop accounting
+def test_hierarchical_per_hop_accounting(problem):
+    """Root ingress shrinks from N to g messages; the client hop pays the
+    compressed width x duty, aggregator tiers re-transmit dense f32 (both
+    directions), and CommMeter agrees with comm_bits_per_round."""
+    n, dim = problem.n_clients, problem.dim
+    base = _fedcet(problem)
+    hier = with_topology(with_compression(base, compressor="shift:q8"),
+                         "hier:g5")
+    hops = comm_hops_per_round(hier, dim, n)
+    assert [h["hop"] for h in hops] == ["client", "tier1->root"]
+    assert hops[0]["messages"] == n and hops[1]["messages"] == 5
+    assert hops[0]["bits"] == dim * n * 8.0          # q8 wire width
+    assert hops[1]["bits"] == dim * 5 * 32.0         # dense partial means
+    bits = comm_bits_per_round(hier, dim, n)
+    assert bits["up_bits"] == hops[0]["bits"] + hops[1]["bits"]
+    assert bits["down_bits"] == dim * (n + 5) * 32.0
+    params = {"w": jnp.zeros((dim,))}
+    m = CommMeter.for_params(params, algo=hier, n_clients=n)
+    m.tick_round(hier)
+    assert m.bytes_up == int(bits["up_bits"] / 8)
+    assert m.bytes_down == int(bits["down_bits"] / 8)
+    # 3-level tree: both tiers appear
+    deep = with_topology(base, "hier:4x2")
+    assert [h["messages"] for h in comm_hops_per_round(deep, dim, n)] \
+        == [n, 4, 2]
+
+
+def test_mixing_accounting_edges_no_broadcast(problem):
+    """Gossip bills one message per directed edge on the (only) uplink
+    hop and NO broadcast downlink; the expected-edge count drives the
+    resampled variant."""
+    n, dim = problem.n_clients, problem.dim
+    ring = with_topology(_fedcet(problem), "ring")
+    assert ring.topology.client_up_mult(n) == 2.0  # ring degree
+    bits = comm_bits_per_round(ring, dim, n)
+    assert bits["up_bits"] == dim * n * 2 * 32.0
+    assert bits["down_bits"] == 0.0
+    ert = with_topology(_fedcet(problem), "er:0.4:t")
+    assert ert.topology.client_up_mult(n) == pytest.approx((n - 1) * 0.4)
+
+
+def test_present_only_downlink_duty(problem):
+    """Present-only downlink: absent clients keep frozen replicas instead
+    of receiving phantom broadcasts, so downlink is billed at the
+    participation rate — for FedCET and the replicated-state baselines
+    alike; delay models leave downlink dense."""
+    n, dim = problem.n_clients, problem.dim
+    base = _fedcet(problem)
+    assert base.receive_frac == 1.0
+    assert with_delay(base, "fixed:2").receive_frac == 1.0
+    part = with_participation(base, 0.8, seed=0)
+    assert part.receive_frac == pytest.approx(0.8)
+    scaffold = with_participation(
+        Scaffold(alpha_l=0.01, tau=TAU, n_clients=n), 0.5)
+    assert scaffold.receive_frac == pytest.approx(0.5)
+    bits = comm_bits_per_round(part, dim, n)
+    assert bits["down_bits"] == pytest.approx(dim * n * 32.0 * 0.8)
+    params = {"w": jnp.zeros((dim,))}
+    m = CommMeter.for_params(params, algo=part, n_clients=n)
+    m.tick_round(part)
+    assert m.bytes_down == int(dim * n * 32.0 * 0.8 / 8)
+    sync = CommMeter.for_params(params, algo=base, n_clients=n)
+    sync.tick_round(base)
+    assert sync.bytes_down == int(dim * n * 32.0 / 8)
