@@ -64,6 +64,16 @@ def _algos(n_clients: int) -> dict:
         "fedcet_hier4_shiftq8": with_topology(
             with_compression(fedcet(), compressor="shift:q8"), "hier:g4"),
         "fedcet_ring": with_topology(fedcet(), "ring"),
+        # the sparse neighbor-exchange lowering exchanges the SAME directed
+        # edges as the dense contraction — accounting must be identical.
+        "fedcet_ring_sparse": with_topology(fedcet(), "ring:sparse"),
+        # tier recompression: the interior edge->root hop carries 8-bit
+        # shifted-quantized partial means instead of dense f32, so the
+        # FULL uplink is compressed end to end (downward tier
+        # re-broadcasts stay dense f32).
+        "fedcet_hier4_tierq8": with_topology(
+            with_compression(fedcet(), compressor="shift:q8"), "hier:g4",
+            tier_compression="shift:q8"),
     }
 
 
@@ -125,6 +135,24 @@ def run(csv_rows=None, n_clients: int = 16):
                                         n_clients=n_clients)
         assert ring_bits["up_bits"] == n * n_clients * 2 * 32.0
         assert ring_bits["down_bits"] == 0.0
+        # the sparse lowering changes the EXECUTION, not the exchange:
+        # identical hops, messages and bits to the dense path.
+        assert comm_bits_per_round(algos["fedcet_ring_sparse"], n,
+                                   n_clients=n_clients) == ring_bits
+        assert comm_hops_per_round(algos["fedcet_ring_sparse"], n,
+                                   n_clients=n_clients) \
+            == comm_hops_per_round(algos["fedcet_ring"], n,
+                                   n_clients=n_clients)
+        # tier recompression: the interior hop drops from dense f32 to the
+        # tier compressor's 8 bits/coord; the downward tier re-broadcast
+        # stays dense f32 (uplink-only mechanism).
+        thops = comm_hops_per_round(algos["fedcet_hier4_tierq8"], n,
+                                    n_clients=n_clients)
+        assert thops[0]["bits"] == n * n_clients * 8.0  # shift:q8 clients
+        assert thops[1]["bits"] == n * 4 * 8.0          # shift:q8 tiers
+        tbits = comm_bits_per_round(algos["fedcet_hier4_tierq8"], n,
+                                    n_clients=n_clients)
+        assert tbits["down_bits"] == n * (n_clients + 4) * 32.0
     return out
 
 

@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows. Modules:
   kernel_bench     — Pallas fedcet-update kernels (interpret mode)
   roofline_table   — (arch x shape x mesh) roofline terms from the dry-run
                      results JSON, when present
+  gossip_scaling   — sparse neighbor-exchange lowering O(E) vs the dense
+                     N^2 gossip contraction at N in {64, 256, 1024}
   staleness_sweep  — error floors under asynchronous rounds: delay model x
                      stale policy x compression (runs LAST: it enables x64)
   topology_sweep   — aggregation geometry: hierarchical exactness, NIDS
@@ -25,6 +27,7 @@ def main() -> None:
         comm_table,
         fed_lm_bench,
         fig1_convergence,
+        gossip_scaling,
         kernel_bench,
         lr_search_bench,
         roofline_table,
@@ -41,6 +44,7 @@ def main() -> None:
         ("fed_lm_bench", fed_lm_bench),
         ("kernel_bench", kernel_bench),
         ("roofline_table", roofline_table),
+        ("gossip_scaling", gossip_scaling),
         ("staleness_sweep", staleness_sweep),  # enables x64: keep last
         ("topology_sweep", topology_sweep),    # also x64
     ]:

@@ -146,18 +146,25 @@ class FedScenario:
     default), ``"hier:g8"`` / ``"hier:16x4"`` (edge-aggregator tree with
     per-hop comm accounting), ``"ring"`` / ``"torus"`` / ``"er:0.4"``
     (doubly-stochastic gossip mixing; ``"er:0.4:t"`` resamples the graph
-    every round).
+    every round; a trailing ``":sparse"`` — ``"ring:sparse"``,
+    ``"er:0.4:t:sparse"`` — selects the padded neighbor-exchange
+    lowering, O(edges) instead of the dense N^2 contraction).
+    ``tier_compression`` (hierarchies only) is a compressor spec applied
+    to the interior edge->root tier uplinks (``"shift:q8"`` compresses
+    the FULL uplink end to end), with per-hop bit-true accounting.
 
     ``apply`` composes the scenario onto ANY engine algorithm — the same
     expression the simulation tests pin, now reachable from the production
     LM loop (`launch/train.py --compression ... --participation ...
-    --delay ... --stale-policy ... --topology ...`)."""
+    --delay ... --stale-policy ... --topology ... --tier-compression
+    ...`)."""
 
     compression: str = "none"
     participation: float = 1.0
     delay: str = "none"
     stale_policy: str = "last"
     topology: str = "star"
+    tier_compression: str = "none"
     error_feedback: bool | None = None
     seed: int = 0
 
@@ -166,7 +173,8 @@ class FedScenario:
         from repro.core.engine import (with_compression, with_delay,
                                        with_participation, with_topology)
 
-        algo = with_topology(algo, self.topology, seed=self.seed)
+        algo = with_topology(algo, self.topology, seed=self.seed,
+                             tier_compression=self.tier_compression)
         algo = with_participation(algo, self.participation, seed=self.seed)
         comp = from_spec(self.compression)  # one normalizer for the grammar
         if comp is not None:

@@ -16,8 +16,11 @@ FedTrack / FedLin move two. This module provides
   With client sampling attached the DOWNLINK scales by ``receive_frac``
   (present-only downlink: absent clients keep frozen replicas, no phantom
   broadcasts), and an attached topology contributes its per-hop traffic
-  shape (:func:`comm_hops_per_round`: gossip edges on the client hop,
-  dense f32 aggregator-tier messages for hierarchies, both directions);
+  shape (:func:`comm_hops_per_round`: gossip edges on the client hop —
+  identical for the dense and sparse lowerings — and aggregator-tier
+  messages for hierarchies: upward hops pay the tier compressor's width
+  when ``tier_compression`` is attached, downward re-broadcasts stay
+  dense f32);
 * ``topk_sparsify`` — magnitude top-k with the complement zeroed (FedLin's
   uplink sparsifier; the ``TopK(per_client=False)`` legacy flatten in
   repro/core/compressors.py is this exact function);
@@ -94,15 +97,25 @@ def topology_of(algo):
     return getattr(algo, "topology", None)
 
 
+def tier_bits_of(topo) -> float:
+    """Wire bits per coordinate on UPWARD aggregator-tier hops: 32.0
+    dense f32, or the hierarchy's ``tier_compression`` width when one is
+    attached (repro/core/topology.py `Tier recompression`). Downward
+    tier re-broadcasts always stay dense f32."""
+    return float(getattr(topo, "tier_bits_per_coord", 32.0))
+
+
 def comm_hops_per_round(algo, n_params: int, n_clients: int = 1) -> list:
     """Per-hop EXPECTED uplink traffic for one round, as dicts of
     ``{hop, messages, bits}``. The client (first) hop pays the compressor
     stack's wire width x the transmit duty cycle — once per message,
-    where a gossip topology sends one message per directed graph edge and
-    star/hierarchical send one per client. Aggregator-tier hops
-    (edge->root re-transmissions in a hierarchy) carry DENSE f32 partial
-    aggregates: the client-side compressor applies to the first hop only
-    (re-compressing interior tiers is future work)."""
+    where a gossip topology sends one message per directed graph edge
+    (IDENTICAL for the dense and sparse lowerings — the same edges are
+    exchanged either way) and star/hierarchical send one per client.
+    Aggregator-tier hops (edge->root re-transmissions in a hierarchy)
+    carry dense f32 partial aggregates unless the hierarchy attaches a
+    ``tier_compression`` — then each upward tier message pays that
+    compressor's wire width instead (:func:`tier_bits_of`)."""
     topo = topology_of(algo)
     up_mult = topo.client_up_mult(n_clients) if topo is not None else 1.0
     hops = [{
@@ -113,7 +126,8 @@ def comm_hops_per_round(algo, n_params: int, n_clients: int = 1) -> list:
     }]
     for label, msgs in (topo.aggregator_hops(n_clients) if topo else ()):
         hops.append({"hop": label, "messages": msgs,
-                     "bits": algo.vectors_up * n_params * msgs * 32.0})
+                     "bits": algo.vectors_up * n_params * msgs
+                     * tier_bits_of(topo)})
     return hops
 
 
@@ -149,10 +163,13 @@ class CommMeter:
     #: topology traffic shape (repro/core/topology.py): first-hop uplink
     #: messages per client (gossip degree), downlink client-hop multiplier
     #: (0 = no broadcast at all), and aggregator-tier messages per vector
-    #: (edge->root re-transmissions, billed dense f32 both directions).
+    #: (edge->root re-transmissions — upward hops pay ``tier_bits_up``
+    #: bits/coord, the tier compressor's width when one is attached;
+    #: downward tier re-broadcasts stay dense f32).
     up_mult: float = 1.0
     down_mult: float = 1.0
     agg_msgs: float = 0.0
+    tier_bits_up: float = 32.0
     rounds: int = 0
     bytes_up: int = 0
     bytes_down: int = 0
@@ -183,7 +200,9 @@ class CommMeter:
                                   if topo is not None else 1.0),
                        agg_msgs=float(sum(m for _, m in
                                           topo.aggregator_hops(n_clients))
-                                      if topo is not None else 0.0))
+                                      if topo is not None else 0.0),
+                       tier_bits_up=(tier_bits_of(topo)
+                                     if topo is not None else 32.0))
         return cls(n_params=tree_num_params(params),
                    itemsize=4 if itemsize is None else itemsize,
                    n_clients=n_clients)
@@ -203,14 +222,15 @@ class CommMeter:
                     "bits_up; passing up_frac would double-count")
             per_coord = self.n_params * self.n_clients
             bits_down = 32.0 if self.bits_down is None else self.bits_down
-            agg_bits = self.agg_msgs * self.n_params * 32.0
+            agg_bits_up = self.agg_msgs * self.n_params * self.tier_bits_up
+            agg_bits_down = self.agg_msgs * self.n_params * 32.0
             self.bytes_up += int(vectors_up * (per_coord * self.up_mult
                                                * self.bits_up * self.up_duty
-                                               + agg_bits) / 8.0)
+                                               + agg_bits_up) / 8.0)
             self.bytes_down += int(vectors_down * (per_coord * self.down_mult
                                                    * bits_down * down_frac
                                                    * self.down_duty
-                                                   + agg_bits) / 8.0)
+                                                   + agg_bits_down) / 8.0)
             return
         per_vec = self.n_params * self.itemsize * self.n_clients
         self.bytes_up += int(vectors_up * per_vec
@@ -236,8 +256,10 @@ def comm_bits_per_round(algo, n_params: int, n_clients: int = 1) -> dict:
     accounting with the compressor stack, the delay model's uplink duty
     cycle, the sampling rate's downlink duty cycle, and the topology's
     per-hop traffic folded in; downlink stays dense f32). ``up_bits``
-    sums all uplink hops (see :func:`comm_hops_per_round`); the
-    hierarchy's downward tier re-broadcasts mirror the upward hops."""
+    sums all uplink hops (see :func:`comm_hops_per_round` — interior
+    tier hops pay the tier compressor's width when one is attached); the
+    hierarchy's downward tier re-broadcasts mirror the upward hops but
+    always stay dense f32 (tier recompression is an UPLINK mechanism)."""
     topo = topology_of(algo)
     up = sum(h["bits"] for h in comm_hops_per_round(algo, n_params, n_clients))
     down_mult = topo.broadcast_mult(n_clients) if topo is not None else 1.0

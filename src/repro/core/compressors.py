@@ -79,6 +79,7 @@ __all__ = [
     "StochasticQuant",
     "TopK",
     "as_compressor",
+    "auto_wrap",
     "from_spec",
 ]
 
@@ -606,6 +607,24 @@ def from_spec(spec: str | Compressor | None) -> Compressor | None:
                          "prefix would wrap a no-op in model-size memory)")
     comp: Compressor = stages[0] if len(stages) == 1 else Chain(stages)
     return wrap(comp) if wrap else comp
+
+
+def auto_wrap(comp: Compressor | None,
+              error_feedback: bool | None = None) -> Compressor | None:
+    """The default error-feedback policy, shared by the engine's
+    ``with_compression`` and hierarchical tier recompression
+    (repro/core/topology.py): wrap BIASED STATELESS compressors in
+    :class:`ErrorFeedback` (EF around an unbiased compressor reintroduces
+    a feedback limit cycle; stateful wrappers already own their extra
+    slot), leave everything else bare. Pass ``error_feedback=True/False``
+    to force either way; ``None`` passes through."""
+    if comp is None:
+        return None
+    ef = ((not comp.unbiased and not comp.stateful)
+          if error_feedback is None else error_feedback)
+    if ef and not isinstance(comp, ErrorFeedback):
+        comp = ErrorFeedback(comp)  # raises if comp is stateful
+    return comp
 
 
 def as_compressor(obj: Any) -> Compressor:

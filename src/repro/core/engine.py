@@ -467,26 +467,32 @@ class RoundEngine:
     def _grad(self, grad_fn: GradFn) -> GradFn:
         return vmap_grads(grad_fn, spmd_axis_name=(self.spmd_client_axes or None))
 
-    def _init_extras(self, gf, inner, init_batch) -> tuple:
-        """Per-transform extra state, shaped from the (abstract) message."""
-        if not self.transforms:
-            return ()
-
+    def _msg_shapes(self, gf, inner, init_batch):
+        """Abstract (eval_shape) wire-message tree of the current state —
+        shapes transform extras and stateful-topology tier memory."""
         def msg_of(s, b):
             s2, rctx = self.begin_round(gf, s, b, tree_client_mean)
             return self.message(gf, s2, b, rctx)[0]
 
-        msg_shapes = jax.eval_shape(msg_of, inner, init_batch)
+        return jax.eval_shape(msg_of, inner, init_batch)
+
+    def _init_extras(self, msg_shapes) -> tuple:
+        """Per-transform extra state, shaped from the (abstract) message."""
         return tuple(t.init_extra(msg_shapes) for t in self.transforms)
 
     def _comm_step(self, gf, inner, extras, batch, rctx, agg, step,
-                   tstate=None, dstate=None, fresh=None):
+                   tstate=None, dstate=None, fresh=None, mask=None):
         """The single aggregating step: message -> transforms -> [staleness
         buffer] -> reduce -> apply. The only place a cross-client collective
         fires. ``step`` is the state's step counter at round entry —
         stochastic transforms derive their per-round PRNG key from it
         (never reused across rounds; stack multiple stochastic transforms
-        with distinct seeds).
+        with distinct seeds). With a topology attached, the reduction goes
+        through ``reduce_and_advance`` — the one place topology state
+        (resampled-graph index, tier-compression memory) moves — under
+        the ``mask``-derived weights (uniform, or the participation
+        mask; the delay path derives its own stale-policy weights
+        instead).
 
         With ``dstate``/``fresh`` set (a ``with_delay`` round), the wire
         message lands in the server buffer only where ``fresh`` is true,
@@ -503,11 +509,13 @@ class RoundEngine:
         for t, e in zip(self.transforms, extras):
             msg, e = t.apply(msg, e, step)
             new_extras.append(e)
-        tstate_next = (self.topology.advance(tstate)
-                       if self.topology is not None else None)
 
         if dstate is None:  # synchronous path (and always: init)
-            msg_bar = agg(msg)
+            if self.topology is not None:
+                msg_bar, tstate_next = self.topology.reduce_and_advance(
+                    msg, self._topo_weights(mask), tstate)
+            else:
+                msg_bar, tstate_next = agg(msg), None
             inner = self.server_aggregate(inner, msg, msg_bar, mctx, rctx)
             return inner, tuple(new_extras), tstate_next, None, msg
 
@@ -520,9 +528,10 @@ class RoundEngine:
         # same weighted seam as the synchronous path), so hierarchical /
         # gossip aggregation composes with staleness with no extra code.
         if self.topology is not None:
-            msg_bar = self.topology.reduce(buf, w, tstate)
+            msg_bar, tstate_next = self.topology.reduce_and_advance(
+                buf, w, tstate)
         else:
-            msg_bar = weighted_client_mean(buf, w)
+            msg_bar, tstate_next = weighted_client_mean(buf, w), None
         # each client's own-message slot is what the server attributed to
         # it: the fresh wire message where it landed, the buffer elsewhere.
         agg_inner = self.server_aggregate(inner, buf, msg_bar, mctx, rctx)
@@ -548,15 +557,22 @@ class RoundEngine:
             msg, _ = t.apply(msg, e, inner.t)
         return msg
 
+    def _topo_weights(self, mask):
+        """The per-client weight vector a topology reduces under on
+        non-delayed rounds: uniform, or the participation mask."""
+        ft = jax.dtypes.canonicalize_dtype(jnp.float64)
+        return (mask.astype(ft) if mask is not None
+                else jnp.ones((self.n_clients,), ft))
+
     def _aggregator(self, mask, tstate):
-        """The round's cross-client reduction (fed to ``begin_round`` and
-        the aggregating step): the attached topology's weighted reduce
-        (uniform weights, or the participation mask as weights), else the
-        star mean / masked mean the engine always used."""
+        """The round's READ-ONLY cross-client reduction (fed to
+        ``begin_round`` — e.g. FedLin's gradient exchange): the attached
+        topology's weighted reduce (uniform weights, or the participation
+        mask as weights; topology state frozen — only the aggregating
+        step advances it), else the star mean / masked mean the engine
+        always used."""
         if self.topology is not None:
-            ft = jax.dtypes.canonicalize_dtype(jnp.float64)
-            w = (mask.astype(ft) if mask is not None
-                 else jnp.ones((self.n_clients,), ft))
+            w = self._topo_weights(mask)
             return lambda tr: self.topology.reduce(tr, w, tstate)
         if mask is not None:
             return lambda tr: masked_client_mean(tr, mask)
@@ -574,9 +590,15 @@ class RoundEngine:
         never zeros."""
         gf = self._grad(grad_fn)
         inner, run_comm = self.init_warmup(gf, x0, init_batch)
-        extras = self._init_extras(gf, inner, init_batch)
-        tstate = (self.topology.init_state()
-                  if self.topology is not None else None)
+        topo_shapes = (self.topology is not None
+                       and self.topology.needs_msg_shapes)
+        msg_shapes = (self._msg_shapes(gf, inner, init_batch)
+                      if (self.transforms or topo_shapes) else None)
+        extras = self._init_extras(msg_shapes)
+        tstate = None
+        if self.topology is not None:
+            tstate = self.topology.init_state(msg_shapes if topo_shapes
+                                              else None)
         tx = None
         if run_comm:
             inner, extras, tstate, _, tx = self._comm_step(
@@ -630,7 +652,7 @@ class RoundEngine:
         last_b = jax.tree.map(lambda b: b[self.tau - 1], batches)
         inner, extras, tstate, dstate, _ = self._comm_step(
             gf, inner, extras, last_b, rctx, agg, step=step0,
-            tstate=tstate, dstate=dstate, fresh=fresh)
+            tstate=tstate, dstate=dstate, fresh=fresh, mask=mask)
 
         if mask is not None:
             # absent clients keep their pre-round state entirely; the delay
@@ -681,17 +703,14 @@ def with_compression(algo: RoundEngine, *, k_frac: float = 1.0,
                 "kwargs, not both (the legacy pair would be silently "
                 f"ignored): compressor={compressor!r}, k_frac={k_frac}, "
                 f"quantize={quantize}")
-        from repro.core.compressors import ErrorFeedback, from_spec
+        from repro.core.compressors import auto_wrap, from_spec
 
         comp = from_spec(compressor)
         if comp is None:  # the "none" spec — exact no-op, like k_frac=1.0
             return algo
         # auto mode: EF around biased STATELESS compressors only — wrapping
         # a Shifted/ErrorFeedback would clobber its extra slot.
-        ef = ((not comp.unbiased and not comp.stateful)
-              if error_feedback is None else error_feedback)
-        if ef and not isinstance(comp, ErrorFeedback):
-            comp = ErrorFeedback(comp)  # raises if comp is stateful
+        comp = auto_wrap(comp, error_feedback)
         t = MessageCompression(comp, seed=seed, index=len(algo.transforms))
         return dataclasses.replace(algo, transforms=algo.transforms + (t,))
     if k_frac >= 1.0 and not quantize:
@@ -729,18 +748,24 @@ def with_delay(algo: RoundEngine, delay, *, policy="last",
     return dataclasses.replace(algo, delay=cfg)
 
 
-def with_topology(algo: RoundEngine, topology, *, seed: int = 0) -> RoundEngine:
+def with_topology(algo: RoundEngine, topology, *, seed: int = 0,
+                  tier_compression=None) -> RoundEngine:
     """Non-star aggregation geometry for ANY engine algorithm: hierarchical
     (edge-aggregator tree) or gossip (doubly-stochastic mixing) reduction
     at the aggregation seam (see repro/core/topology.py).
 
     ``topology`` is a spec string (``"hier:g8"``, ``"hier:16x4"``,
     ``"ring"``, ``"torus"``, ``"er:0.4"``, ``"er:0.4:t"`` for a per-round
-    resampled graph) or a :class:`~repro.core.topology.Topology` object;
-    ``seed`` keys stochastic graph draws (domain-separated from the
-    participation / compression / delay streams). Star specs (``"star"`` /
-    ``"none"`` / a :class:`~repro.core.topology.Star` object) are exact
-    no-ops — the algorithm object is returned unchanged.
+    resampled graph; gossip specs take a trailing ``":sparse"`` selecting
+    the padded neighbor-exchange lowering) or a
+    :class:`~repro.core.topology.Topology` object; ``seed`` keys
+    stochastic graph draws and tier-compression dither (domain-separated
+    from the participation / compression / delay streams).
+    ``tier_compression`` (hierarchies only) re-compresses interior
+    aggregator-tier uplinks with any compressor spec — see topology.py's
+    `Tier recompression`. Star specs (``"star"`` / ``"none"`` / a
+    :class:`~repro.core.topology.Star` object) are exact no-ops — the
+    algorithm object is returned unchanged.
 
     The topology applies wherever the engine reduces across clients — the
     aggregating step, FedLin's round-start gradient exchange, and the
@@ -749,7 +774,8 @@ def with_topology(algo: RoundEngine, topology, *, seed: int = 0) -> RoundEngine:
     or the stale policy's weights), so it composes with
     ``with_compression`` / ``with_participation`` / ``with_delay`` in any
     factory order."""
-    topo = parse_topology(topology, algo.n_clients, seed=seed)
+    topo = parse_topology(topology, algo.n_clients, seed=seed,
+                          tier_compression=tier_compression)
     if topo is None:
         return algo
     if algo.topology is not None:

@@ -26,7 +26,9 @@ ride):
   drift, NOT bit-identical), but the traffic shape changes completely:
   the root ingests ``groups[-1]`` messages instead of ``n_clients``
   (the production scaling story), and comm accounting bills each hop
-  separately — see `Per-hop accounting` below.
+  separately — see `Per-hop accounting` below. With
+  ``tier_compression=`` set, the partial means themselves are
+  RE-COMPRESSED at every interior hop (see `Tier recompression`).
 * :class:`Mixing` — no server: client i receives the W-weighted
   neighborhood mean ``sum_j W_ij m_j`` of a doubly-stochastic gossip
   matrix (ring, torus, Erdős–Rényi; Metropolis–Hastings weights). The
@@ -39,6 +41,63 @@ ride):
   :class:`repro.core.baselines.nids.NIDS` spec this implements NIDS
   proper — closing the loop to the paper's origin.
 
+Sparse exchange lowering
+------------------------
+The dense ``Mixing`` path materializes the full N x N matrix and pays an
+``N^2 x D`` contraction per leaf per round — fine for the paper's N=10
+simulator, simulator-only on a production mesh where W is a bounded-degree
+graph (ring degree 2, torus degree 4) and all but ``E = sum_i deg_i``
+entries are zero. ``lowering="sparse"`` (spec suffix ``:sparse``, e.g.
+``ring:sparse`` / ``er:0.4:t:sparse``) lowers the SAME aggregation to a
+padded neighbor-index exchange:
+
+* each node owns a static-width table of ``S = max_degree + 1`` slots
+  (slot 0 = itself with the Metropolis diagonal weight, then its
+  neighbors; pad slots carry weight 0 and a self-index, so they gather
+  safely and contribute exactly 0);
+* the reduce is a gather of the S neighbor rows, a weight multiply, and a
+  fixed-slot segment sum (``jax.ops.segment_sum``, or the Pallas
+  segment-reduce kernel in kernels/gossip_reduce.py behind
+  ``use_kernel=True`` — interpret mode off-TPU, mirroring
+  ``StochasticQuant``) — ``O(E x D)`` instead of ``O(N^2 x D)``
+  (pinned at N in {64, 256, 1024} by benchmarks/gossip_scaling.py);
+* per-round resampled Erdős–Rényi graphs rebuild the neighbor tables
+  INSIDE the traced round from the same :class:`TopoState`-keyed
+  domain-separated stream as the dense matrix, so sparse and dense
+  resampled runs agree round-by-round and across checkpoint resume.
+
+The lowering is a pure implementation change: dense and sparse
+trajectories agree <= 1e-12 on every connected family (the
+dense-equivalence harness in tests/test_topology.py) and the comm
+accounting is IDENTICAL — one message per directed edge either way.
+``max_degree=0`` (auto) sizes the table from the actual graph; an
+explicit cap that a static graph overflows raises at construction, and
+resampled graphs (whose degree is unbounded below n-1) reject any
+explicit cap below ``n - 1``.
+
+Tier recompression
+------------------
+``Hierarchical(tier_compression=<Compressor>)`` (launch knob
+``--tier-compression shift:q8``) applies a compressor round-trip to each
+interior tier's transmitted partial means, so the uplink is compressed
+END TO END: clients send their (compressed) wire messages to edge
+aggregators, and edge->root hops now carry e.g. 8-bit shifted-quantized
+partial means instead of dense f32. Mechanics:
+
+* stochastic tier compressors derive their per-round key from the
+  :class:`TopoState` round index through a domain-separated stream
+  (``_TIER_KEY_TAG`` + tier index) — deterministic, restart-stable, one
+  dither per (round, tier) shared by every reduce in that round (both
+  ends of the tier link see the same quantizer);
+* stateful wrappers (``shift:`` / ``ef:``) keep their per-aggregator
+  memory in ``TopoState.tier`` (a tuple of per-tier extras riding
+  EngineState extras — checkpointed, sharded replicated); the memory
+  advances exactly once per aggregation (``reduce_and_advance``), while
+  read-only reduces (FedLin's round-start exchange) see it frozen;
+* per-hop accounting bills interior UPLINK hops at the tier compressor's
+  ``bits_per_coord`` (``tier_bits_per_coord``); the downward tier
+  re-broadcasts stay dense f32 — see repro/core/comm.py.
+
 Weighted reduction contract
 ---------------------------
 A topology reduces a stacked ``[clients, ...]`` tree under per-client
@@ -50,17 +109,22 @@ composes with every transform with no algorithm-side code. Star and
 Hierarchical return the ``[1, ...]`` weighted mean (hierarchical
 grouping of a weighted mean is exact regrouping — same value, different
 association); Mixing row-renormalizes ``W * w`` so absent/stale
-neighbors drop out of each node's neighborhood mean.
+neighbors drop out of each node's neighborhood mean. The engine's
+aggregating step calls ``reduce_and_advance`` (reduce + state advance in
+one step — the only place topology state moves); everything else uses
+the read-only ``reduce``.
 
 Topology state
 --------------
 Topologies that evolve per round (an Erdős–Rényi graph resampled every
-aggregation, keyed by a domain-separated PRNG stream) carry a
-:class:`TopoState` (the mixing round index) in the ``EngineState``
-extras slot, just before ``DelayState`` — checkpointed with the run,
-restart-stable, threaded through the AOT ``abstract_state`` /
-``state_shardings`` path in launch/train.py. Static topologies are
-stateless frozen dataclasses like every other engine knob.
+aggregation, keyed by a domain-separated PRNG stream) — and hierarchies
+whose tier compressor is stochastic or stateful — carry a
+:class:`TopoState` (the mixing round index, plus the optional tier
+memory) in the ``EngineState`` extras slot, just before ``DelayState``
+— checkpointed with the run, restart-stable, threaded through the AOT
+``abstract_state`` / ``state_shardings`` path in launch/train.py.
+Static topologies are stateless frozen dataclasses like every other
+engine knob.
 
 Per-hop accounting
 ------------------
@@ -69,12 +133,13 @@ assume ``n_clients`` flat uplinks:
 
 * ``client_up_mult(n)`` — uplink messages per client on the FIRST hop
   (1 for star/hierarchical; the node degree for gossip, where a client
-  transmits its wire message to each neighbor);
+  transmits its wire message to each neighbor — identical for the dense
+  and sparse lowerings, which exchange the same directed edges);
 * ``aggregator_hops(n)`` — ``(label, messages)`` per aggregator tier
-  (edge->root re-transmissions). These carry DENSE f32 partial
-  aggregates: the client-side compressor stack applies to the
-  client->edge hop only (re-compressing partial means at interior tiers
-  is future work, noted in ARCHITECTURE.md);
+  (edge->root re-transmissions). Upward tier messages carry
+  ``tier_bits_per_coord`` bits per coordinate (32.0 dense f32 unless
+  ``tier_compression`` is set); the downward tier re-broadcasts stay
+  dense f32;
 * ``broadcast_mult(n)`` — downlink client-hop multiplier (0 for gossip:
   there is no broadcast; the exchange is billed as uplink edges).
 
@@ -88,11 +153,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.compressors import auto_wrap, from_spec as compressor_from_spec
 from repro.core.staleness import weighted_client_mean
 
 __all__ = [
@@ -109,14 +175,29 @@ __all__ = [
 #: (0x7A11A5 + index) or delay (0x57A1E) schedules at the default seed=0.
 _TOPO_KEY_TAG = 0x70_70
 
+#: domain-separation tag (+ tier index) for hierarchical tier-compression
+#: dither keys — never collides with the graph-resampling stream above or
+#: the engine-side transform streams at the default seed=0.
+_TIER_KEY_TAG = 0x71_E5
+
+#: widest neighbor table the sparse lowering unrolls slot-by-slot (fused
+#: gather+fma per slot); wider tables (resampled graphs capped at n-1)
+#: fall back to one gather + segment_sum to keep the traced graph small.
+_UNROLL_SLOTS = 32
+
 
 class TopoState(NamedTuple):
     """Per-run topology state riding in ``EngineState`` extras (just
     before the delay buffer when both are attached): the aggregation
-    round index ``k`` that keys time-varying mixing matrices. Scalar,
-    checkpointed, restart-stable."""
+    round index ``k`` that keys time-varying mixing matrices and tier
+    compression dither, plus — for hierarchies whose ``tier_compression``
+    is stateful (``shift:`` / ``ef:`` wrappers) — the per-tier compressor
+    memory ``tier`` (a tuple of per-aggregator trees). Checkpointed,
+    restart-stable; ``tier=None`` flattens away, so states saved before
+    tier recompression existed round-trip unchanged."""
 
     k: jax.Array  # int32 aggregation counter (init included)
+    tier: Any = None  # per-tier compressor memory (Hierarchical only)
 
 
 # ------------------------------------------------------------------ protocol
@@ -124,24 +205,42 @@ class TopoState(NamedTuple):
 class Topology:
     """Base: a weighted cross-client reduction with a declared traffic
     shape. Subclasses implement ``reduce`` and override the accounting
-    hooks; stateful topologies also override ``init_state``/``advance``."""
+    hooks; stateful topologies also override ``init_state`` /
+    ``reduce_and_advance``."""
 
     #: does this topology carry a TopoState in EngineState extras?
     stateful = False
+    #: does ``init_state`` need the (abstract) message tree to shape its
+    #: state (hierarchies with stateful tier compression)?
+    needs_msg_shapes = False
 
     # --------------------------------------------------------------- state
-    def init_state(self) -> TopoState | None:
+    def init_state(self, msg_shapes=None) -> TopoState | None:
+        del msg_shapes
         return TopoState(k=jnp.zeros((), jnp.int32)) if self.stateful else None
 
     def advance(self, tstate: TopoState | None) -> TopoState | None:
-        return TopoState(k=tstate.k + 1) if self.stateful else None
+        if not self.stateful:
+            return None
+        return TopoState(k=tstate.k + 1, tier=tstate.tier)
 
     # -------------------------------------------------------------- compute
     def reduce(self, tree, w: jax.Array, tstate: TopoState | None = None):
         """Aggregate a stacked ``[clients, ...]`` tree under per-client
         weights ``w`` — ``[1, ...]`` (star/hierarchical mean) or
-        ``[clients, ...]`` (per-client gossip neighborhood means)."""
+        ``[clients, ...]`` (per-client gossip neighborhood means).
+        READ-ONLY: topology state (graph schedule, tier memory) is used
+        but never advanced — the engine's aggregating step goes through
+        :meth:`reduce_and_advance` instead."""
         raise NotImplementedError
+
+    def reduce_and_advance(self, tree, w: jax.Array,
+                           tstate: TopoState | None = None):
+        """The aggregating-step entry point: reduce AND advance the
+        topology state in one step (stateful tier compressors update
+        their memory from the partial means they just transmitted).
+        Returns ``(aggregate, next_tstate)``."""
+        return self.reduce(tree, w, tstate), self.advance(tstate)
 
     # ----------------------------------------------------------- accounting
     def client_up_mult(self, n_clients: int) -> float:
@@ -153,6 +252,12 @@ class Topology:
         """``(label, messages)`` per aggregator tier above the clients."""
         del n_clients
         return ()
+
+    @property
+    def tier_bits_per_coord(self) -> float:
+        """Wire bits per coordinate on UPWARD aggregator-tier hops (32.0
+        dense f32; the tier compressor's width when one is attached)."""
+        return 32.0
 
     def broadcast_mult(self, n_clients: int) -> float:
         """Downlink client-hop multiplier (0 = no broadcast at all)."""
@@ -188,9 +293,19 @@ class Hierarchical(Topology):
     star weighted mean exactly up to float reassociation — whether
     FedCET's exactness survives the regrouped arithmetic (it does,
     ~1e-14, even under a shift:q8 client uplink) is pinned in
-    benchmarks/topology_sweep.py."""
+    benchmarks/topology_sweep.py.
+
+    ``tier_compression`` re-compresses each interior tier's transmitted
+    partial means (the edge->root hop) with any
+    :class:`repro.core.compressors.Compressor`; stochastic compressors
+    key their dither from the :class:`TopoState` round index and
+    stateful wrappers (``shift:`` / ``ef:``) keep per-tier,
+    per-aggregator memory in ``TopoState.tier`` — see the module
+    docstring's `Tier recompression` section."""
 
     groups: tuple
+    tier_compression: Any = None
+    seed: int = 0
 
     def __post_init__(self):
         g = (self.groups,) if isinstance(self.groups, int) else tuple(self.groups)
@@ -199,6 +314,13 @@ class Hierarchical(Topology):
             raise ValueError(f"need >= 1 aggregator per tier: {g}")
         if any(b >= a for a, b in zip(g, g[1:])):
             raise ValueError(f"tier sizes must strictly decrease: {g}")
+        if self.tier_compression is not None and not (
+                hasattr(self.tier_compression, "apply")
+                and hasattr(self.tier_compression, "bits_per_coord")):
+            raise ValueError(
+                "tier_compression must be a repro.core.compressors."
+                f"Compressor (got {self.tier_compression!r}); pass spec "
+                "strings through parse_topology / with_topology")
 
     def validate(self, n_clients: int) -> None:
         if self.groups[0] > n_clients:
@@ -206,43 +328,117 @@ class Hierarchical(Topology):
                 f"hierarchical tier of {self.groups[0]} aggregators over "
                 f"only {n_clients} clients (want fan-in > 1)")
 
+    # ---------------------------------------------------------------- state
+    @property
+    def stateful(self) -> bool:  # type: ignore[override]
+        c = self.tier_compression
+        return c is not None and (c.stateful or c.requires_key)
+
+    @property
+    def needs_msg_shapes(self) -> bool:  # type: ignore[override]
+        return self.tier_compression is not None and self.tier_compression.stateful
+
+    def _tiers(self, n: int) -> list:
+        return [g for g in self.groups if g < n]  # degenerate tiers drop out
+
+    def init_state(self, msg_shapes=None) -> TopoState | None:
+        if not self.stateful:
+            return None
+        tier = None
+        if self.needs_msg_shapes:
+            if msg_shapes is None:
+                raise ValueError(
+                    "stateful tier compression needs the message shapes to "
+                    "size its per-tier memory — the engine passes them at "
+                    "init; direct callers can use jax.eval_shape")
+            n = jax.tree.leaves(msg_shapes)[0].shape[0]
+            mem = []
+            for g in self._tiers(n):
+                shapes_g = jax.tree.map(
+                    lambda sd, _g=g: jax.ShapeDtypeStruct(
+                        (_g,) + tuple(sd.shape[1:]), sd.dtype), msg_shapes)
+                mem.append(self.tier_compression.init_extra(shapes_g))
+            tier = tuple(mem)
+        return TopoState(k=jnp.zeros((), jnp.int32), tier=tier)
+
+    # -------------------------------------------------------------- compute
     @staticmethod
     def _segments(n_in: int, n_out: int) -> jax.Array:
         """Contiguous near-equal block assignment ``[n_in] -> n_out``."""
         return jnp.asarray([i * n_out // n_in for i in range(n_in)], jnp.int32)
 
-    def reduce(self, tree, w, tstate=None):
-        del tstate
-        n = w.shape[0]
-        tiers = [g for g in self.groups if g < n]  # degenerate tiers drop out
+    def _tier_key(self, t_i: int, k):
+        key = jax.random.fold_in(jax.random.key(self.seed),
+                                 _TIER_KEY_TAG + t_i)
+        return jax.random.fold_in(key, jnp.asarray(k, jnp.int32))
 
-        def mean_leaf(a):
-            vals = a
-            wt = w.astype(a.dtype)
-            cur = n
-            for g in tiers:
-                ids = self._segments(cur, g)
-                wb = wt.reshape((-1,) + (1,) * (vals.ndim - 1))
-                sums = jax.ops.segment_sum(vals * wb, ids, num_segments=g)
-                wsum = jax.ops.segment_sum(wt, ids, num_segments=g)
-                denom = jnp.where(wsum > 0, wsum, 1.0)
+    def _reduce_impl(self, tree, w, tstate):
+        """Shared tier walk; returns ``(aggregate, new tier memory)`` —
+        the caller decides whether the memory update is kept
+        (``reduce_and_advance``) or discarded (read-only ``reduce``)."""
+        n = w.shape[0]
+        comp = self.tier_compression
+        k = tstate.k if tstate is not None else jnp.zeros((), jnp.int32)
+        vals, wt, cur = tree, w, n
+        new_mem = []
+        for t_i, g in enumerate(self._tiers(n)):
+            ids = self._segments(cur, g)
+            wsum = jax.ops.segment_sum(wt, ids, num_segments=g)
+            denom = jnp.where(wsum > 0, wsum, 1.0)
+
+            def pmean(a, _ids=ids, _wt=wt, _den=denom, _g=g):
+                wb = _wt.astype(a.dtype).reshape((-1,) + (1,) * (a.ndim - 1))
+                sums = jax.ops.segment_sum(a * wb, _ids, num_segments=_g)
+                db = _den.astype(a.dtype).reshape((-1,) + (1,) * (a.ndim - 1))
                 # the edge aggregator transmits its PARTIAL MEAN (one
                 # message regardless of block size) + the weight mass.
-                vals = sums / denom.reshape((-1,) + (1,) * (vals.ndim - 1))
-                wt, cur = wsum, g
-            wb = wt.reshape((-1,) + (1,) * (vals.ndim - 1))
-            total = jnp.sum(wt)
+                return sums / db
+
+            vals = jax.tree.map(pmean, vals)
+            if comp is not None:
+                key = self._tier_key(t_i, k) if comp.requires_key else None
+                extra = None
+                if comp.stateful:
+                    extra = (tstate.tier[t_i]
+                             if tstate is not None and tstate.tier is not None
+                             else jax.tree.map(jnp.zeros_like, vals))
+                vals, extra = comp.apply(key, vals, extra)
+                new_mem.append(extra)
+            wt, cur = wsum, g
+
+        def final(a):
+            wb = wt.astype(a.dtype).reshape((-1,) + (1,) * (a.ndim - 1))
+            total = jnp.sum(wt).astype(a.dtype)
             denom = jnp.where(total > 0, total, jnp.ones((), a.dtype))
-            return jnp.sum(vals * wb, axis=0, keepdims=True) / denom
+            return jnp.sum(a * wb, axis=0, keepdims=True) / denom
 
-        return jax.tree.map(mean_leaf, tree)
+        return jax.tree.map(final, vals), tuple(new_mem)
 
+    def reduce(self, tree, w, tstate=None):
+        return self._reduce_impl(tree, w, tstate)[0]
+
+    def reduce_and_advance(self, tree, w, tstate=None):
+        out, mem = self._reduce_impl(tree, w, tstate)
+        if not self.stateful:
+            return out, None
+        k = tstate.k if tstate is not None else jnp.zeros((), jnp.int32)
+        tier = mem if self.needs_msg_shapes else (
+            tstate.tier if tstate is not None else None)
+        return out, TopoState(k=k + 1, tier=tier)
+
+    # ----------------------------------------------------------- accounting
     def aggregator_hops(self, n_clients: int) -> tuple:
-        tiers = [g for g in self.groups if g < n_clients]
+        tiers = self._tiers(n_clients)
         return tuple(
             (f"tier{i + 1}->" + ("root" if i == len(tiers) - 1
                                  else f"tier{i + 2}"), int(g))
             for i, g in enumerate(tiers))
+
+    @property
+    def tier_bits_per_coord(self) -> float:  # type: ignore[override]
+        if self.tier_compression is None:
+            return 32.0
+        return float(self.tier_compression.bits_per_coord)
 
 
 # -------------------------------------------------------------------- mixing
@@ -274,7 +470,14 @@ class Mixing(Topology):
 
     ``resample=True`` (Erdős–Rényi only) redraws the graph at every
     aggregation from a domain-separated PRNG stream keyed by the
-    :class:`TopoState` round index — the stateful-topology path."""
+    :class:`TopoState` round index — the stateful-topology path.
+
+    ``lowering="sparse"`` replaces the dense N x N contraction with the
+    padded neighbor-index exchange (gather + fixed-slot segment sum; the
+    Pallas kernel behind ``use_kernel=True``) — same aggregation,
+    O(E x D) cost; see the module docstring. ``max_degree=0`` sizes the
+    table automatically (static graphs: the actual max degree; resampled
+    graphs: ``n - 1``, the only cap that can contain every draw)."""
 
     w: tuple | None = None
     n: int = 0
@@ -282,6 +485,9 @@ class Mixing(Topology):
     p: float = 0.0
     seed: int = 0
     resample: bool = False
+    lowering: str = "dense"
+    max_degree: int = 0
+    use_kernel: bool = False
 
     def __post_init__(self):
         if self.w is not None:
@@ -292,6 +498,20 @@ class Mixing(Topology):
             raise ValueError("Mixing needs a matrix (w=) or resample=True")
         if self.resample and not (0.0 < self.p <= 1.0):
             raise ValueError(f"resampled Erdos-Renyi needs 0 < p <= 1: {self.p}")
+        if self.lowering not in ("dense", "sparse"):
+            raise ValueError(f"unknown mixing lowering {self.lowering!r} "
+                             "(dense | sparse)")
+        if self.max_degree:
+            if self.w is not None and self.max_degree < self._max_degree():
+                raise ValueError(
+                    f"max_degree={self.max_degree} overflows: the "
+                    f"{self.graph} graph has a node of degree "
+                    f"{self._max_degree()} (use max_degree=0 for auto)")
+            if self.resample and self.max_degree < self.n - 1:
+                raise ValueError(
+                    "a resampled Erdos-Renyi graph can draw any degree up "
+                    f"to n-1={self.n - 1}; max_degree={self.max_degree} "
+                    "cannot bound it (use max_degree=0 for auto)")
 
     # ------------------------------------------------------------- builders
     @classmethod
@@ -310,6 +530,9 @@ class Mixing(Topology):
             r = max(d for d in range(1, int(math.isqrt(n)) + 1) if n % d == 0)
             shape = (r, n // r)
         rows, cols = shape
+        if n is not None and rows * cols != n:
+            raise ValueError(f"torus shape {shape} has {rows * cols} nodes "
+                             f"but n={n} was requested")
         if min(rows, cols) < 2:
             raise ValueError(
                 f"torus needs both dims >= 2, got {shape} (use ring)")
@@ -347,6 +570,11 @@ class Mixing(Topology):
         return self.resample
 
     # -------------------------------------------------------------- compute
+    def _max_degree(self) -> int:
+        """Actual max node degree of a static graph (off-diagonal support)."""
+        return max(sum(1 for j, x in enumerate(row) if j != i and x != 0.0)
+                   for i, row in enumerate(self.w))
+
     def _matrix(self, tstate, n: int, dtype):
         if not self.resample:
             return jnp.asarray(self.w, dtype=dtype)
@@ -359,11 +587,102 @@ class Mixing(Topology):
         W = jnp.where(adj, mw, 0.0)
         return W + jnp.diag(1.0 - jnp.sum(W, axis=1))
 
+    def _static_tables(self):
+        """Padded neighbor tables from the fixed matrix, host-side: slot 0
+        is the node itself (the Metropolis diagonal), then its neighbors;
+        pad slots carry weight 0 and a self index (a safe gather the zero
+        weight masks out)."""
+        import numpy as np
+
+        n = self.n
+        W = np.asarray(self.w, dtype=np.float64)
+        nbrs = [[j for j in range(n) if j != i and W[i, j] != 0.0]
+                for i in range(n)]
+        dmax = self.max_degree or max((len(v) for v in nbrs), default=0)
+        idx = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, dmax + 1))
+        wgt = np.zeros((n, dmax + 1))
+        for i, v in enumerate(nbrs):
+            wgt[i, 0] = W[i, i]
+            for s, j in enumerate(v):
+                idx[i, s + 1] = j
+                wgt[i, s + 1] = W[i, j]
+        return idx, wgt
+
+    def _resampled_tables(self, tstate, n: int, dtype):
+        """Rebuild the padded neighbor tables INSIDE the traced round from
+        the same TopoState-keyed stream as the dense ``_matrix`` — the
+        table build is O(n^2) per round but independent of the model
+        dimension, so the per-leaf exchange stays O(E x D)."""
+        key = jax.random.fold_in(jax.random.key(self.seed), _TOPO_KEY_TAG)
+        key = jax.random.fold_in(key, tstate.k)
+        upper = jnp.triu(jax.random.bernoulli(key, self.p, (n, n)), k=1)
+        adj = jnp.logical_or(upper, upper.T)
+        deg = jnp.sum(adj, axis=1)
+        # a node has at most n-1 neighbors: caps above that (a uniform cap
+        # shared across graphs of varying n) just clamp to the full table.
+        cap = min(self.max_degree or n - 1, n - 1)
+        # stable argsort floats neighbor columns first (ascending id),
+        # giving each row its neighbor list in the first `deg[i]` slots.
+        order = jnp.argsort(~adj, axis=1, stable=True)[:, :cap]
+        valid = jnp.arange(cap)[None, :] < deg[:, None]
+        nd = jnp.maximum(deg[:, None], deg[order])
+        wn = jnp.where(valid, 1.0 / (1.0 + nd.astype(dtype)), 0.0)
+        selfw = 1.0 - jnp.sum(wn, axis=1)
+        me = jnp.arange(n, dtype=order.dtype)[:, None]
+        idx = jnp.concatenate([me, jnp.where(valid, order, me)], axis=1)
+        wgt = jnp.concatenate([selfw[:, None], wn], axis=1)
+        return idx, wgt
+
+    def _reduce_sparse(self, tree, w, tstate):
+        n = w.shape[0]
+        if self.resample:
+            idx, wgt = self._resampled_tables(tstate, n, w.dtype)
+        else:
+            idx_np, wgt_np = self._static_tables()
+            idx = jnp.asarray(idx_np, jnp.int32)
+            wgt = jnp.asarray(wgt_np, w.dtype)
+        slots = idx.shape[1]
+        wn = wgt * w[idx]                        # [n, S]: W_ij * w_j
+        denom = jnp.sum(wn, axis=1)
+        denom = jnp.where(denom > 0, denom, 1.0)
+
+        def mean_leaf(a):
+            wnl = wn.astype(a.dtype)
+            flat = a.reshape(n, -1)
+            if self.use_kernel:
+                from repro.kernels import ops as kops
+
+                contrib = flat[idx.reshape(-1)] * wnl.reshape(-1, 1)
+                out = kops.gossip_reduce(contrib, slots=slots)
+            elif slots <= _UNROLL_SLOTS:
+                # the fixed-slot segment reduction, unrolled over the S
+                # slots so XLA fuses each row gather with its fma instead
+                # of materializing the [n*S, D] edge tensor and paying a
+                # scatter (measured ~25x faster on CPU at N=1024; same
+                # sum — pinned against jax.ops.segment_sum and the Pallas
+                # kernel in tests/test_gossip_kernel.py).
+                out = wnl[:, 0:1] * flat[idx[:, 0]]
+                for s in range(1, slots):
+                    out = out + wnl[:, s:s + 1] * flat[idx[:, s]]
+            else:
+                # wide tables (resampled graphs capped at n-1): keep the
+                # graph small with one gather + one segment_sum.
+                contrib = flat[idx.reshape(-1)] * wnl.reshape(-1, 1)
+                seg = jnp.repeat(jnp.arange(n), slots)
+                out = jax.ops.segment_sum(contrib, seg, num_segments=n,
+                                          indices_are_sorted=True)
+            out = out / denom.astype(a.dtype)[:, None]
+            return out.reshape(a.shape)
+
+        return jax.tree.map(mean_leaf, tree)
+
     def reduce(self, tree, w, tstate=None):
         n = w.shape[0]
         if self.w is not None and self.n != n:
             raise ValueError(f"mixing matrix is {self.n}x{self.n}, "
                              f"state has {n} clients")
+        if self.lowering == "sparse":
+            return self._reduce_sparse(tree, w, tstate)
 
         def mean_leaf(a):
             W = self._matrix(tstate, n, a.dtype)
@@ -385,7 +704,8 @@ class Mixing(Topology):
 
     def client_up_mult(self, n_clients: int) -> float:
         """Gossip clients transmit their wire message to each neighbor:
-        the first (and only) hop carries one message per directed edge."""
+        the first (and only) hop carries one message per directed edge —
+        the same edges whichever lowering executes the exchange."""
         return self._directed_edges(n_clients) / n_clients
 
     def broadcast_mult(self, n_clients: int) -> float:
@@ -411,7 +731,16 @@ class Mixing(Topology):
 
 
 # ------------------------------------------------------------------- parsing
-def parse_topology(spec, n_clients: int, seed: int = 0):
+def _parse_tier_compression(tier_compression):
+    """Normalize a tier-compression spec (string / Compressor / None) with
+    the engine's default error-feedback policy (auto-EF around biased
+    stateless compressors; ``shift:`` / ``ef:`` prefixes pass through)."""
+    comp = compressor_from_spec(tier_compression)
+    return auto_wrap(comp)
+
+
+def parse_topology(spec, n_clients: int, seed: int = 0,
+                   tier_compression=None):
     """Parse a topology spec; returns ``None`` for star specs (``star`` /
     ``none`` / ``""``) so ``with_topology`` can be an exact no-op at the
     identity setting, like every other transform factory.
@@ -419,17 +748,41 @@ def parse_topology(spec, n_clients: int, seed: int = 0):
     Grammar: ``star`` | ``hier:g8`` / ``hier:8`` / ``hier:16x4`` (tree
     tiers, coarsest last) | ``ring`` | ``torus`` / ``torus:2x5`` |
     ``er:0.4`` (one fixed G(n,p) graph) | ``er:0.4:t`` (resampled every
-    round — the stateful path)."""
+    round — the stateful path). Gossip specs take a trailing
+    ``:sparse`` (``ring:sparse``, ``torus:2x5:sparse``,
+    ``er:0.4:t:sparse``) selecting the padded neighbor-exchange
+    lowering. ``tier_compression`` (a compressor spec string or object;
+    hierarchies only) re-compresses interior tier uplinks."""
+    tier = _parse_tier_compression(tier_compression)
+
+    def _check_tier(topo):
+        if tier is not None and not isinstance(topo, Hierarchical):
+            raise ValueError(
+                "tier_compression re-compresses hierarchical aggregator "
+                f"tiers; topology {spec!r} has none (gossip edges carry "
+                "the client compressor's wire message already)")
+
     if spec is None:
+        _check_tier(None)
         return None
     if isinstance(spec, Topology):
         if isinstance(spec, Star):
+            _check_tier(None)
             return None
+        _check_tier(spec)
+        if tier is not None:
+            spec = dataclasses.replace(spec, tier_compression=tier, seed=seed)
         spec.validate(n_clients)
         return spec
     s = str(spec).strip().lower()
     if s in ("", "star", "none", "off"):
+        _check_tier(None)
         return None
+    lowering = "dense"
+    parts = s.split(":")
+    if parts[-1] in ("sparse", "dense"):
+        lowering, parts = parts[-1], parts[:-1]
+        s = ":".join(parts)
     name, _, arg = s.partition(":")
     if name == "hier":
         arg = arg.lstrip("g")
@@ -440,7 +793,7 @@ def parse_topology(spec, n_clients: int, seed: int = 0):
         if not groups:
             raise ValueError(f"bad hierarchical spec {spec!r} "
                              "(try hier:g8 or hier:16x4)")
-        topo = Hierarchical(groups)
+        topo = Hierarchical(groups, tier_compression=tier, seed=seed)
     elif name == "ring":
         topo = Mixing.ring(n_clients)
     elif name == "torus":
@@ -458,6 +811,13 @@ def parse_topology(spec, n_clients: int, seed: int = 0):
                                   resample=flag in ("t", "resample"))
     else:
         raise ValueError(f"unknown topology spec {spec!r} "
-                         "(try star, hier:g8, ring, torus, er:0.4)")
+                         "(try star, hier:g8, ring, ring:sparse, torus, "
+                         "er:0.4)")
+    if lowering == "sparse":
+        if not isinstance(topo, Mixing):
+            raise ValueError(f"the :sparse lowering applies to gossip "
+                             f"(ring/torus/er) topologies, not {spec!r}")
+        topo = dataclasses.replace(topo, lowering="sparse")
+    _check_tier(topo)
     topo.validate(n_clients)
     return topo

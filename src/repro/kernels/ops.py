@@ -77,6 +77,28 @@ def stochastic_quantize(a, u, scale, bits: int):
     return _untile(out, n, a.shape)
 
 
+@functools.partial(jax.jit, static_argnames=("slots",))
+def gossip_reduce(contrib, *, slots: int):
+    """Fixed-slot gossip segment reduce (see kernels/gossip_reduce.py;
+    oracle: kernels/ref.py:segment_reduce). ``contrib`` is the
+    ``[n * slots, D]`` gathered-and-weighted neighbor contributions of
+    the sparse exchange lowering (pad slots already zero-weighted);
+    returns the per-node sums ``[n, D]``. Pads nodes to the node block
+    and lanes to the lane block; zero pad rows reduce to zero rows that
+    are sliced off."""
+    from repro.kernels import gossip_reduce as KG
+
+    rows, d = contrib.shape
+    n = rows // slots
+    nb = min(KG.NODE_BLOCK, n)
+    db = min(KG.LANE_BLOCK, -(-d // 128) * 128)
+    n_pad = -n % nb
+    d_pad = -d % db
+    t = jnp.pad(contrib, ((0, n_pad * slots), (0, d_pad)))
+    out = KG.segment_reduce_2d(t, slots=slots, interpret=_interpret())
+    return out[:n, :d]
+
+
 @functools.partial(jax.jit, static_argnames=("c", "alpha"))
 def fedcet_comm(d, v, v_bar, c: float, alpha: float):
     """Fused FedCET aggregation pair (see kernels/ref.py:fedcet_comm)."""

@@ -50,6 +50,18 @@ def stochastic_quantize(a, u, scale, bits: int):
     return q * scale
 
 
+def segment_reduce(vals, slots: int):
+    """Fixed-slot segment sum (kernels/gossip_reduce.py oracle): ``vals``
+    is ``[n * slots, d]`` — node i's weighted neighbor contributions in
+    rows ``i*slots .. (i+1)*slots`` (pad slots are zero) — reduced per
+    node via ``jax.ops.segment_sum`` over ids ``[0,..0, 1,..1, ...]``."""
+    import jax
+
+    n = vals.shape[0] // slots
+    seg = jnp.repeat(jnp.arange(n), slots)
+    return jax.ops.segment_sum(vals, seg, num_segments=n)
+
+
 def topk_mask(x, k: int):
     """Magnitude top-k (per flattened leaf): keep the k largest |x|."""
     flat = x.reshape(-1)

@@ -83,8 +83,9 @@ def state_shardings(plan: TrainPlan, state_shapes):
     trees; transform extras (error-feedback / shift memory) and the delay
     buffer are message-shaped — the same stacked layout as x — and shard
     identically (the buffer's ``[clients] int32`` age vector shards over
-    the client axes); a stateful topology's ``TopoState`` is a replicated
-    scalar (the mixing round index)."""
+    the client axes); a stateful topology's ``TopoState`` is replicated —
+    the scalar mixing round index, plus (for hierarchies with stateful
+    tier compression) the small per-aggregator tier memory."""
     mesh, tp, ca = plan.mesh, tp_size(plan.mesh), plan.client_axes
     inner_shapes = (state_shapes.inner
                     if isinstance(state_shapes, EngineState) else state_shapes)
@@ -130,7 +131,10 @@ def abstract_state(plan: TrainPlan):
     extras = tuple(jax.eval_shape(lambda t=t: t.init_extra(inner.x))
                    for t in transforms)
     if topo_stateful:
-        extras = extras + (TopoState(k=jax.ShapeDtypeStruct((), jnp.int32)),)
+        # the scalar round index, plus — for hierarchies with stateful
+        # tier compression — the per-tier memory shaped from the
+        # (x-shaped) message tree, exactly as the engine inits it.
+        extras = extras + (jax.eval_shape(lambda: topo.init_state(inner.x)),)
     if delay is not None:
         extras = extras + (DelayState(
             buf=inner.x,
@@ -196,7 +200,7 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
                  reduced: bool = True, seed: int = 0,
                  compression: str = "none", participation: float = 1.0,
                  delay: str = "none", stale_policy: str = "last",
-                 topology: str = "star",
+                 topology: str = "star", tier_compression: str = "none",
                  log_every: int = 10, ckpt_dir: str | None = None,
                  callback=None) -> dict:
     """End-to-end FedCET LM training on the host device(s). Returns metrics
@@ -205,14 +209,18 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
     ``compression`` (a compressor spec — ``"randk:0.25"``, ``"shift:q8"``,
     ``"ef:topk:0.3+bf16"``, ...), ``participation``, ``delay`` /
     ``stale_policy`` (asynchronous rounds — ``"fixed:2"``, ``"rr:1"``,
-    ``"geom:0.5"`` with ``drop``/``last``/``poly:a`` aggregation) and
+    ``"geom:0.5"`` with ``drop``/``last``/``poly:a`` aggregation),
     ``topology`` (aggregation geometry — ``"hier:g8"`` edge-aggregator
-    tree, ``"ring"``/``"torus"``/``"er:0.4"`` gossip mixing) compose
+    tree, ``"ring"``/``"torus"``/``"er:0.4"`` gossip mixing; a trailing
+    ``":sparse"`` selects the O(edges) padded neighbor-exchange
+    lowering) and ``tier_compression`` (hierarchies: re-compress the
+    interior edge->root tier uplinks, e.g. ``"shift:q8"``) compose
     the corresponding engine transforms onto the FedCET spec, so the
     production LM loop runs any scenario the simulation tests pin; comm
     metering is bit-true from the resulting compressor stack, the delay
     model's uplink duty cycle, the sampling rate's downlink duty cycle,
-    and the topology's per-hop traffic shape."""
+    and the topology's per-hop traffic shape (compressed interior tiers
+    included)."""
     from repro.checkpoint.ckpt import save
     from repro.core.comm import CommMeter
     from repro.data.synthetic import make_hetero_lm_dataset
@@ -225,7 +233,7 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
     scenario = FedScenario(compression=compression,
                            participation=participation, delay=delay,
                            stale_policy=stale_policy, topology=topology,
-                           seed=seed)
+                           tier_compression=tier_compression, seed=seed)
     algo = scenario.apply(FedCET(alpha=alpha, c=c, tau=tau, n_clients=n_clients))
     ds = make_hetero_lm_dataset(cfg.vocab_size, n_clients, seq_len, batch,
                                 heterogeneity=heterogeneity, seed=seed)
@@ -291,7 +299,12 @@ def main(argv=None):
                     help="stale-aggregation policy: drop | last | poly:1")
     ap.add_argument("--topology", default="star",
                     help="aggregation geometry: star | hier:g8 | hier:16x4 "
-                         "| ring | torus | er:0.4")
+                         "| ring | torus | er:0.4 (gossip specs take a "
+                         "trailing :sparse for the padded neighbor-exchange "
+                         "lowering, e.g. ring:sparse, er:0.4:t:sparse)")
+    ap.add_argument("--tier-compression", default="none",
+                    help="hierarchies only: compressor spec for interior "
+                         "edge->root tier uplinks (e.g. shift:q8)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
     hist = run_training(
@@ -300,7 +313,7 @@ def main(argv=None):
         reduced=not args.full, ckpt_dir=args.ckpt_dir,
         compression=args.compression, participation=args.participation,
         delay=args.delay, stale_policy=args.stale_policy,
-        topology=args.topology,
+        topology=args.topology, tier_compression=args.tier_compression,
         callback=lambda r, l, b: print(f"round {r:5d}  loss {l:.4f}  comm {b/1e6:.1f} MB"))
     print("final loss:", hist["loss"][-1])
 

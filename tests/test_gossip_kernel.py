@@ -1,0 +1,77 @@
+"""Pallas gossip segment-reduce kernel vs its ref.py oracle.
+
+Separate from tests/test_kernels.py on purpose (same split as
+tests/test_quantize_kernel.py): that module needs ``hypothesis`` (absent
+in some environments, skipped by the conftest guard), while the gossip
+segment reduce is on the sparse-exchange hot path and must stay covered
+by the tier-1 suite everywhere — hypothesis-free, fixed-seed grids,
+``interpret=True`` off-TPU, and only a handful of compiles.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+#: (nodes, slots, dim) grids: uneven node blocks, lane-block boundaries
+#: (128/1024 multiples and off-by-one), degenerate single-node case.
+GRIDS = [(4, 3, 60), (8, 5, 128), (10, 3, 1025), (3, 7, 33), (1, 2, 4)]
+
+
+@pytest.mark.parametrize("n,slots,dim", GRIDS)
+def test_segment_reduce_matches_segment_sum(n, slots, dim):
+    """Kernel == jax.ops.segment_sum over the fixed-slot segment ids, on
+    fixed-seed value grids across node/lane padding regimes."""
+    vals = jax.random.normal(jax.random.key(n * slots + dim),
+                             (n * slots, dim), jnp.float32) * 3.0
+    out = ops.gossip_reduce(vals, slots=slots)
+    want = ref.segment_reduce(vals, slots)
+    direct = jax.ops.segment_sum(
+        vals, jnp.repeat(jnp.arange(n), slots), num_segments=n)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(direct),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    assert out.shape == (n, dim) and out.dtype == vals.dtype
+
+
+def test_segment_reduce_zero_pad_slots_exact():
+    """Zero rows (the sparse lowering's masked pad slots) contribute
+    exactly 0 — the padded reduce equals the unpadded sum bit-for-bit
+    when the pad slots hold zeros."""
+    n, slots, dim = 6, 4, 96
+    vals = jax.random.normal(jax.random.key(0), (n * slots, dim))
+    mask = (jnp.arange(n * slots) % slots < 2)[:, None]  # 2 live slots/node
+    masked = jnp.where(mask, vals, 0.0)
+    out = ops.gossip_reduce(masked, slots=slots)
+    live = vals.reshape(n, slots, dim)[:, :2, :]
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(live[:, 0] + live[:, 1]))
+
+
+def test_mixing_use_kernel_path_matches_default():
+    """Mixing(lowering="sparse", use_kernel=True) routes the reduce
+    through the Pallas kernel and must match both the default (unrolled
+    gather+fma) sparse path and the dense contraction — the flag can
+    flip on TPU without changing semantics."""
+    import dataclasses
+
+    from repro.core.topology import Mixing
+
+    topo = Mixing.torus(12, shape=(3, 4))
+    tree = {"v": jax.random.normal(jax.random.key(1), (12, 37)),
+            "s": jax.random.normal(jax.random.key(2), (12,))}
+    w = jnp.asarray([1.0, 1, 0, 1, 1, 1, 1, 0, 1, 1, 1, 1])
+    dense = topo.reduce(tree, w)
+    sparse = dataclasses.replace(topo, lowering="sparse").reduce(tree, w)
+    kern = dataclasses.replace(topo, lowering="sparse",
+                               use_kernel=True).reduce(tree, w)
+    for leaf in tree:
+        np.testing.assert_allclose(np.asarray(sparse[leaf]),
+                                   np.asarray(dense[leaf]),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(kern[leaf]),
+                                   np.asarray(sparse[leaf]),
+                                   rtol=1e-6, atol=1e-6)

@@ -27,7 +27,26 @@ Pins, in order:
   (billed dense f32 per tier) while the client tier pays the compressed
   wire width x the duty cycle; gossip bills one message per directed
   edge and NO downlink broadcast; present-only downlink bills the
-  broadcast at the participation rate.
+  broadcast at the participation rate;
+* THE DENSE-EQUIVALENCE HARNESS for the sparse exchange lowering: the
+  padded neighbor-index exchange (``ring:sparse`` / ``torus:sparse`` /
+  ``er:p[:t]:sparse``) is <= 1e-12 against the dense N x N contraction
+  on FedCET and NIDS — bare, composed with shift:q8 x 0.8 participation
+  x fixed:2 delay in EVERY factory order, and round-by-round on the
+  per-round resampled graph (whose neighbor tables rebuild from the
+  TopoState stream, surviving checkpoint resume mid-sweep);
+* tier recompression: ``hier`` with ``tier_compression=`` compresses the
+  interior edge->root partial means — exact per-hop accounting (8-bit
+  tiers, dense downward re-broadcasts), shift memory riding TopoState
+  through checkpoint/resume, and the measured convergence boundary:
+  FedAvg stays EXACT under shift:q8 tiers (memoryless mean) while
+  FedCET freezes at a ~quantizer-resolution offset — the tier hop's
+  transmission error integrates into ``sum_i d_i`` (no wire-consistency
+  at interior hops) and permanently displaces the Lemma 2 fixed point;
+* Mixing grammar/validation gaps surfaced by the lowering: torus
+  ``shape`` vs ``n`` mismatch, max-degree overflow on a dense
+  Erdős–Rényi draw, resampled graphs rejecting explicit degree caps,
+  unknown lowering names, tier compression on non-hierarchies.
 """
 
 import dataclasses
@@ -435,3 +454,340 @@ def test_present_only_downlink_duty(problem):
     sync = CommMeter.for_params(params, algo=base, n_clients=n)
     sync.tick_round(base)
     assert sync.bytes_down == int(dim * n * 32.0 / 8)
+
+
+# ------------------------------------------------- sparse exchange lowering
+def _state_allclose(a, b, **tol):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **tol)
+
+
+def test_sparse_lowering_matches_dense_all_families(problem):
+    """THE dense-equivalence harness: the padded neighbor-exchange
+    lowering is the SAME aggregation as the dense N x N contraction —
+    trajectories AND final states <= 1e-12 on FedCET and NIDS for every
+    connected graph family."""
+    algos = {"fedcet": _fedcet(problem),
+             "nids": NIDS(alpha=1.0 / problem.L, n_clients=problem.n_clients)}
+    for name, algo in algos.items():
+        for spec in ("ring", "torus", "er:0.5"):
+            ref = simulate_quadratic(with_topology(algo, spec), problem,
+                                     rounds=15)
+            res = simulate_quadratic(with_topology(algo, spec + ":sparse"),
+                                     problem, rounds=15)
+            np.testing.assert_allclose(np.asarray(res.errors),
+                                       np.asarray(ref.errors), **_TOL,
+                                       err_msg=f"{name}/{spec}")
+            _state_allclose(res.state, ref.state, **_TOL)
+
+
+def test_sparse_lowering_composed_every_factory_order(problem):
+    """ring:sparse under shift:q8 x 0.8 participation x fixed:2 delay,
+    attached in EVERY factory order: all 24 orders build the SAME
+    composed algorithm object (the transform slots are independent), and
+    its trajectory matches the dense lowering of the same stack
+    <= 1e-12."""
+    import itertools
+
+    base = _fedcet(problem)
+
+    def build(order, spec):
+        factories = {
+            "topo": lambda a: with_topology(a, spec),
+            "comp": lambda a: with_compression(a, compressor="shift:q8"),
+            "part": lambda a: with_participation(a, 0.8, seed=3),
+            "delay": lambda a: with_delay(a, "fixed:2", policy="last"),
+        }
+        algo = base
+        for name in order:
+            algo = factories[name](algo)
+        return algo
+
+    orders = list(itertools.permutations(("topo", "comp", "part", "delay")))
+    sparse_algos = [build(o, "ring:sparse") for o in orders]
+    assert all(a == sparse_algos[0] for a in sparse_algos[1:])
+    ref = simulate_quadratic(build(orders[0], "ring"), problem, rounds=30)
+    res = simulate_quadratic(sparse_algos[0], problem, rounds=30)
+    np.testing.assert_allclose(np.asarray(res.errors),
+                               np.asarray(ref.errors), **_TOL)
+    _state_allclose(res.state, ref.state, **_TOL)
+
+
+def test_sparse_resampled_er_matches_dense_roundwise(problem):
+    """The per-round resampled graph: sparse neighbor tables rebuilt
+    in-trace from the TopoState stream draw the SAME graph sequence as
+    the dense matrix — round-by-round error agreement <= 1e-12."""
+    rd = simulate_quadratic(with_topology(_fedcet(problem), "er:0.5:t",
+                                          seed=11), problem, rounds=30)
+    rs = simulate_quadratic(with_topology(_fedcet(problem),
+                                          "er:0.5:t:sparse", seed=11),
+                            problem, rounds=30)
+    np.testing.assert_allclose(np.asarray(rs.errors), np.asarray(rd.errors),
+                               **_TOL)
+    _state_allclose(rs.state, rd.state, **_TOL)
+
+
+def test_sparse_resampled_determinism_and_resume(problem, tmp_path):
+    """The sparse resampled path is deterministic across independent
+    runs, and restart-from-checkpoint MID-SWEEP continues bit-compatibly
+    — the neighbor tables rebuild from the checkpointed TopoState round
+    index alone."""
+    from repro.checkpoint.ckpt import load_pytree, save_pytree
+
+    algo = with_topology(_fedcet(problem), "er:0.6:t:sparse", seed=3)
+    r1 = simulate_quadratic(algo, problem, rounds=20)
+    r2 = simulate_quadratic(algo, problem, rounds=20)
+    np.testing.assert_array_equal(np.asarray(r1.errors), np.asarray(r2.errors))
+
+    gf = jax.grad(problem.client_loss)
+    batches = problem.stacked_batches(TAU)
+    init_b = jax.tree.map(lambda b: b[0], batches)
+    x0 = jnp.zeros((problem.dim,), problem.b.dtype)
+    state0 = algo.init(gf, x0, init_b)
+    full, _ = run_rounds(algo, gf, state0, batches, rounds=8)
+    half, _ = run_rounds(algo, gf, state0, batches, rounds=4)
+    path = str(tmp_path / "mid_sparse.npz")
+    save_pytree(path, half)
+    resumed, _ = run_rounds(algo, gf, load_pytree(path, half), batches,
+                            rounds=4)
+    _state_allclose(resumed, full, **_TOL)
+
+
+def test_sparse_wide_table_fallback_matches_dense():
+    """Tables wider than the unroll threshold (resampled graphs capped at
+    n-1 with n > 33) take the gather + segment_sum fallback — pinned
+    against the dense matrix of the same TopoState draw."""
+    from repro.core.topology import _UNROLL_SLOTS
+
+    n = 40
+    topo = Mixing.erdos_renyi(n, 0.3, resample=True)
+    sparse = dataclasses.replace(topo, lowering="sparse")
+    assert sparse._resampled_tables(
+        TopoState(k=jnp.zeros((), jnp.int32)), n,
+        jnp.float64)[0].shape[1] > _UNROLL_SLOTS
+    tree = {"v": jax.random.normal(jax.random.key(5), (n, 17)),
+            "s": jax.random.normal(jax.random.key(6), (n,))}
+    w = jnp.ones((n,)).at[3].set(0.0).at[11].set(0.0)
+    for k in (0, 1, 7):
+        ts = TopoState(k=jnp.asarray(k, jnp.int32))
+        ref = topo.reduce(tree, w, ts)
+        out = sparse.reduce(tree, w, ts)
+        for leaf in tree:
+            np.testing.assert_allclose(np.asarray(out[leaf]),
+                                       np.asarray(ref[leaf]), **_TOL)
+
+
+def test_sparse_spec_grammar():
+    from repro.core.compressors import ErrorFeedback, Shifted, StochasticQuant
+
+    t = parse_topology("ring:sparse", N)
+    assert isinstance(t, Mixing) and t.graph == "ring"
+    assert t.lowering == "sparse"
+    assert parse_topology("ring", N).lowering == "dense"
+    assert parse_topology("torus:2x5:sparse", N).lowering == "sparse"
+    t = parse_topology("er:0.4:sparse", N)
+    assert t.lowering == "sparse" and not t.resample
+    t = parse_topology("er:0.4:t:sparse", N)
+    assert t.lowering == "sparse" and t.resample and t.stateful
+    with pytest.raises(ValueError, match="sparse"):
+        parse_topology("hier:g5:sparse", N)
+    with pytest.raises(ValueError, match="tier_compression"):
+        parse_topology("ring", N, tier_compression="q8")
+    with pytest.raises(ValueError, match="tier_compression"):
+        parse_topology("star", N, tier_compression="q8")
+    # tier specs follow the engine's auto-EF policy: unbiased stays bare,
+    # biased wraps, shift: passes through.
+    h = parse_topology("hier:g5", N, tier_compression="q8")
+    assert isinstance(h.tier_compression, StochasticQuant)
+    assert isinstance(
+        parse_topology("hier:g5", N, tier_compression="topk:0.3")
+        .tier_compression, ErrorFeedback)
+    assert isinstance(
+        parse_topology("hier:g5", N, tier_compression="shift:q8")
+        .tier_compression, Shifted)
+    assert parse_topology("hier:g5", N, tier_compression="none") \
+        == parse_topology("hier:g5", N)
+
+
+def test_mixing_validation_gaps():
+    """The grammar/validation gaps the lowering surfaced: torus shape/n
+    mismatch, max-degree overflow on a dense Erdős–Rényi draw, resampled
+    graphs rejecting any explicit degree cap, unknown lowering names."""
+    with pytest.raises(ValueError, match="torus shape"):
+        Mixing.torus(10, shape=(3, 4))
+    assert Mixing.torus(12, shape=(3, 4)).n == 12  # consistent pair: fine
+    dense_er = Mixing.erdos_renyi(10, 0.9, seed=1)
+    with pytest.raises(ValueError, match="overflows"):
+        dataclasses.replace(dense_er, lowering="sparse", max_degree=2)
+    with pytest.raises(ValueError, match="cannot bound"):
+        dataclasses.replace(Mixing.erdos_renyi(10, 0.5, resample=True),
+                            max_degree=4)
+    # a resampled cap ABOVE n-1 (one uniform cap across varying n) is
+    # honored by clamping to the n-1 slots a node can actually have
+    wide = dataclasses.replace(Mixing.erdos_renyi(10, 0.5, resample=True),
+                               lowering="sparse", max_degree=15)
+    tree = {"v": jnp.ones((10, 3))}
+    out = wide.reduce(tree, jnp.ones((10,)),
+                      TopoState(k=jnp.zeros((), jnp.int32)))
+    np.testing.assert_allclose(np.asarray(out["v"]), 1.0, rtol=1e-12)
+    with pytest.raises(ValueError, match="lowering"):
+        dataclasses.replace(Mixing.ring(10), lowering="csr")
+    # an explicit cap >= the actual degree is honored: wider pad tables
+    ok = dataclasses.replace(Mixing.ring(10), lowering="sparse", max_degree=4)
+    idx, wgt = ok._static_tables()
+    assert idx.shape == (10, 5)
+    assert (wgt[:, 3:] == 0).all()  # ring degree 2: the extra slots pad
+
+
+def test_sparse_gossip_accounting_identical_to_dense(problem):
+    """The lowering changes the EXECUTION, not the exchange: identical
+    per-hop messages and bits for every family, including the expected
+    edge count of the resampled graph."""
+    n, dim = problem.n_clients, problem.dim
+    for spec in ("ring", "torus", "er:0.5", "er:0.4:t"):
+        d = with_topology(_fedcet(problem), spec)
+        s = with_topology(_fedcet(problem), spec + ":sparse")
+        assert comm_hops_per_round(s, dim, n) == comm_hops_per_round(d, dim, n)
+        assert comm_bits_per_round(s, dim, n) == comm_bits_per_round(d, dim, n)
+    ring_s = with_topology(_fedcet(problem), "ring:sparse")
+    assert ring_s.topology.client_up_mult(n) == 2.0
+    assert ring_s.topology.broadcast_mult(n) == 0.0
+
+
+# -------------------------------------------------------- tier recompression
+def test_tier_recompression_accounting(problem):
+    """Compressed interior hops: with shift:q8 tiers the edge->root hop
+    pays 8 bits/coord (instead of dense f32) so the FULL uplink is
+    compressed end to end; the downward tier re-broadcast stays dense
+    f32, and CommMeter agrees with comm_bits_per_round."""
+    n, dim = problem.n_clients, problem.dim
+    algo = with_topology(
+        with_compression(_fedcet(problem), compressor="shift:q8"),
+        "hier:g5", tier_compression="shift:q8")
+    assert algo.topology.tier_bits_per_coord == 8.0
+    hops = comm_hops_per_round(algo, dim, n)
+    assert [h["hop"] for h in hops] == ["client", "tier1->root"]
+    assert hops[0]["bits"] == dim * n * 8.0   # shift:q8 client uplink
+    assert hops[1]["bits"] == dim * 5 * 8.0   # shift:q8 interior tier
+    bits = comm_bits_per_round(algo, dim, n)
+    assert bits["up_bits"] == dim * (n + 5) * 8.0
+    assert bits["down_bits"] == dim * (n + 5) * 32.0  # downward stays dense
+    params = {"w": jnp.zeros((dim,))}
+    m = CommMeter.for_params(params, algo=algo, n_clients=n)
+    m.tick_round(algo)
+    assert m.bytes_up == int(bits["up_bits"] / 8)
+    assert m.bytes_down == int(bits["down_bits"] / 8)
+    # without tier compression the interior hop stays dense f32
+    plain = with_topology(_fedcet(problem), "hier:g5")
+    assert plain.topology.tier_bits_per_coord == 32.0
+    assert comm_hops_per_round(plain, dim, n)[1]["bits"] == dim * 5 * 32.0
+
+
+def test_tier_recompression_fedavg_exact_fedcet_floors(problem):
+    """The measured convergence boundary of tier recompression: FedAvg's
+    memoryless mean FORGIVES the interior-hop quantization (exact,
+    ~1e-15, because the shifted quantizer's error shrinks with the
+    round-to-round change of the partial means) — but FedCET's drift
+    integrator does not: the tier hop's transmission error enters
+    ``sum_i d_i`` un-redistributed (no wire-consistency at interior
+    hops), the invariant drifts during the transient, and the trajectory
+    converges to a PERMANENTLY OFFSET fixed point at ~quantizer
+    resolution (~1.5e-3 at q8, seed-dependent; scales as 2^-bits)."""
+    from repro.core import FedAvg
+
+    fedavg = FedAvg(alpha=1.0 / (2 * TAU * problem.L), tau=TAU,
+                    n_clients=problem.n_clients)
+    res = simulate_quadratic(
+        with_topology(fedavg, "hier:g5", tier_compression="shift:q8"),
+        problem, rounds=1200)
+    assert res.final_error < 1e-9, res.final_error
+
+    res = simulate_quadratic(
+        with_topology(_fedcet(problem), "hier:g5",
+                      tier_compression="shift:q8"),
+        problem, rounds=800)
+    errs = np.asarray(res.errors)
+    assert 1e-4 < errs[-1] < 1e-2, errs[-1]            # the frozen offset
+    np.testing.assert_allclose(errs[-1], errs[400], rtol=0.5)  # frozen, not
+    # a random walk: the drift invariant broke and STAYED broken.
+    d_sum = np.linalg.norm(np.asarray(jnp.sum(res.state.inner.d, axis=0)))
+    assert d_sum > 1e-3, d_sum
+
+
+def test_tier_recompression_state_checkpoint_resume(problem, tmp_path):
+    """Stateful tier compression rides TopoState: the per-tier shift
+    memory (one [g, dim] tree per tier) sits in the extras slot just
+    before DelayState, round-trips the npz checkpoint, and the resumed
+    run continues bit-compatibly mid-sweep."""
+    from repro.checkpoint.ckpt import load_pytree, save_pytree
+
+    algo = with_delay(
+        with_topology(_fedcet(problem), "hier:g5",
+                      tier_compression="shift:q8"),
+        "rr:2", policy="last")
+    gf = jax.grad(problem.client_loss)
+    batches = problem.stacked_batches(TAU)
+    init_b = jax.tree.map(lambda b: b[0], batches)
+    x0 = jnp.zeros((problem.dim,), problem.b.dtype)
+    state0 = algo.init(gf, x0, init_b)
+    tstate = state0.extras[-2]
+    assert isinstance(tstate, TopoState) and int(tstate.k) == 1
+    assert isinstance(tstate.tier, tuple) and len(tstate.tier) == 1
+    assert jax.tree.leaves(tstate.tier)[0].shape == (5, problem.dim)
+    assert isinstance(state0.extras[-1], DelayState)
+
+    full, _ = run_rounds(algo, gf, state0, batches, rounds=8)
+    half, _ = run_rounds(algo, gf, state0, batches, rounds=4)
+    path = str(tmp_path / "tier.npz")
+    save_pytree(path, half)
+    back = load_pytree(path, half)
+    for a, b in zip(jax.tree.leaves(half), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    resumed, _ = run_rounds(algo, gf, back, batches, rounds=4)
+    _state_allclose(resumed, full, **_TOL)
+    # a stateless-but-stochastic tier compressor carries only the round
+    # index (tier=None) — and q8 tiers on a STATELESS hierarchy need no
+    # TopoState at all when the compressor is deterministic.
+    q8 = with_topology(_fedcet(problem), "hier:g5", tier_compression="q8")
+    s0 = q8.init(gf, x0, init_b)
+    assert isinstance(s0.extras[-1], TopoState)
+    assert s0.extras[-1].tier is None
+    # the "bf16" SPEC goes through the auto-EF policy (biased -> wrapped,
+    # hence stateful); a deterministic stateless compressor attached
+    # directly keeps the whole hierarchy stateless.
+    from repro.core.compressors import Bf16, ErrorFeedback
+
+    bf16 = with_topology(_fedcet(problem), "hier:g5", tier_compression="bf16")
+    assert isinstance(bf16.topology.tier_compression, ErrorFeedback)
+    assert bf16.topology.stateful is True
+    assert Hierarchical((5,), tier_compression=Bf16()).stateful is False
+
+
+def test_abstract_state_tier_compression_extras():
+    """The AOT lowering path: abstract_state shapes the TopoState tier
+    memory (per-tier [g, ...] trees) via the topology's own init_state
+    under eval_shape, and state_shardings replicates it."""
+    from repro.core.fedcet import FedCET
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.train import abstract_state, make_plan, state_shardings
+
+    mesh = make_test_mesh((1, 1))  # single-host CPU mesh
+    plan = make_plan("qwen3-1.7b", mesh)
+    algo = with_topology(
+        FedCET(alpha=1e-3, c=0.05, tau=2, n_clients=8),
+        "hier:g4", tier_compression="shift:q8")
+    plan = dataclasses.replace(plan, algo=algo, n_clients=8)
+    shapes = abstract_state(plan)
+    assert isinstance(shapes, EngineState)
+    tstate = shapes.extras[-1]
+    assert isinstance(tstate, TopoState) and tstate.k.shape == ()
+    assert isinstance(tstate.tier, tuple) and len(tstate.tier) == 1
+    x_leaves = jax.tree.leaves(shapes.inner.x)
+    t_leaves = jax.tree.leaves(tstate.tier)
+    assert len(t_leaves) == len(x_leaves)
+    assert all(t.shape == (4,) + x.shape[1:]
+               for t, x in zip(t_leaves, x_leaves))
+    sh = state_shardings(plan, shapes)
+    assert isinstance(sh.extras[-1], TopoState)
