@@ -1,0 +1,75 @@
+"""Shared benchmark timing + machine-readable result emission.
+
+Every benchmark in this directory times jitted callables the same way:
+warm once (compile), then report the MIN over a few batches of ``reps``
+back-to-back calls — noise-robust on shared machines. ``min_of_batches``
+is that loop, factored out of benchmarks/gossip_scaling.py.
+
+``write_bench_json`` persists one ``BENCH_<name>.json`` per benchmark
+(config, git commit, timings) so the perf trajectory is first-class and
+diffable across commits instead of scattered CSVs; CI uploads these as
+artifacts alongside the sweep CSVs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import time
+
+
+def min_of_batches(run_once, *, reps: int = 3, batches: int = 5):
+    """Time ``run_once`` (a nullary returning a JAX value): warm once to
+    compile, then return ``(best_us, out)`` — the minimum per-call
+    microseconds over ``batches`` batches of ``reps`` synchronous calls."""
+    import jax
+
+    out = run_once()  # compile + warm
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(batches):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = run_once()
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) * 1e6 / reps)
+    return best, out
+
+
+def results_dir() -> str:
+    """The repo's committed ``results/`` directory when present (benchmarks
+    live one level below the repo root), else the current directory."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = os.path.join(repo, "results")
+    return out if os.path.isdir(out) else "."
+
+
+def git_commit() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def write_bench_json(name: str, *, config: dict, timings: dict,
+                     extra: dict | None = None, out_dir: str = ".") -> str:
+    """Emit ``BENCH_<name>.json``: benchmark name, commit, the config the
+    numbers were measured under, and a flat ``{cell: us_per_call}`` timing
+    map. Returns the written path."""
+    doc = {
+        "benchmark": name,
+        "commit": git_commit(),
+        "config": config,
+        "timings_us": {k: round(float(v), 3) for k, v in timings.items()},
+    }
+    if extra:
+        doc.update(extra)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

@@ -1,0 +1,185 @@
+"""Benchmark: O(cohort) round execution vs the dense O(N) vmap path.
+
+The cohort engine (``with_cohort``, repro/core/engine.py) keeps all
+per-client state in a server-side ``[N, ...]`` client-state store; each
+round it gathers the sampled cohort's rows into a fixed-shape ``[m, ...]``
+batch, runs the vmap-lifted local scan on the cohort only, and scatters
+the updated rows back — in place, because the round runner donates the
+carry. Per-round compute is then O(m·D) regardless of the population
+size N, while the dense path vmaps the local scan over all N rows.
+
+This script sweeps N = 1e3 -> 1e6 at a FIXED cohort size (256, the
+``block`` selector — O(m) index arithmetic, no O(N) permutation) on the
+paper's quadratic problem and asserts the PINNED SCALING FINDINGS
+(committed in results/cohort_scaling.csv + results/BENCH_cohort_scaling
+.json; recorded in ARCHITECTURE.md):
+
+1. cohort round time is ~flat in N: stepping N=1e4 -> 1e6 (100x rows)
+   grows the measured round time by <= 1.5x;
+2. the dense path is ~linear: N=1e4 -> 1e5 (10x) grows it by >= 3x;
+3. exactness survives the rewrite: at N=1e3 the gather lowering matches
+   the dense reference lowering <= 1e-12 after 4 rounds for all four
+   algorithm families (FedCET, FedAvg, SCAFFOLD, FedTrack).
+
+Run directly (``python benchmarks/cohort_scaling.py``) or via
+benchmarks/run.py; ``--quick`` caps the sweep at N=1e4 for CI smoke
+(the scaling assertions need the full sweep and are skipped).
+"""
+
+from __future__ import annotations
+
+try:
+    from benchmarks._timing import min_of_batches, results_dir, \
+        write_bench_json
+except ImportError:  # run directly as a script: benchmarks/ is sys.path[0]
+    from _timing import min_of_batches, results_dir, write_bench_json
+
+COHORT = 256
+DIM = 8
+TAU = 2
+ROUNDS = 4       # rounds per timed call (scan length); time is per round
+REPS = 2
+BATCHES = 3
+NS_GATHER = (1_000, 10_000, 100_000, 1_000_000)
+NS_DENSE = (1_000, 10_000, 100_000)  # the O(N) reference stops at 1e5
+EQUIV_N = 1_000
+EQUIV_TOL = 1e-12
+
+
+def _problem(n: int):
+    from repro.data.quadratic import make_quadratic_problem
+
+    return make_quadratic_problem(0, n_clients=n, n_measurements=1, dim=DIM)
+
+
+def _algos(n: int) -> dict:
+    from repro.core import FedAvg, FedCET, FedTrack, Scaffold
+
+    return {
+        "fedcet": FedCET(alpha=0.02, c=0.3, tau=TAU, n_clients=n),
+        "fedavg": FedAvg(alpha=0.05, tau=TAU, n_clients=n),
+        "scaffold": Scaffold(alpha_l=0.02, tau=TAU, n_clients=n),
+        "fedtrack": FedTrack(alpha=0.02, tau=TAU, n_clients=n),
+    }
+
+
+def _init_state(algo, prob):
+    import jax
+    import jax.numpy as jnp
+
+    grad = jax.grad(prob.client_loss)
+    batches = prob.stacked_batches(TAU)
+    first = jax.tree.map(lambda b: b[0], batches)
+    state = algo.init(grad, jnp.zeros((prob.dim,), prob.b.dtype), first)
+    return grad, state, batches
+
+
+def _time_rounds(algo, prob) -> float:
+    """Best-of-batches per-ROUND microseconds for `algo` on `prob`, timing
+    the donated repeat-mode runner (in-place client-store updates)."""
+    from repro.core import make_round_runner
+
+    grad, state, batches = _init_state(algo, prob)
+    runner = make_round_runner(algo, grad, repeat=True, donate=True)
+    holder = {"s": state}  # donated carry: rebind every call
+
+    def once():
+        s, _ = runner(holder["s"], batches, ROUNDS)
+        holder["s"] = s
+        return s
+
+    best_us, _ = min_of_batches(once, reps=REPS, batches=BATCHES)
+    return best_us / ROUNDS
+
+
+def _equiv_gap(algo_g, algo_d, prob) -> float:
+    """Max-abs final-state gap between the two cohort lowerings."""
+    import jax
+
+    from repro.core import run_rounds
+
+    gaps = []
+    for a in (algo_g, algo_d):
+        grad, state, batches = _init_state(a, prob)
+        final, _ = run_rounds(a, grad, state, batches, rounds=ROUNDS)
+        gaps.append(final)
+    return max(float(abs(lg - ld).max())
+               for lg, ld in zip(jax.tree.leaves(gaps[0]),
+                                 jax.tree.leaves(gaps[1])))
+
+
+def run(csv_rows=None, quick: bool = False):
+    import jax
+
+    jax.config.update("jax_enable_x64", True)  # the <=1e-12 exactness pin
+
+    from repro.core import CohortSpec, with_cohort
+
+    ns_gather = tuple(n for n in NS_GATHER if n <= 10_000) if quick \
+        else NS_GATHER
+    ns_dense = tuple(n for n in NS_DENSE if n <= 10_000) if quick \
+        else NS_DENSE
+    spec = lambda lowering: CohortSpec(size=COHORT, selector="block",  # noqa: E731
+                                       lowering=lowering)
+    times = {}
+
+    for n in ns_gather:
+        prob = _problem(n)
+        algo = with_cohort(_algos(n)["fedcet"], spec("gather"))
+        t = _time_rounds(algo, prob)
+        times[("gather", n)] = t
+        if csv_rows is not None:
+            csv_rows.append((f"cohort_scaling/gather/n{n}", t,
+                             f"cohort={COHORT};dim={DIM};tau={TAU}"))
+    for n in ns_dense:
+        prob = _problem(n)
+        t = _time_rounds(_algos(n)["fedcet"], prob)  # bare: dense O(N) path
+        times[("dense", n)] = t
+        if csv_rows is not None:
+            csv_rows.append((f"cohort_scaling/dense/n{n}", t,
+                             f"cohort=none;dim={DIM};tau={TAU}"))
+
+    # ---- exactness: gather lowering == dense reference lowering, all four
+    # algorithm families, on the same cohort schedule.
+    prob = _problem(EQUIV_N)
+    equiv = {}
+    for name, algo in _algos(EQUIV_N).items():
+        gap = _equiv_gap(with_cohort(algo, spec("gather")),
+                         with_cohort(algo, spec("dense")), prob)
+        equiv[name] = gap
+        assert gap <= EQUIV_TOL, (name, gap)
+        if csv_rows is not None:
+            csv_rows.append((f"cohort_scaling/equiv/{name}", 0.0,
+                             f"max_abs_gap={gap:.3e};n={EQUIV_N}"))
+
+    write_bench_json(
+        "cohort_scaling",
+        config={"cohort": COHORT, "selector": "block", "dim": DIM,
+                "tau": TAU, "rounds_per_call": ROUNDS, "reps": REPS,
+                "batches": BATCHES, "ns_gather": list(ns_gather),
+                "ns_dense": list(ns_dense), "quick": quick},
+        timings={f"{path}/n{n}": t for (path, n), t in times.items()},
+        extra={"equiv_max_abs_gap": {k: float(v) for k, v in equiv.items()},
+               "equiv_n": EQUIV_N, "equiv_rounds": ROUNDS},
+        out_dir=results_dir())
+
+    # ---- pinned measured findings (full sweep only; see module docstring)
+    if not quick:
+        n_top = ns_gather[-1]
+        grow_c = times[("gather", n_top)] / times[("gather", 10_000)]
+        assert grow_c <= 1.5, (
+            "cohort round time must stay ~flat in N", n_top, grow_c)
+        grow_d = times[("dense", 100_000)] / times[("dense", 10_000)]
+        assert grow_d >= 3.0, (
+            "dense round time must grow ~linearly in N", grow_d)
+    return times
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = []
+    run(csv_rows=rows, quick="--quick" in sys.argv)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(",".join(map(str, r)))

@@ -32,7 +32,12 @@ scaling assertions need the full grid and are skipped).
 from __future__ import annotations
 
 import dataclasses
-import time
+
+try:
+    from benchmarks._timing import min_of_batches, results_dir, \
+        write_bench_json
+except ImportError:  # run directly as a script: benchmarks/ is sys.path[0]
+    from _timing import min_of_batches, results_dir, write_bench_json
 
 NS = (64, 256, 1024)
 DIM = 4096
@@ -61,16 +66,7 @@ def _time_reduce(topo, n: int, dim: int, reps: int = REPS,
     tree = {"v": jax.random.normal(jax.random.key(0), (n, dim), jnp.float32)}
     w = jnp.ones((n,), jnp.float32)
     fn = jax.jit(lambda t: topo.reduce(t, w))
-    out = fn(tree)  # compile + warm
-    jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(batches):
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            out = fn(tree)
-        jax.block_until_ready(out)
-        best = min(best, (time.perf_counter() - t0) * 1e6 / reps)
-    return best, out
+    return min_of_batches(lambda: fn(tree), reps=reps, batches=batches)
 
 
 def run(csv_rows=None, quick: bool = False):
@@ -104,6 +100,14 @@ def run(csv_rows=None, quick: bool = False):
                         f";slots={slots}"
                         f";model_elems={work}"
                         f";dim={DIM}"))
+
+    write_bench_json(
+        "gossip_scaling",
+        config={"ns": list(ns), "dim": DIM, "reps": REPS, "batches": BATCHES,
+                "er_degree": EXPECTED_ER_DEGREE, "quick": quick},
+        timings={f"{family}/{lowering}/n{n}": t
+                 for (family, lowering, n), t in times.items()},
+        out_dir=results_dir())
 
     # ---- pinned measured findings (full grid only; see module docstring)
     if not quick:

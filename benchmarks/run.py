@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows. Modules:
                      results JSON, when present
   gossip_scaling   — sparse neighbor-exchange lowering O(E) vs the dense
                      N^2 gossip contraction at N in {64, 256, 1024}
+  cohort_scaling   — O(cohort) gathered round vs the dense O(N) vmap path
+                     at N = 1e3..1e6 (runs late: it enables x64)
   staleness_sweep  — error floors under asynchronous rounds: delay model x
                      stale policy x compression (runs LAST: it enables x64)
   topology_sweep   — aggregation geometry: hierarchical exactness, NIDS
@@ -24,6 +26,7 @@ import time
 
 def main() -> None:
     from benchmarks import (
+        cohort_scaling,
         comm_table,
         fed_lm_bench,
         fig1_convergence,
@@ -45,7 +48,8 @@ def main() -> None:
         ("kernel_bench", kernel_bench),
         ("roofline_table", roofline_table),
         ("gossip_scaling", gossip_scaling),
-        ("staleness_sweep", staleness_sweep),  # enables x64: keep last
+        ("cohort_scaling", cohort_scaling),    # enables x64: keep last
+        ("staleness_sweep", staleness_sweep),  # also x64
         ("topology_sweep", topology_sweep),    # also x64
     ]:
         t = time.time()

@@ -153,11 +153,21 @@ class FedScenario:
     to the interior edge->root tier uplinks (``"shift:q8"`` compresses
     the FULL uplink end to end), with per-hop bit-true accounting.
 
+    ``cohort`` is a spec string (or int) for
+    :func:`repro.core.engine.parse_cohort` — ``"none"`` (dense: every
+    round touches all N client rows), ``256`` / ``"256"`` (uniformly
+    sampled cohort of that size), ``"block:256"`` / ``"rr:256"``
+    (contiguous-block / round-robin selectors), optional trailing
+    ``":dense"`` to force the dense reference lowering. With a cohort
+    the round's per-client work is O(cohort): the engine gathers the
+    sampled rows from the server-side client-state store, runs the local
+    scan on the cohort only, and scatters updates back.
+
     ``apply`` composes the scenario onto ANY engine algorithm — the same
     expression the simulation tests pin, now reachable from the production
     LM loop (`launch/train.py --compression ... --participation ...
     --delay ... --stale-policy ... --topology ... --tier-compression
-    ...`)."""
+    ... --cohort ...`)."""
 
     compression: str = "none"
     participation: float = 1.0
@@ -166,12 +176,14 @@ class FedScenario:
     topology: str = "star"
     tier_compression: str = "none"
     error_feedback: bool | None = None
+    cohort: int | str | None = "none"
     seed: int = 0
 
     def apply(self, algo):
         from repro.core.compressors import from_spec
-        from repro.core.engine import (with_compression, with_delay,
-                                       with_participation, with_topology)
+        from repro.core.engine import (with_cohort, with_compression,
+                                       with_delay, with_participation,
+                                       with_topology)
 
         algo = with_topology(algo, self.topology, seed=self.seed,
                              tier_compression=self.tier_compression)
@@ -181,8 +193,11 @@ class FedScenario:
             algo = with_compression(algo, compressor=comp,
                                     error_feedback=self.error_feedback,
                                     seed=self.seed)
-        return with_delay(algo, self.delay, policy=self.stale_policy,
+        algo = with_delay(algo, self.delay, policy=self.stale_policy,
                           seed=self.seed)
+        # cohort last: it wraps the fully-composed spec so every transform
+        # above runs inside the O(cohort) gathered round.
+        return with_cohort(algo, self.cohort, seed=self.seed)
 
 
 @dataclasses.dataclass(frozen=True)

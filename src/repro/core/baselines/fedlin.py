@@ -66,6 +66,14 @@ class FedLin(RoundEngine):
                          if self.k_frac < 1.0 else 1.0)
         return (g_bits + self._transforms_bits(32.0)) / 2.0
 
+    @property
+    def cohort_compatible(self) -> bool:
+        """FedLin's own top-k sparsifies ACROSS the stacked client axis
+        (``topk_sparsify`` over the full uplink-gradient leaf) — that
+        selection is population-global, so the spec rejects cohort
+        execution unless it is dense (``k_frac=1`` = FedTrack)."""
+        return self.k_frac >= 1.0
+
     def init_warmup(self, gf, x0, init_batch):
         del gf, init_batch
         x = replicate(x0, self.n_clients)

@@ -76,11 +76,53 @@ algorithm without forking its round body, and compose in either order::
   topologies (per-round resampled graphs) ride a
   :class:`repro.core.topology.TopoState` in ``EngineState`` extras, just
   before the delay buffer. See topology.py.
+* ``with_cohort`` makes per-round WORK O(cohort) instead of O(N): the full
+  per-client state (FedCET's ``d_i``, SCAFFOLD's ``c_i``, error-feedback /
+  shift memory, the delay buffer) stays server-side as the sharded
+  client-state store, and each round the engine gathers the sampled
+  cohort's rows into a fixed-shape ``[cohort, ...]`` batch, runs
+  ``begin_round`` / the local scan / ``message`` on the cohort only, and
+  scatters the updated rows back — all inside the jitted round step
+  (static shapes, checkpoint/resume-stable; the cohort index is derived
+  from the step counter through a domain-separated PRNG stream). See
+  `Cohort execution` below.
 
-All four factories are EXACT no-ops at their identity settings
+Cohort execution
+----------------
+:class:`CohortSpec` splits the round into two phases. Phase A is the
+per-client compute (``begin_round``, the tau-1 local scan, ``message``) —
+row-wise vmapped work whose per-row values are independent of the batch
+size, so running it on the gathered ``[cohort, ...]`` rows (the default
+``lowering="gather"``) or on the full ``[N, ...]`` store and gathering the
+results afterwards (``lowering="dense"``, the O(N) reference the
+equivalence tests pin against) yields identical cohort rows. Phase B is
+everything cross-client — message transforms, the delay buffer update, the
+weighted reduction, ``server_aggregate``, the participation freeze — and
+ALWAYS runs on cohort-sized arrays in BOTH lowerings, so the two lowerings
+agree bitwise and cross-client compressors (shared-scale quantizers,
+cross-client top-k) are simply defined OVER THE COHORT. Composition:
+``with_participation`` becomes a Bernoulli mask over the cohort slots
+(absent members freeze, exactly the dense discipline), ``with_delay``
+buffers index by GLOBAL client id (non-sampled clients' buffered messages
+keep aging; ``fresh_mask`` is evaluated at global ids so rr/fixed
+schedules are client-stable), hierarchical topologies reduce the cohort
+through :meth:`~repro.core.topology.Topology.reduce_cohort` (first-tier
+segment ids gathered at the cohort's global ids, so every edge aggregator
+still sees exactly its own members), and CommMeter bills uplink AND
+present-only downlink at the ``cohort/N`` duty cycle. Gossip mixing has no
+server to sample a cohort — ``with_cohort`` rejects it — and FedLin's
+spec-internal cross-client top-k (``k_frac < 1``) is rejected via
+``cohort_compatible``. The store scatter is ``x.at[idx].set(rows)`` on
+every ``[N, ...]`` leaf: donate the round carry
+(``make_round_runner(..., donate=True)``, the launch default) so XLA
+updates the store in place instead of copying O(N) state per round —
+benchmarks/cohort_scaling.py pins round time ~flat in N at fixed cohort.
+
+All five factories are EXACT no-ops at their identity settings
 (``rate >= 1.0``; ``k_frac >= 1.0 and not quantize``; delay ``fixed:0`` /
-``rr:0`` / ``geom:1`` / ``none``; topology ``star``): they return the
-algorithm object unchanged.
+``rr:0`` / ``geom:1`` / ``none``; topology ``star``; cohort ``none`` /
+``0`` / ``size >= n_clients``): they return the algorithm object
+unchanged.
 
 The shared multi-round driver
 -----------------------------
@@ -164,6 +206,132 @@ def select_clients(new, old, mask: jax.Array, n_clients: int):
         return n
 
     return jax.tree.map(sel, new, old)
+
+
+# --------------------------------------------------------------------- cohort
+#: domain-separation tag folded into cohort-selection keys so the cohort
+#: stream never collides with the participation (bare seed), compression
+#: (0x7A11A5 + index), delay (0x57A1E) or topology (0x70_70 / 0x71_E5)
+#: schedules at the default seed=0.
+_COHORT_KEY_TAG = 0xC0_807
+
+
+def gather_clients(tree, idx: jax.Array, n_clients: int):
+    """Gather the ``idx`` rows of every per-client leaf (leading
+    ``n_clients`` axis) of the client-state store; leaves without the
+    client axis (global scalars like the step counter, ``[1, ...]``
+    broadcast means) pass through unchanged."""
+
+    def g(a):
+        if getattr(a, "ndim", 0) >= 1 and a.shape[0] == n_clients:
+            return a[idx]
+        return a
+
+    return jax.tree.map(g, tree)
+
+
+def scatter_clients(store, rows, idx: jax.Array, n_clients: int):
+    """Scatter updated cohort ``rows`` back into the client-state store:
+    per-client store leaves take ``store.at[idx].set(row)``; all other
+    leaves (global scalars) take the cohort's value unconditionally —
+    the mirror of :func:`select_clients`'s convention."""
+
+    def s(o, r):
+        if getattr(o, "ndim", 0) >= 1 and o.shape[0] == n_clients:
+            return o.at[idx].set(r)
+        return r
+
+    return jax.tree.map(s, store, rows)
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortSpec:
+    """Per-round cohort selection for O(cohort) round execution.
+
+    ``selector`` picks which ``size`` global client ids train each round
+    (all derived from the round-entry step counter, so the schedule is
+    deterministic and checkpoint/resume-stable):
+
+    * ``"uniform"`` — a uniformly random size-subset without replacement
+      (``jax.random.permutation`` — O(N log N) selection work per round,
+      O(cohort) everything else);
+    * ``"block"`` — a contiguous block at a random offset (O(cohort)
+      selection — the default for the scaling benchmark);
+    * ``"rr"`` — round-robin blocks ``[r*size, (r+1)*size) mod N``
+      (deterministic, key-free — every client trains once per N/size
+      rounds).
+
+    ``lowering`` selects the execution strategy: ``"gather"`` (gather the
+    cohort rows, run phase A on ``[size, ...]`` — the O(cohort) path) or
+    ``"dense"`` (run phase A on the full ``[N, ...]`` store and gather the
+    results — the O(N) reference both benchmarks and equivalence tests
+    compare against; phase B is cohort-sized either way, so the two agree
+    bitwise)."""
+
+    size: int
+    selector: str = "uniform"
+    seed: int = 0
+    lowering: str = "gather"
+
+    def __post_init__(self):
+        if self.size < 1:
+            raise ValueError(f"cohort size must be >= 1: {self.size}")
+        if self.selector not in ("uniform", "block", "rr"):
+            raise ValueError(f"unknown cohort selector {self.selector!r} "
+                             "(uniform | block | rr)")
+        if self.lowering not in ("gather", "dense"):
+            raise ValueError(f"unknown cohort lowering {self.lowering!r} "
+                             "(gather | dense)")
+
+    def indices(self, step, tau: int, n_clients: int) -> jax.Array:
+        """The round's sorted-free ``[size] int32`` global client ids,
+        keyed by the round-entry step counter ``step`` (advanced by
+        exactly ``tau`` per round — restart-stable)."""
+        m = self.size
+        if self.selector == "rr":
+            r = jnp.asarray(step, jnp.int32) // tau
+            return (r * m + jnp.arange(m, dtype=jnp.int32)) % n_clients
+        key = jax.random.fold_in(jax.random.key(self.seed), _COHORT_KEY_TAG)
+        key = jax.random.fold_in(key, jnp.asarray(step, jnp.int32))
+        if self.selector == "block":
+            off = jax.random.randint(key, (), 0, n_clients, dtype=jnp.int32)
+            return (off + jnp.arange(m, dtype=jnp.int32)) % n_clients
+        return jax.random.permutation(key, n_clients)[:m].astype(jnp.int32)
+
+
+def parse_cohort(spec):
+    """Parse a cohort spec; returns ``None`` for identity specs (``None`` /
+    ``"none"`` / ``"off"`` / ``"full"`` / ``0``) so ``with_cohort`` can be
+    an exact no-op, like every other transform factory.
+
+    Grammar: an int, ``"256"``, ``"uniform:256"``, ``"block:256"``,
+    ``"rr:256"``, with an optional trailing ``":dense"`` / ``":gather"``
+    lowering selector (``"block:256:dense"``)."""
+    if spec is None or isinstance(spec, CohortSpec):
+        return spec
+    if isinstance(spec, int):
+        return CohortSpec(size=spec) if spec > 0 else None
+    s = str(spec).strip().lower()
+    if s in ("", "none", "off", "full", "0"):
+        return None
+    parts = s.split(":")
+    lowering = "gather"
+    if parts[-1] in ("gather", "dense"):
+        lowering = parts.pop()
+    if len(parts) == 1:
+        selector, size = "uniform", parts[0]
+    elif len(parts) == 2:
+        selector, size = parts
+    else:
+        raise ValueError(f"bad cohort spec {spec!r} "
+                         "(try 256, block:256, rr:256, block:256:dense)")
+    try:
+        size_i = int(size)
+    except ValueError:
+        raise ValueError(f"bad cohort size in spec {spec!r}: {size!r}")
+    if size_i <= 0:
+        return None
+    return CohortSpec(size=size_i, selector=selector, lowering=lowering)
 
 
 # ---------------------------------------------------------------- transforms
@@ -325,6 +493,9 @@ class RoundEngine:
     #: aggregation geometry (hierarchical tiers / gossip mixing); attach via
     #: ``with_topology`` — see repro/core/topology.py. None = the flat star.
     topology: Any | None = dataclasses.field(default=None, kw_only=True)
+    #: O(cohort) round execution (gather/scatter on the sharded client-state
+    #: store); attach via ``with_cohort``. None = every client trains.
+    cohort: CohortSpec | None = dataclasses.field(default=None, kw_only=True)
     #: mesh axes carrying the client dimension (production launcher only).
     spmd_client_axes: tuple = dataclasses.field(default=(), kw_only=True)
 
@@ -406,8 +577,11 @@ class RoundEngine:
         present`` (an absent client cannot deliver), and the two schedules
         are independent PRNG streams, so the expectations multiply.
         (The participation factor ignores the non-empty-mask fallback's
-        tiny upward correction at very low rates.)"""
-        frac = 1.0
+        tiny upward correction at very low rates.) With a cohort attached
+        only its ``size/N`` slice of clients computes at all — non-sampled
+        clients transmit ZERO uplink bits, so the duty cycle multiplies
+        by the cohort fraction."""
+        frac = self._cohort_frac
         if self.sampling is not None:
             frac *= min(self.sampling.rate, 1.0)
         if self.delay is not None:
@@ -422,8 +596,28 @@ class RoundEngine:
         frozen replica instead of receiving a phantom broadcast, so
         CommMeter bills downlink bytes at the participation rate. Delay
         models do not reduce downlink: stale-but-present clients still
-        apply the (buffered-mean) update, which still has to reach them."""
-        return min(self.sampling.rate, 1.0) if self.sampling is not None else 1.0
+        apply the (buffered-mean) update, which still has to reach them.
+        A cohort is present-only downlink taken to its O(cohort)
+        conclusion: only the sampled ``size/N`` slice receives anything,
+        so the cohort fraction multiplies here too."""
+        frac = self._cohort_frac
+        if self.sampling is not None:
+            frac *= min(self.sampling.rate, 1.0)
+        return frac
+
+    @property
+    def _cohort_frac(self) -> float:
+        return (self.cohort.size / self.n_clients
+                if self.cohort is not None else 1.0)
+
+    @property
+    def cohort_compatible(self) -> bool:
+        """Whether this spec's own math is cohort-safe: True unless the
+        spec performs a CROSS-CLIENT computation outside the engine's
+        phase-B seam (FedLin's internal cross-client top-k overrides
+        this). Engine-level transforms need no flag — they always run on
+        the gathered cohort rows."""
+        return True
 
     # ------------------------------------------------------- state wrapping
     @property
@@ -557,12 +751,14 @@ class RoundEngine:
             msg, _ = t.apply(msg, e, inner.t)
         return msg
 
-    def _topo_weights(self, mask):
+    def _topo_weights(self, mask, n: int | None = None):
         """The per-client weight vector a topology reduces under on
-        non-delayed rounds: uniform, or the participation mask."""
+        non-delayed rounds: uniform, or the participation mask. ``n``
+        overrides the vector length (cohort rounds reduce over the
+        cohort slots, not the full population)."""
         ft = jax.dtypes.canonicalize_dtype(jnp.float64)
         return (mask.astype(ft) if mask is not None
-                else jnp.ones((self.n_clients,), ft))
+                else jnp.ones((n if n is not None else self.n_clients,), ft))
 
     def _aggregator(self, mask, tstate):
         """The round's READ-ONLY cross-client reduction (fed to
@@ -577,6 +773,17 @@ class RoundEngine:
         if mask is not None:
             return lambda tr: masked_client_mean(tr, mask)
         return tree_client_mean
+
+    def _cohort_aggregator(self, mask, idx, tstate):
+        """The cohort round's READ-ONLY reduction over the gathered
+        ``[cohort, ...]`` rows: the topology's cohort reduce (fed the
+        cohort's GLOBAL ids so hierarchies route each member to its own
+        edge aggregator) or the weighted cohort mean."""
+        w = self._topo_weights(mask, self.cohort.size)
+        if self.topology is not None:
+            return lambda tr: self.topology.reduce_cohort(
+                tr, w, idx, self.n_clients, tstate)
+        return lambda tr: weighted_client_mean(tr, w)
 
     # -------------------------------------------------------------- protocol
     def init(self, grad_fn: GradFn, x0, init_batch):
@@ -620,7 +827,13 @@ class RoundEngine:
         ``batches`` leaves have leading ``[tau, clients, ...]`` axes. The
         scan keeps the lowered HLO small for multi-B parameter models; the
         aggregation sits OUTSIDE the scan so the cross-pod all-reduce
-        appears exactly once per round in the HLO."""
+        appears exactly once per round in the HLO.
+
+        With a cohort attached the round dispatches to
+        :meth:`_cohort_round` — same state layout, same hooks, O(cohort)
+        work."""
+        if self.cohort is not None:
+            return self._cohort_round(grad_fn, state, batches)
         gf = self._grad(grad_fn)
         inner, extras, tstate, dstate = self._split(state)
 
@@ -663,6 +876,138 @@ class RoundEngine:
             extras = tuple(select_clients(e, fe, mask, self.n_clients)
                            for e, fe in zip(extras, frozen_extras))
         return self._wrap(inner, extras, tstate, dstate)
+
+    def _cohort_round(self, grad_fn: GradFn, state, batches):
+        """One O(cohort) communication round (see the module docstring's
+        `Cohort execution`): select the cohort's global ids, gather their
+        rows from the client-state store, run phase A (per-client compute)
+        on the cohort, run phase B (all cross-client work) on cohort-sized
+        arrays, scatter the updated rows back. Non-cohort clients are
+        untouched except for server-side aging of their delay-buffer
+        entries — exactly how the dense engine treats absent clients."""
+        gf = self._grad(grad_fn)
+        inner, extras, tstate, dstate = self._split(state)
+        N, m, tau = self.n_clients, self.cohort.size, self.tau
+
+        step0 = inner.t  # round-entry counter: keys cohort, masks, dither
+        idx = self.cohort.indices(step0, tau, N)
+        mask = None
+        if self.sampling is not None:
+            # Bernoulli participation WITHIN the cohort: a sampled-but-
+            # absent member freezes, like any absent client in dense mode.
+            key = jax.random.fold_in(jax.random.key(self.sampling.seed),
+                                     jnp.asarray(step0, jnp.int32))
+            mask = participation_mask(key, m, self.sampling.rate)
+        fresh = None
+        if self.delay is not None:
+            # delay schedules key off GLOBAL client ids (an rr straggler
+            # stays the same physical client whichever round samples it).
+            fresh = self.delay.fresh_mask(step0, tau, N)[idx]
+            if mask is not None:
+                fresh = jnp.logical_and(fresh, mask)
+        agg = self._cohort_aggregator(mask, idx, tstate)
+
+        frozen_inner = gather_clients(inner, idx, N)  # pre-round rows
+        extras_c = tuple(gather_clients(e, idx, N) for e in extras)
+
+        # ---- phase A: per-client compute (begin_round -> scan -> message)
+        if self.cohort.lowering == "dense":
+            # O(N) reference lowering: every client computes, only the
+            # cohort's rows feed phase B. Row-wise vmapped compute is
+            # batch-size independent, so the gathered results match the
+            # gather lowering bitwise.
+            dense_agg = lambda tr: agg(gather_clients(tr, idx, N))  # noqa: E731
+            first_b = jax.tree.map(lambda b: b[0], batches)
+            st, rctx = self.begin_round(gf, inner, first_b, dense_agg)
+            if tau > 1:
+                local_b = jax.tree.map(lambda b: b[: tau - 1], batches)
+                st, _ = jax.lax.scan(
+                    lambda s, b: (self.local_step(gf, s, b, rctx), None),
+                    st, local_b)
+            last_b = jax.tree.map(lambda b: b[tau - 1], batches)
+            msg, mctx = self.message(gf, st, last_b, rctx)
+            inner_c = gather_clients(st, idx, N)
+            msg_c = gather_clients(msg, idx, N)
+            mctx_c = gather_clients(mctx, idx, N)
+            rctx_c = gather_clients(rctx, idx, N)
+            last_b_c = gather_clients(last_b, idx, N)
+        else:
+            inner_c = gather_clients(inner, idx, N)
+            batches_c = jax.tree.map(
+                lambda b: (b[:, idx] if getattr(b, "ndim", 0) >= 2
+                           and b.shape[1] == N else b), batches)
+            first_b = jax.tree.map(lambda b: b[0], batches_c)
+            inner_c, rctx_c = self.begin_round(gf, inner_c, first_b, agg)
+            if tau > 1:
+                local_b = jax.tree.map(lambda b: b[: tau - 1], batches_c)
+                inner_c, _ = jax.lax.scan(
+                    lambda s, b: (self.local_step(gf, s, b, rctx_c), None),
+                    inner_c, local_b)
+            last_b_c = jax.tree.map(lambda b: b[tau - 1], batches_c)
+            msg_c, mctx_c = self.message(gf, inner_c, last_b_c, rctx_c)
+
+        # ---- phase B: transforms -> [buffer] -> reduce -> apply, all on
+        # cohort-sized arrays in BOTH lowerings (shared code = bitwise
+        # lowering equivalence; cross-client ops are per-cohort by design).
+        tx_c = msg_c
+        new_extras_c = []
+        for t, e in zip(self.transforms, extras_c):
+            tx_c, e = t.apply(tx_c, e, step0)
+            new_extras_c.append(e)
+        new_extras_c = tuple(new_extras_c)
+
+        if dstate is None:
+            if self.topology is not None:
+                msg_bar, tstate = self.topology.reduce_cohort_and_advance(
+                    tx_c, self._topo_weights(mask, m), idx, N, tstate)
+            else:
+                msg_bar = weighted_client_mean(
+                    tx_c, self._topo_weights(mask, m))
+            inner_c = self.server_aggregate(inner_c, tx_c, msg_bar,
+                                            mctx_c, rctx_c)
+            dstate_next = None
+        else:
+            buf_c = gather_clients(dstate.buf, idx, N)
+            buf_c = select_clients(tx_c, buf_c, fresh, m)
+            age_c = jnp.where(fresh, 0, dstate.age[idx] + 1
+                              ).astype(dstate.age.dtype)
+            w = self.delay.policy.weights(age_c, fresh)
+            if self.topology is not None:
+                msg_bar, tstate = self.topology.reduce_cohort_and_advance(
+                    buf_c, w, idx, N, tstate)
+            else:
+                msg_bar = weighted_client_mean(buf_c, w)
+            agg_inner_c = self.server_aggregate(inner_c, buf_c, msg_bar,
+                                                mctx_c, rctx_c)
+            if not self.delay.policy.apply_stale:
+                local = self.local_step(gf, inner_c, last_b_c, rctx_c)
+                agg_inner_c = select_clients(agg_inner_c, local, fresh, m)
+            inner_c = agg_inner_c
+            new_extras_c = tuple(select_clients(ne, e, fresh, m)
+                                 for ne, e in zip(new_extras_c, extras_c))
+            # the buffer is server state: every non-cohort entry keeps
+            # aging (its owner could not deliver), cohort entries land.
+            dstate_next = DelayState(
+                buf=jax.tree.map(
+                    lambda o, r: (o.at[idx].set(r)
+                                  if getattr(o, "ndim", 0) >= 1
+                                  and o.shape[0] == N else r),
+                    dstate.buf, buf_c),
+                age=(dstate.age + 1).astype(dstate.age.dtype
+                                            ).at[idx].set(age_c))
+
+        if mask is not None:
+            # absent cohort members keep their pre-round rows entirely
+            # (the dense engine's participation freeze, per-cohort).
+            inner_c = select_clients(inner_c, frozen_inner, mask, m)
+            new_extras_c = tuple(select_clients(e, fe, mask, m)
+                                 for e, fe in zip(new_extras_c, extras_c))
+
+        # ---- scatter the cohort rows back into the client-state store
+        inner_next = scatter_clients(inner, inner_c, idx, N)
+        extras_next = tuple(scatter_clients(e, ec, idx, N)
+                            for e, ec in zip(extras, new_extras_c))
+        return self._wrap(inner_next, extras_next, tstate, dstate_next)
 
 
 # ------------------------------------------------------- transform factories
@@ -782,12 +1127,62 @@ def with_topology(algo: RoundEngine, topology, *, seed: int = 0,
         raise ValueError("algorithm already has a topology attached "
                          f"({algo.topology!r}); stacked topologies are "
                          "undefined")
+    if algo.cohort is not None and not topo.supports_cohort:
+        raise ValueError(
+            f"topology {topo!r} does not support cohort execution (gossip "
+            "mixing has no server to sample a cohort — every node exchanges "
+            "with its neighbors every round)")
     return dataclasses.replace(algo, topology=topo)
+
+
+def with_cohort(algo: RoundEngine, cohort, *, seed: int = 0) -> RoundEngine:
+    """O(cohort) round execution for ANY engine algorithm: keep the
+    per-client state server-side and run each round on a gathered
+    fixed-shape cohort only (see the module docstring's `Cohort
+    execution`).
+
+    ``cohort`` is a size (int), a spec string (``"256"``,
+    ``"block:256"``, ``"rr:256"``, optional trailing ``":dense"`` for the
+    O(N) reference lowering) or a :class:`CohortSpec`; ``seed`` keys the
+    stochastic selectors (domain-separated from every other engine
+    stream). Identity specs (``None`` / ``"none"`` / ``0`` / ``size >=
+    n_clients`` — the whole population trains anyway) are exact no-ops:
+    the algorithm object is returned unchanged.
+
+    Composition: attach the cohort LAST (after compression /
+    participation / delay / topology) — the factory validates the
+    already-attached axes. Gossip mixing topologies and specs whose own
+    math crosses clients outside the engine seam (``cohort_compatible``
+    False — FedLin with ``k_frac < 1``) are rejected."""
+    spec = cohort if isinstance(cohort, CohortSpec) else parse_cohort(cohort)
+    if spec is not None and not isinstance(cohort, CohortSpec):
+        spec = dataclasses.replace(spec, seed=seed)
+    if spec is None or spec.size >= algo.n_clients:
+        if spec is not None and spec.size > algo.n_clients:
+            raise ValueError(f"cohort size {spec.size} exceeds "
+                             f"n_clients={algo.n_clients}")
+        return algo
+    if algo.cohort is not None:
+        raise ValueError("algorithm already has a cohort attached "
+                         f"({algo.cohort!r}); stacked cohorts are undefined")
+    if not algo.cohort_compatible:
+        raise ValueError(
+            f"{algo.name} is not cohort-compatible: its spec performs a "
+            "cross-client computation outside the engine's aggregation "
+            "seam (FedLin's internal cross-client top-k needs the full "
+            "population — use k_frac=1.0 / FedTrack, or move compression "
+            "to with_compression)")
+    if algo.topology is not None and not algo.topology.supports_cohort:
+        raise ValueError(
+            f"topology {algo.topology!r} does not support cohort execution "
+            "(gossip mixing has no server to sample a cohort)")
+    return dataclasses.replace(algo, cohort=spec)
 
 
 # --------------------------------------------------------- multi-round driver
 def make_round_runner(algo, grad_fn: GradFn, *, metric_fn=None,
-                      repeat: bool = False, metric_with_batch: bool = False):
+                      repeat: bool = False, metric_with_batch: bool = False,
+                      donate: bool = False):
     """Build the jitted K-round scan over ``algo.round``.
 
     * ``repeat=False`` (default): the returned ``run(state, batches)`` scans
@@ -801,12 +1196,22 @@ def make_round_runner(algo, grad_fn: GradFn, *, metric_fn=None,
     called as ``metric_fn(state, round_batches)`` instead (the per-round
     ``[tau, clients, ...]`` pytree) — this is how ``FedTrainer.fit`` keeps
     its eval-loss series on-device inside the scan. Keep ONE runner per
-    training loop: jit caching is per function instance."""
+    training loop: jit caching is per function instance.
+
+    ``donate=True`` donates the state argument (``donate_argnums=(0,)``)
+    so the carry aliases in/out — for a cohort algorithm the scatter back
+    into the ``[N, ...]`` client-state store then updates IN PLACE instead
+    of copying O(N) state per call, which is what keeps round time
+    O(cohort) and peak memory ~1x the store. The caller must rebind
+    (``state = run(state, ...)``) and never touch the donated value again
+    — callers that re-read the input state afterwards (e.g.
+    ``simulate_quadratic``'s err(state0)) must keep the default."""
     def _metric(s, b):
         if metric_fn is None:
             return None
         return metric_fn(s, b) if metric_with_batch else metric_fn(s)
 
+    donate_kw = {"donate_argnums": (0,)} if donate else {}
     if repeat:
         def run(state, batches, rounds):
             def body(s, _):
@@ -815,7 +1220,7 @@ def make_round_runner(algo, grad_fn: GradFn, *, metric_fn=None,
 
             return jax.lax.scan(body, state, None, length=rounds)
 
-        return jax.jit(run, static_argnums=2)
+        return jax.jit(run, static_argnums=2, **donate_kw)
 
     def run(state, batches):
         def body(s, b):
@@ -824,7 +1229,7 @@ def make_round_runner(algo, grad_fn: GradFn, *, metric_fn=None,
 
         return jax.lax.scan(body, state, batches)
 
-    return jax.jit(run)
+    return jax.jit(run, **donate_kw)
 
 
 def scan_segments(start: int, total: int, is_boundary, *, max_rounds: int = 32):

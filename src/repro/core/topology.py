@@ -213,6 +213,12 @@ class Topology:
     #: does ``init_state`` need the (abstract) message tree to shape its
     #: state (hierarchies with stateful tier compression)?
     needs_msg_shapes = False
+    #: can this topology reduce a GATHERED cohort (``with_cohort``)? True
+    #: for server-rooted geometries (star, hierarchical — the reduction is
+    #: a weighted mean, well-defined over any client subset); False for
+    #: gossip mixing, where every node exchanges with its neighbors every
+    #: round and there is no server to sample a cohort.
+    supports_cohort = False
 
     # --------------------------------------------------------------- state
     def init_state(self, msg_shapes=None) -> TopoState | None:
@@ -241,6 +247,23 @@ class Topology:
         their memory from the partial means they just transmitted).
         Returns ``(aggregate, next_tstate)``."""
         return self.reduce(tree, w, tstate), self.advance(tstate)
+
+    def reduce_cohort(self, tree, w: jax.Array, idx: jax.Array,
+                      n_clients: int, tstate: TopoState | None = None):
+        """Reduce a GATHERED ``[cohort, ...]`` tree under cohort-slot
+        weights ``w``; ``idx`` carries the cohort's GLOBAL client ids (a
+        hierarchy routes each member to the edge aggregator its global id
+        belongs to). READ-ONLY, like :meth:`reduce`. Only topologies with
+        ``supports_cohort`` implement this."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support cohort execution")
+
+    def reduce_cohort_and_advance(self, tree, w: jax.Array, idx: jax.Array,
+                                  n_clients: int,
+                                  tstate: TopoState | None = None):
+        """Cohort counterpart of :meth:`reduce_and_advance`."""
+        return (self.reduce_cohort(tree, w, idx, n_clients, tstate),
+                self.advance(tstate))
 
     # ----------------------------------------------------------- accounting
     def client_up_mult(self, n_clients: int) -> float:
@@ -277,8 +300,16 @@ class Star(Topology):
     pin it trajectory-identical to the bare engine. ``with_topology``
     never attaches it (star specs are identity shortcuts)."""
 
+    supports_cohort = True
+
     def reduce(self, tree, w, tstate=None):
         del tstate
+        return weighted_client_mean(tree, w)
+
+    def reduce_cohort(self, tree, w, idx, n_clients, tstate=None):
+        """The star reduces any client subset identically: the weighted
+        mean over whoever transmitted."""
+        del idx, n_clients, tstate
         return weighted_client_mean(tree, w)
 
 
@@ -372,17 +403,27 @@ class Hierarchical(Topology):
                                  _TIER_KEY_TAG + t_i)
         return jax.random.fold_in(key, jnp.asarray(k, jnp.int32))
 
-    def _reduce_impl(self, tree, w, tstate):
+    def _reduce_impl(self, tree, w, tstate, seg0=None, n_total=None):
         """Shared tier walk; returns ``(aggregate, new tier memory)`` —
         the caller decides whether the memory update is kept
-        (``reduce_and_advance``) or discarded (read-only ``reduce``)."""
-        n = w.shape[0]
+        (``reduce_and_advance``) or discarded (read-only ``reduce``).
+
+        ``seg0``/``n_total`` are the cohort entry point: ``tree``/``w``
+        are cohort rows, ``seg0`` maps each row to its GLOBAL first-tier
+        aggregator (the static segment table gathered at the cohort's
+        global ids), and the tier structure is sized from ``n_total`` —
+        so tier shapes (and the per-tier compressor memory) are identical
+        whether the full population or a cohort feeds the tree, and edge
+        aggregators with no cohort member contribute zero weight (the
+        existing ``wsum > 0`` guard)."""
+        n = n_total if n_total is not None else w.shape[0]
         comp = self.tier_compression
         k = tstate.k if tstate is not None else jnp.zeros((), jnp.int32)
         vals, wt, cur = tree, w, n
         new_mem = []
         for t_i, g in enumerate(self._tiers(n)):
-            ids = self._segments(cur, g)
+            ids = (seg0 if t_i == 0 and seg0 is not None
+                   else self._segments(cur, g))
             wsum = jax.ops.segment_sum(wt, ids, num_segments=g)
             denom = jnp.where(wsum > 0, wsum, 1.0)
 
@@ -417,14 +458,41 @@ class Hierarchical(Topology):
     def reduce(self, tree, w, tstate=None):
         return self._reduce_impl(tree, w, tstate)[0]
 
-    def reduce_and_advance(self, tree, w, tstate=None):
-        out, mem = self._reduce_impl(tree, w, tstate)
+    def _advanced(self, tstate, mem):
         if not self.stateful:
-            return out, None
+            return None
         k = tstate.k if tstate is not None else jnp.zeros((), jnp.int32)
         tier = mem if self.needs_msg_shapes else (
             tstate.tier if tstate is not None else None)
-        return out, TopoState(k=k + 1, tier=tier)
+        return TopoState(k=k + 1, tier=tier)
+
+    def reduce_and_advance(self, tree, w, tstate=None):
+        out, mem = self._reduce_impl(tree, w, tstate)
+        return out, self._advanced(tstate, mem)
+
+    # -------------------------------------------------------------- cohort
+    supports_cohort = True
+
+    def _seg0(self, idx, n_clients: int):
+        """Each cohort member's GLOBAL first-tier aggregator id: the
+        static full-population segment table gathered at the cohort's
+        (traced) global ids."""
+        tiers = self._tiers(n_clients)
+        if not tiers:
+            return None
+        return self._segments(n_clients, tiers[0])[idx]
+
+    def reduce_cohort(self, tree, w, idx, n_clients, tstate=None):
+        return self._reduce_impl(tree, w, tstate,
+                                 seg0=self._seg0(idx, n_clients),
+                                 n_total=n_clients)[0]
+
+    def reduce_cohort_and_advance(self, tree, w, idx, n_clients,
+                                  tstate=None):
+        out, mem = self._reduce_impl(tree, w, tstate,
+                                     seg0=self._seg0(idx, n_clients),
+                                     n_total=n_clients)
+        return out, self._advanced(tstate, mem)
 
     # ----------------------------------------------------------- accounting
     def aggregator_hops(self, n_clients: int) -> tuple:

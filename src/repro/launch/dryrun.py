@@ -59,7 +59,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
         from repro.launch.train import lower_train_step, make_plan
 
         plan = make_plan(arch, mesh, shape_name=shape_name)
-        lowered = lower_train_step(plan)
+        # donation off: CPU memory_analysis double-counts aliased carries,
+        # and the dry-run's recorded numbers predate donation.
+        lowered = lower_train_step(plan, donate=False)
     elif shape.kind == "prefill":
         from repro.launch.serve import lower_prefill
 

@@ -154,8 +154,16 @@ def build_round_fn(plan: TrainPlan) -> Callable:
     return train_round
 
 
-def lower_train_step(plan: TrainPlan):
-    """AOT lower + compile the FedCET round on the production mesh."""
+def lower_train_step(plan: TrainPlan, *, donate: bool = True):
+    """AOT lower + compile the FedCET round on the production mesh.
+
+    ``donate`` aliases the state argument into the output so the stacked
+    client store ((x, d), transform extras, delay buffers) updates in
+    place instead of doubling peak memory at large N — essential once the
+    cohort path scatters into an O(N)-row store. The dry-run path passes
+    ``donate=False``: on the CPU backend, ``memory_analysis`` double-counts
+    the aliased while-carry, so recorded numbers stay donation-free
+    (EXPERIMENTS.md §Dry-run)."""
     mesh = plan.mesh
     state_shapes = abstract_state(plan)
     batch_shapes = ispec.fed_batch_specs(
@@ -183,12 +191,9 @@ def lower_train_step(plan: TrainPlan):
         with activation_sharding(residual=P(_fsdp(plan), "model", None),
                                  logits=P(_fsdp(plan), None, "model"),
                                  moe_shards=moe):
-            # NB: production launches add donate_argnums=(0,) to alias the
-            # (x, d) state in/out; on the CPU dry-run backend donation makes
-            # memory_analysis double-count the aliased while-carry, so the
-            # recorded numbers here are without it (EXPERIMENTS.md §Dry-run).
             lowered = jax.jit(
                 fn, in_shardings=(st_sh, b_sh), out_shardings=st_sh,
+                donate_argnums=(0,) if donate else (),
             ).lower(state_shapes, batch_shapes)
     return lowered
 
@@ -201,6 +206,7 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
                  compression: str = "none", participation: float = 1.0,
                  delay: str = "none", stale_policy: str = "last",
                  topology: str = "star", tier_compression: str = "none",
+                 cohort: int | str | None = "none",
                  log_every: int = 10, ckpt_dir: str | None = None,
                  callback=None) -> dict:
     """End-to-end FedCET LM training on the host device(s). Returns metrics
@@ -220,7 +226,10 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
     metering is bit-true from the resulting compressor stack, the delay
     model's uplink duty cycle, the sampling rate's downlink duty cycle,
     and the topology's per-hop traffic shape (compressed interior tiers
-    included)."""
+    included). ``cohort`` (``"none"`` | ``256`` | ``"block:256"`` |
+    ``"rr:256"``) runs each round on a gathered fixed-size cohort of the
+    client-state store — O(cohort) per-round work with only the cohort's
+    uplink billed."""
     from repro.checkpoint.ckpt import save
     from repro.core.comm import CommMeter
     from repro.data.synthetic import make_hetero_lm_dataset
@@ -233,7 +242,8 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
     scenario = FedScenario(compression=compression,
                            participation=participation, delay=delay,
                            stale_policy=stale_policy, topology=topology,
-                           tier_compression=tier_compression, seed=seed)
+                           tier_compression=tier_compression, cohort=cohort,
+                           seed=seed)
     algo = scenario.apply(FedCET(alpha=alpha, c=c, tau=tau, n_clients=n_clients))
     ds = make_hetero_lm_dataset(cfg.vocab_size, n_clients, seq_len, batch,
                                 heterogeneity=heterogeneity, seed=seed)
@@ -245,8 +255,11 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
 
     state = algo.init(grad_fn, params, jax.tree.map(lambda b: b[0], batches_for(0)))
     # the shared multi-round scan driver: rounds between log/checkpoint
-    # boundaries run as one jitted lax.scan segment.
-    runner = make_round_runner(algo, grad_fn)
+    # boundaries run as one jitted lax.scan segment. The carry is donated
+    # so the client store ((x, d), extras, delay buffers) updates in
+    # place — the loop below rebinds `state` each call, never reusing the
+    # donated buffers.
+    runner = make_round_runner(algo, grad_fn, donate=True)
 
     mean_loss = jax.jit(lambda xs, b: jnp.mean(jax.vmap(model.loss)(xs, b)))
 
@@ -305,6 +318,11 @@ def main(argv=None):
     ap.add_argument("--tier-compression", default="none",
                     help="hierarchies only: compressor spec for interior "
                          "edge->root tier uplinks (e.g. shift:q8)")
+    ap.add_argument("--cohort", default="none",
+                    help="cohort spec: none | 256 | block:256 | rr:256 "
+                         "(optional trailing :dense forces the dense "
+                         "reference lowering) — run each round on a "
+                         "sampled fixed-size cohort, O(cohort) not O(N)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
     hist = run_training(
@@ -314,6 +332,7 @@ def main(argv=None):
         compression=args.compression, participation=args.participation,
         delay=args.delay, stale_policy=args.stale_policy,
         topology=args.topology, tier_compression=args.tier_compression,
+        cohort=args.cohort,
         callback=lambda r, l, b: print(f"round {r:5d}  loss {l:.4f}  comm {b/1e6:.1f} MB"))
     print("final loss:", hist["loss"][-1])
 

@@ -3,8 +3,20 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+try:  # guarded: the accounting pins below run without hypothesis, only
+    from hypothesis import given, settings  # the property tests skip
+    from hypothesis import strategies as st
+except ImportError:
+    def given(**kw):  # noqa: D103
+        return lambda f: pytest.mark.skip("hypothesis not installed")(f)
+
+    def settings(**kw):  # noqa: D103
+        return lambda f: f
+
+    class st:  # noqa: D101
+        integers = floats = staticmethod(lambda *a, **k: None)
 
 from repro.core import CommMeter, comm_bytes_per_round, quantize_bf16, topk_sparsify
 from repro.core.baselines import FedAvg, FedTrack, Scaffold
@@ -73,3 +85,46 @@ def test_topk_shape_and_dtype_preserved():
     a = jnp.ones((4, 5, 6), dtype=jnp.float32)
     out = topk_sparsify(a, 0.5)
     assert out.shape == a.shape and out.dtype == a.dtype
+
+
+# ------------------------------------------------------ cohort duty cycle
+def test_cohort_duty_cycle_fractions():
+    """Cohort mode: unsampled clients transmit ZERO uplink bits and
+    receive no broadcast (present-only downlink), so both duty cycles
+    scale by size/N — and compose multiplicatively with participation."""
+    from repro.core import with_cohort, with_participation
+
+    base = FedCET(alpha=0.01, c=0.4, tau=2, n_clients=100)
+    cohort = with_cohort(base, 25)
+    assert cohort.transmit_frac == 0.25
+    assert cohort.receive_frac == 0.25
+    both = with_cohort(with_participation(base, 0.8), 25)
+    np.testing.assert_allclose(both.transmit_frac, 0.25 * 0.8)
+    np.testing.assert_allclose(both.receive_frac, 0.25 * 0.8)
+
+
+def test_cohort_bits_per_round_scale():
+    from repro.core import comm_bits_per_round, with_cohort
+
+    base = FedCET(alpha=0.01, c=0.4, tau=2, n_clients=100)
+    cohort = with_cohort(base, 25)
+    n = 12_345
+    dense = comm_bits_per_round(base, n, n_clients=100)
+    coh = comm_bits_per_round(cohort, n, n_clients=100)
+    assert coh["up_bits"] == 0.25 * dense["up_bits"]
+    assert coh["down_bits"] == 0.25 * dense["down_bits"]
+
+
+def test_cohort_meter_bills_only_cohort():
+    from repro.core import with_cohort
+
+    base = FedCET(alpha=0.01, c=0.4, tau=2, n_clients=100)
+    cohort = with_cohort(base, 25)
+    params = {"w": jnp.zeros((64, 3))}
+    md = CommMeter.for_params(params, algo=base, n_clients=100)
+    mc = CommMeter.for_params(params, algo=cohort, n_clients=100)
+    md.tick_round(base)
+    mc.tick_round(cohort)
+    assert md.bytes_up > 0
+    assert mc.bytes_up * 4 == md.bytes_up
+    assert mc.bytes_down * 4 == md.bytes_down
