@@ -1,75 +1,380 @@
-"""Benchmark: federated LM round throughput on the host device — wall time
-per FedCET round vs baselines on the reduced fedlm config, plus the
-error-vs-bytes trade-off on the quadratic problem (the paper's
-communication-efficiency claim in benchmark form)."""
+"""Benchmark: kernel-bound federated LM rounds — the packed parameter
+arena + fused round tail vs the per-leaf lowering, plus the legacy
+round-throughput table and the error-vs-bytes trade-off.
+
+The arena lowering (``with_arena``, repro/core/arena.py) keeps the whole
+client store as one contiguous ``[clients, rows, 1024]`` f32 buffer; the
+fused round tail (``FedCET._fused_tail`` -> kernels/ops.py
+``fedcet_round_tail``) collapses the shift:q8 dequantize + weighted
+client mean + paired FedCET ``(d', x')`` update + DIANA shift step into
+one visit per element, with the int8 quantizer codes as the only
+intermediate that touches memory.
+
+The interesting regime is LARGE cohorts: at ``CLIENTS = 128`` on the
+reduced fedlm-100m geometry the round tail's working set (~0.8 GB per
+model-sized buffer) streams from DRAM. The measured finding on the dev
+host (single CPU core, ~4 GB/s stream) is deliberately two-sided:
+
+* the fused arena tail runs AT the roofline — its achieved bandwidth
+  (model-implied 39 B/elem over measured time) lands on the host's
+  stream rate, i.e. the two-pass is bytes-optimal;
+* XLA's per-leaf whole-tail fusion ALSO reaches that floor (~40 B/elem
+  model), so the wall-clock tail ratio on CPU is a WASH (~0.95-1.05x),
+  and the full arena round pays its pack crossings without a
+  compensating tail win (~1.1-1.3x the per-leaf round). The fused
+  lowering's claim on this host is therefore structural, not
+  wall-clock: the seam collapses from hundreds of compiled HLO
+  instructions (dozens per leaf) to a handful (one kernel visit per
+  element), which is what the TPU Mosaic path monetizes as dispatch
+  and VMEM-residency wins.
+
+The committed findings live in results/BENCH_fed_lm.json; full (non
+``--quick``) runs RE-ASSERT conservative pins under the measured
+values:
+
+1. tail/fused >= TAIL_WASH_MIN x tail/per_leaf at CLIENTS=128 (the
+   arena lowering never falls off the per-leaf floor — regression
+   guard for the wash finding);
+2. the compiled fused tail uses >= HLO_MIN_COLLAPSE x fewer HLO
+   instructions than the compiled per-leaf tail (the structural
+   one-visit-per-element claim, asserted on the optimized modules);
+3. round/arena_kernel <= ROUND_MAX_OVERHEAD x round/per_leaf (the
+   arena round's crossing overhead stays bounded);
+4. a roofline check: the fused tail's achieved DRAM bandwidth
+   (model-implied bytes / measured time) lands within loose bounds of
+   the host's ~2 GB/s stream anchor — i.e. the tail is memory
+   streaming, not compute- or overhead-bound.
+
+``--quick`` (CI) drops to CLIENTS=8 and skips the assertions — the
+cache-resident regime does not exhibit the pinned behavior.
+"""
 
 from __future__ import annotations
 
-import time
+try:
+    from benchmarks._timing import min_of_batches, results_dir, \
+        write_bench_json
+except ImportError:  # run directly as a script: benchmarks/ is sys.path[0]
+    from _timing import min_of_batches, results_dir, write_bench_json
 
-import jax
+ARCH = "fedlm-100m"
+CLIENTS = 128        # DRAM-streaming regime (quick: 8, cache-resident)
+TAU = 1
+BATCH = 1
+SEQ = 16             # tiny gradients: the round tail dominates
+ROUNDS = 1           # rounds per timed call
+REPS = 1
+BATCHES = 2
+LEGACY_CLIENTS, LEGACY_TAU, LEGACY_BATCH, LEGACY_SEQ = 4, 2, 4, 64
 
-from repro.configs import get_config
-from repro.core import FedAvg, FedCET, FedTrack, Scaffold
-from repro.core.simulate import simulate_quadratic
-from repro.data.quadratic import make_quadratic_problem
-from repro.data.synthetic import make_hetero_lm_dataset
-from repro.models import build_model
+# conservative pins under the measured findings (full mode only; dev
+# host measured tail ratio ~0.95-1.05 (wash at the stream floor), round
+# ~1.1-1.3x arena overhead, and a ~10x+ compiled-op collapse at
+# CLIENTS=128, with +-15% run-to-run noise on the shared box).
+TAIL_WASH_MIN = 0.70
+HLO_MIN_COLLAPSE = 3.0
+ROUND_MAX_OVERHEAD = 1.8
+# host stream rate the roofline check is anchored to (measured ~2 GB/s
+# single-core triad on the dev host), with loose machine-drift bounds.
+STREAM_GBPS = 2.0
+STREAM_BOUNDS = (0.25, 4.0)
+# model-implied DRAM bytes per element of the fused two-pass tail:
+#   pass 1 (codes):  read v + h (4+4), write int8 q   (1)       =  9
+#   mean:            read q + h (1+4)                           =  5
+#   pass 2 (sweep):  read q + h + d + v (1+4+4+4),
+#                    write d' + x' + h' (4+4+4)                 = 25
+TAIL_BYTES_PER_ELEM = 39
 
 
-def lm_round_times(csv_rows=None):
-    cfg = get_config("fedlm-100m").reduced()
+def _setup(n_clients: int, tau: int, batch: int, seq: int):
+    import jax
+
+    from repro.configs import get_config
+    from repro.data.synthetic import make_hetero_lm_dataset
+    from repro.models import build_model
+
+    cfg = get_config(ARCH).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    n_clients, tau, B, S = 4, 2, 4, 64
-    ds = make_hetero_lm_dataset(cfg.vocab_size, n_clients, S, B, seed=0)
+    ds = make_hetero_lm_dataset(cfg.vocab_size, n_clients, seq, batch, seed=0)
     batches = {"tokens": ds.sample_round(0, tau)}
-    init_b = jax.tree.map(lambda b: b[0], batches)
+    return model, params, batches
+
+
+def _time_round(algo, model, params, batches) -> float:
+    """Best-of-batches per-round microseconds via the donated repeat-mode
+    runner (in-place client-store updates; the holder rebinds the carry)."""
+    import jax
+
+    from repro.core import make_round_runner
+
     grad_fn = jax.grad(model.loss)
-    algos = {
-        "fedcet": FedCET(alpha=3e-3, c=0.05, tau=tau, n_clients=n_clients),
-        "fedavg": FedAvg(alpha=3e-3, tau=tau, n_clients=n_clients),
-        "scaffold": Scaffold(alpha_l=3e-3, tau=tau, n_clients=n_clients),
-        "fedtrack": FedTrack(alpha=3e-3, tau=tau, n_clients=n_clients),
+    init_b = jax.tree.map(lambda b: b[0], batches)
+    state = algo.init(grad_fn, params, init_b)
+    runner = make_round_runner(algo, grad_fn, repeat=True, donate=True)
+    holder = {"s": state}  # donated carry: rebind every call
+
+    def once():
+        s, _ = runner(holder["s"], batches, ROUNDS)
+        holder["s"] = s
+        return s
+
+    best_us, _ = min_of_batches(once, reps=REPS, batches=BATCHES)
+    return best_us / ROUNDS
+
+
+def _round_variants(n_clients: int) -> dict:
+    from repro.core import FedCET, with_arena, with_compression
+
+    def fedcet(fused: bool):
+        return FedCET(alpha=3e-3, c=0.05, tau=TAU, n_clients=n_clients,
+                      use_fused_kernel=fused)
+
+    comp = lambda a: with_compression(a, compressor="shift:q8")  # noqa: E731
+    return {
+        "per_leaf": comp(fedcet(False)),
+        "arena": with_arena(comp(fedcet(False))),
+        "arena_kernel": with_arena(comp(fedcet(True))),
     }
-    for name, algo in algos.items():
-        state = algo.init(grad_fn, params, init_b)
-        step = jax.jit(lambda s, b, a=algo: a.round(grad_fn, s, b))
-        state = step(state, batches)  # compile
-        jax.block_until_ready(state)
-        t0 = time.perf_counter()
-        for _ in range(3):
-            state = step(state, batches)
-        jax.block_until_ready(state)
-        us = (time.perf_counter() - t0) * 1e6 / 3
+
+
+def arena_round_times(csv_rows=None, quick: bool = False) -> dict:
+    """round/{per_leaf, arena, arena_kernel}: full FedCET x shift:q8 round
+    wall time on the reduced fedlm-100m at the benchmark cohort size."""
+    n = 8 if quick else CLIENTS
+    model, params, batches = _setup(n, TAU, BATCH, SEQ)
+    times = {}
+    for name, algo in _round_variants(n).items():
+        t = _time_round(algo, model, params, batches)
+        times[f"round/{name}"] = t
         if csv_rows is not None:
-            csv_rows.append((f"fed_lm_round/{name}", us,
+            csv_rows.append((f"fed_lm/round/{name}", t,
+                             f"clients={n};tau={TAU};B={BATCH};S={SEQ}"))
+    return times
+
+
+def tail_times(csv_rows=None, quick: bool = False):
+    """tail/{per_leaf, fused}: the isolated round tail — dithered shift:q8
+    quantize + reconstruct + client mean + paired FedCET ``(d', x')`` +
+    DIANA h-step — in the two lowerings, plus the optimized-HLO
+    instruction counts of both compiled tails. ``per_leaf`` is the TRUE
+    per-leaf seam: the same math as a per-leaf ``jax.tree.map`` over the
+    model's stacked leaves, unbarriered, exactly as XLA sees it on the
+    per-leaf engine path. ``fused`` is the arena lowering through
+    kernels/ops.py ``fedcet_round_tail`` (``'auto'``: the barriered
+    two-pass whose second sweep re-reads 1-byte codes). per_leaf is
+    timed FIRST — within-process drift then inflates the fused row,
+    keeping the pinned wash floor conservative."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import replicate
+    from repro.core.arena import ArenaLayout, pack
+    from repro.kernels import ops as kops
+
+    n = 8 if quick else CLIENTS
+    model, params, _ = _setup(n, TAU, BATCH, SEQ)
+    lo = ArenaLayout.for_tree(params)
+    rows = lo.rows
+    c, alpha, beta = 0.05, 3e-3, 0.5
+
+    # per-leaf operands: stacked [clients, ...] trees + model-shaped dither
+    # + per-leaf scalar scales (precomputed, as the fused row's scale is).
+    vt = replicate(params, n)
+    ht = jax.tree.map(lambda a: 0.5 * a, vt)
+    dt = jax.tree.map(jnp.zeros_like, vt)
+    ks = jax.random.split(jax.random.key(1), len(lo.shapes))
+    ut = jax.tree.unflatten(lo.treedef,
+                            [jax.random.uniform(k, s, lo.dtype)
+                             for k, s in zip(ks, lo.shapes)])
+    st = jax.tree.map(
+        lambda vl, hl: jnp.max(jnp.abs(vl - hl)) / 127.0, vt, ht)
+
+    @jax.jit
+    def per_leaf_tail(vt, ht, dt, ut, st):
+        def leaf(vl, hl, ul, dl, sl):
+            inv = jnp.where(sl > 0, 1.0 / sl, 0.0)
+            qs = jnp.clip(jnp.floor((vl - hl) * inv + ul), -127, 127) * sl
+            m_bar = jnp.mean(hl + qs, axis=0, keepdims=True)
+            delta = (hl + qs) - m_bar
+            return dl + c * delta, vl - (c * alpha) * delta, hl + beta * qs
+
+        return jax.tree.map(leaf, vt, ht, ut, dt, st)
+
+    times = {}
+
+    def once_per_leaf():
+        return per_leaf_tail(vt, ht, dt, ut, st)
+
+    best_us, _ = min_of_batches(once_per_leaf, reps=REPS, batches=BATCHES + 1)
+    times["tail/per_leaf"] = best_us
+    if csv_rows is not None:
+        csv_rows.append(("fed_lm/tail/per_leaf", best_us,
+                         f"clients={n};leaves={len(lo.shapes)}"))
+
+    # fused operands: the SAME values in arena layout.
+    v = pack(vt, lo).data
+    h = 0.5 * v
+    d = jnp.zeros_like(v)
+    u = pack(ut, lo).data
+    seg = jnp.asarray(lo.row_segments())
+    scale = jnp.stack(jax.tree.leaves(st))[seg][:, None]
+    w = jnp.ones((n, 1), v.dtype)
+    den = jnp.full((1, 1), n, v.dtype)
+
+    def once_fused():
+        return kops.fedcet_round_tail(v, h, d, u, scale, w, den,
+                                      c=c, alpha=alpha, beta=beta,
+                                      bits=8, impl="auto")
+
+    best_us, _ = min_of_batches(once_fused, reps=REPS, batches=BATCHES + 1)
+    times["tail/fused"] = best_us
+    if csv_rows is not None:
+        csv_rows.append(("fed_lm/tail/fused", best_us,
+                         f"clients={n};rows={rows}"))
+
+    # the structural claim, machine-invariant: instruction counts of the
+    # two OPTIMIZED compiled modules (one visit per element vs dozens of
+    # fusions per leaf).
+    def _op_count(lowered) -> int:
+        txt = lowered.compile().as_text()
+        return sum(1 for ln in txt.splitlines()
+                   if " = " in ln and not ln.lstrip().startswith("//"))
+
+    hlo_ops = {
+        "per_leaf": _op_count(per_leaf_tail.lower(vt, ht, dt, ut, st)),
+        "fused": _op_count(kops.fedcet_round_tail.lower(
+            v, h, d, u, scale, w, den, c=c, alpha=alpha, beta=beta,
+            bits=8, impl="auto")),
+    }
+    hlo_ops["collapse"] = hlo_ops["per_leaf"] / hlo_ops["fused"]
+    if csv_rows is not None:
+        csv_rows.append(("fed_lm/tail/hlo_collapse", hlo_ops["collapse"],
+                         f"per_leaf_ops={hlo_ops['per_leaf']};"
+                         f"fused_ops={hlo_ops['fused']}"))
+
+    # roofline: achieved DRAM bandwidth from the model-implied byte count.
+    elems = n * rows * 1024
+    model_bytes = elems * TAIL_BYTES_PER_ELEM
+    fused_s = times["tail/fused"] * 1e-6
+    roofline = {
+        "elements": int(elems),
+        "model_bytes_fused": int(model_bytes),
+        "achieved_gbps_fused": model_bytes / fused_s / 1e9,
+        # same (minimal) byte count over the unfused time: how far the
+        # re-streamed f32 traffic drags the effective rate down.
+        "effective_gbps_per_leaf": model_bytes
+        / (times["tail/per_leaf"] * 1e-6) / 1e9,
+        "stream_gbps_anchor": STREAM_GBPS,
+    }
+    if csv_rows is not None:
+        csv_rows.append(("fed_lm/tail/roofline",
+                         roofline["achieved_gbps_fused"],
+                         f"model_GB={model_bytes / 1e9:.2f};"
+                         f"anchor_gbps={STREAM_GBPS}"))
+    return times, roofline, hlo_ops
+
+
+def lm_round_times(csv_rows=None) -> dict:
+    """Legacy trajectory rows: per-round wall time for the four algorithm
+    families at the original small geometry (C=4, tau=2, B=4, S=64)."""
+    from repro.core import FedAvg, FedCET, FedTrack, Scaffold
+
+    n, tau = LEGACY_CLIENTS, LEGACY_TAU
+    model, params, batches = _setup(n, tau, LEGACY_BATCH, LEGACY_SEQ)
+    algos = {
+        "fedcet": FedCET(alpha=3e-3, c=0.05, tau=tau, n_clients=n),
+        "fedavg": FedAvg(alpha=3e-3, tau=tau, n_clients=n),
+        "scaffold": Scaffold(alpha_l=3e-3, tau=tau, n_clients=n),
+        "fedtrack": FedTrack(alpha=3e-3, tau=tau, n_clients=n),
+    }
+    times = {}
+    for name, algo in algos.items():
+        t = _time_round(algo, model, params, batches)
+        times[f"algo/{name}"] = t
+        if csv_rows is not None:
+            csv_rows.append((f"fed_lm_round/{name}", t,
                              f"vectors={algo.vectors_up}up+{algo.vectors_down}dn"))
+    return times
 
 
-def bytes_to_target(csv_rows=None, target: float = 1e-6):
-    """Transmitted bytes needed to reach a target error (lower = better)."""
+def bytes_to_target(csv_rows=None, target: float = 1e-6) -> dict:
+    """Transmitted bytes needed to reach a target error (lower = better).
+    ``errors[0]`` is the pre-communication initial error; the target being
+    met first at ``errors[k + 1]`` means k+1 communication rounds were
+    paid, i.e. ``(k + 1) * bytes_per_round``. Rows that never reach the
+    target carry ``inf`` in the value column."""
+    from repro.core.simulate import paper_fig1_algorithms, simulate_quadratic
+    from repro.data.quadratic import make_quadratic_problem
+
     problem = make_quadratic_problem(0)
-    from repro.core.simulate import paper_fig1_algorithms
-
     algos = paper_fig1_algorithms(problem, tau=2)
+    out = {}
     for name, algo in algos.items():
         res = simulate_quadratic(algo, problem, rounds=3000)
-        errs = res.errors
-        k = next((i for i, e in enumerate(errs) if float(e) < target), None)
-        note = (f"bytes={k * res.bytes_per_round}" if k is not None
-                else "target_not_reached")
+        k = next((i for i, e in enumerate(res.errors[1:])
+                  if float(e) < target), None)
+        if k is None:
+            nbytes, note = float("inf"), "target_not_reached"
+        else:
+            nbytes = float((k + 1) * res.bytes_per_round)
+            note = f"rounds={k + 1};bytes_per_round={res.bytes_per_round}"
+        out[name] = nbytes
         if csv_rows is not None:
-            csv_rows.append((f"bytes_to_{target:g}/{name}", 0.0, note))
+            csv_rows.append((f"bytes_to_{target:g}/{name}", nbytes, note))
+    return out
 
 
-def run(csv_rows=None):
-    lm_round_times(csv_rows)
-    bytes_to_target(csv_rows)
+def run(csv_rows=None, quick: bool = False):
+    times = {}
+    times.update(arena_round_times(csv_rows, quick))
+    tails, roofline, hlo_ops = tail_times(csv_rows, quick)
+    times.update(tails)
+    times.update(lm_round_times(csv_rows))
+    targets = bytes_to_target(csv_rows)
+
+    tail_ratio = times["tail/per_leaf"] / times["tail/fused"]
+    round_overhead = times["round/arena_kernel"] / times["round/per_leaf"]
+    write_bench_json(
+        "fed_lm",
+        config={"arch": ARCH, "clients": (8 if quick else CLIENTS),
+                "tau": TAU, "batch": BATCH, "seq": SEQ,
+                "rounds_per_call": ROUNDS, "reps": REPS, "batches": BATCHES,
+                "legacy": {"clients": LEGACY_CLIENTS, "tau": LEGACY_TAU,
+                           "batch": LEGACY_BATCH, "seq": LEGACY_SEQ},
+                "quick": quick},
+        timings=times,
+        extra={"speedup": {"tail": tail_ratio,
+                           "round_overhead": round_overhead},
+               "roofline": roofline,
+               "hlo_instructions": hlo_ops,
+               "bytes_to_target_1e-6": targets},
+        out_dir=results_dir())
+
+    # ---- pinned measured findings (full sweep only; see module docstring)
+    if not quick:
+        assert tail_ratio >= TAIL_WASH_MIN, (
+            "fused arena tail fell off the per-leaf stream floor",
+            tail_ratio, TAIL_WASH_MIN)
+        assert hlo_ops["collapse"] >= HLO_MIN_COLLAPSE, (
+            "fused tail no longer collapses the compiled seam",
+            hlo_ops, HLO_MIN_COLLAPSE)
+        assert round_overhead <= ROUND_MAX_OVERHEAD, (
+            "arena round crossing overhead out of bounds",
+            round_overhead, ROUND_MAX_OVERHEAD)
+        lo, hi = STREAM_BOUNDS
+        rel = roofline["achieved_gbps_fused"] / STREAM_GBPS
+        assert lo <= rel <= hi, (
+            "fused tail bandwidth out of the memory-streaming regime",
+            roofline["achieved_gbps_fused"], STREAM_GBPS)
+    return times
 
 
 if __name__ == "__main__":
+    import sys
+
     rows = []
-    run(csv_rows=rows)
+    run(csv_rows=rows, quick="--quick" in sys.argv)
+    print("name,us_per_call,derived")
     for r in rows:
         print(",".join(map(str, r)))

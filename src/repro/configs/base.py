@@ -163,11 +163,18 @@ class FedScenario:
     sampled rows from the server-side client-state store, runs the local
     scan on the cohort only, and scatters updates back.
 
+    ``arena`` lowers the engine's stacked client store onto the packed
+    parameter arena (:mod:`repro.core.arena`): the model pytree lives as
+    one contiguous lane-aligned ``[clients, rows, 1024]`` buffer for the
+    whole round and unpacks only at the gradient boundary. Composes with
+    every knob above and is pinned <=1e-12-equivalent to the per-leaf
+    lowering, so checkpoints and shardings stay flippable either way.
+
     ``apply`` composes the scenario onto ANY engine algorithm — the same
     expression the simulation tests pin, now reachable from the production
     LM loop (`launch/train.py --compression ... --participation ...
     --delay ... --stale-policy ... --topology ... --tier-compression
-    ... --cohort ...`)."""
+    ... --cohort ... --arena`)."""
 
     compression: str = "none"
     participation: float = 1.0
@@ -177,14 +184,16 @@ class FedScenario:
     tier_compression: str = "none"
     error_feedback: bool | None = None
     cohort: int | str | None = "none"
+    arena: bool = False
     seed: int = 0
 
     def apply(self, algo):
         from repro.core.compressors import from_spec
-        from repro.core.engine import (with_cohort, with_compression,
-                                       with_delay, with_participation,
-                                       with_topology)
+        from repro.core.engine import (with_arena, with_cohort,
+                                       with_compression, with_delay,
+                                       with_participation, with_topology)
 
+        algo = with_arena(algo, self.arena)
         algo = with_topology(algo, self.topology, seed=self.seed,
                              tier_compression=self.tier_compression)
         algo = with_participation(algo, self.participation, seed=self.seed)

@@ -496,6 +496,13 @@ class RoundEngine:
     #: O(cohort) round execution (gather/scatter on the sharded client-state
     #: store); attach via ``with_cohort``. None = every client trains.
     cohort: CohortSpec | None = dataclasses.field(default=None, kw_only=True)
+    #: pack the model pytree into the contiguous [rows, 1024] parameter
+    #: arena (core/arena.py): state/message leaves become single packed
+    #: buffers, unpacked only at the model-apply (gradient) boundary;
+    #: attach via ``with_arena``. The whole engine seam is
+    #: representation-transparent (Arena is a pytree node), so every
+    #: transform/axis above composes unchanged.
+    arena: bool = dataclasses.field(default=False, kw_only=True)
     #: mesh axes carrying the client dimension (production launcher only).
     spmd_client_axes: tuple = dataclasses.field(default=(), kw_only=True)
 
@@ -517,12 +524,30 @@ class RoundEngine:
     def server_aggregate(self, state, msg, msg_bar, mctx, rctx):
         raise NotImplementedError
 
+    def _fused_tail(self, inner, msg, mctx, extras, step, mask):
+        """Optional whole-round-tail fusion hook, consulted by
+        ``_comm_step`` on plain synchronous arena rounds (no topology, no
+        delay). A spec that can execute transform -> reduce ->
+        ``server_aggregate`` as one fused pass over its packed message
+        returns ``(new_inner, new_extras)``; ``None`` falls through to
+        the generic seam. FedCET implements it for the shift-quantized
+        uplink via the kernels/ops.py ``fedcet_round_tail`` kernel."""
+        del inner, msg, mctx, extras, step, mask
+        return None
+
     def client_params(self, state):
-        """Stacked [clients, ...] model parameters (default: ``state.x``)."""
-        return self._inner(state).x
+        """Stacked [clients, ...] model parameters (default: ``state.x``),
+        unpacked from the parameter arena when the state carries one."""
+        x = self._inner(state).x
+        from repro.core.arena import Arena, unpack
+
+        return unpack(x) if isinstance(x, Arena) else x
 
     def global_params(self, state):
-        return tree_client_mean(self.client_params(state), keepdims=False)
+        p = tree_client_mean(self.client_params(state), keepdims=False)
+        from repro.core.arena import Arena, unpack
+
+        return unpack(p) if isinstance(p, Arena) else p
 
     # ------------------------------------------------------------ accounting
     @property
@@ -659,7 +684,26 @@ class RoundEngine:
 
     # ------------------------------------------------------------- plumbing
     def _grad(self, grad_fn: GradFn) -> GradFn:
-        return vmap_grads(grad_fn, spmd_axis_name=(self.spmd_client_axes or None))
+        gf = vmap_grads(grad_fn, spmd_axis_name=(self.spmd_client_axes or None))
+        if not self.arena:
+            return gf
+        from repro.core.arena import Arena, pack, unpack
+
+        # the model-apply boundary: the loss sees the real pytree, the
+        # engine sees the arena. The unpack is pure slicing — XLA fuses it
+        # into the gradient consumers (measured: unpack+grads costs ~the
+        # grads alone); the repack is the one real crossing per call.
+        # (Returning RAW grads and folding the pack into the spec's first
+        # consumer was tried and is SLOWER: outside the grad closure the
+        # unpacked x/d slices materialize as copies instead of fusing, so
+        # the per-leaf triad + concat streams the model twice more than
+        # pack-then-fused-triad. Keep the pack here.)
+        def arena_gf(x, batch):
+            if not isinstance(x, Arena):
+                return gf(x, batch)
+            return pack(gf(unpack(x), batch), x.layout)
+
+        return arena_gf
 
     def _msg_shapes(self, gf, inner, init_batch):
         """Abstract (eval_shape) wire-message tree of the current state —
@@ -699,6 +743,12 @@ class RoundEngine:
         ``(inner, extras, dstate, tx)`` — ``tx`` is the post-transform
         wire message (``init`` seeds the buffer from it)."""
         msg, mctx = self.message(gf, inner, batch, rctx)
+        if (dstate is None and self.delay is None and self.topology is None
+                and self.arena):
+            fused = self._fused_tail(inner, msg, mctx, extras, step, mask)
+            if fused is not None:
+                inner, new_extras = fused
+                return inner, tuple(new_extras), tstate, None, None
         new_extras = []
         for t, e in zip(self.transforms, extras):
             msg, e = t.apply(msg, e, step)
@@ -796,6 +846,14 @@ class RoundEngine:
         wire message, age 0 — so early stale rounds average real messages,
         never zeros."""
         gf = self._grad(grad_fn)
+        if self.arena:
+            from repro.core.arena import Arena, pack
+
+            if not isinstance(x0, Arena):
+                x0 = pack(x0)
+            # from here on EVERY state/message tree the spec builds from
+            # x0 (replicate, zeros_like, eval_shape, transform extras,
+            # the delay buffer) is arena-valued by construction.
         inner, run_comm = self.init_warmup(gf, x0, init_batch)
         topo_shapes = (self.topology is not None
                        and self.topology.needs_msg_shapes)
@@ -1177,6 +1235,23 @@ def with_cohort(algo: RoundEngine, cohort, *, seed: int = 0) -> RoundEngine:
             f"topology {algo.topology!r} does not support cohort execution "
             "(gossip mixing has no server to sample a cohort)")
     return dataclasses.replace(algo, cohort=spec)
+
+
+def with_arena(algo: RoundEngine, enable: bool = True) -> RoundEngine:
+    """Packed-parameter-arena execution for ANY engine algorithm: ``init``
+    flattens the model pytree once into the contiguous lane-aligned
+    ``[rows, 1024]`` buffer of core/arena.py, and every state / message /
+    transform-memory tree stays packed for the life of the run — the
+    per-leaf tree.map seam becomes a handful of whole-model array ops,
+    unpacked only at the gradient boundary. Composes with every other
+    factory in any order (the Arena is a pytree node, so compression /
+    participation / delay / topology / cohort code paths are untouched),
+    and is pinned <= 1e-12-equivalent to the per-leaf representation
+    (tests/test_arena.py). ``enable=False`` is an exact no-op. Checkpoints
+    flip between representations via ``core.arena.adapt_state``."""
+    if not enable:
+        return algo
+    return dataclasses.replace(algo, arena=True)
 
 
 # --------------------------------------------------------- multi-round driver

@@ -104,13 +104,96 @@ class FedCET(RoundEngine):
 
     def server_aggregate(self, state, msg, msg_bar, mctx, rctx):
         """Eq. (2): the aggregating step. ``msg`` is the client's own
-        (possibly compressed) transmitted vector, ``mctx`` the exact v."""
+        (possibly compressed) transmitted vector, ``mctx`` the exact v.
+        With ``use_fused_kernel`` the paired update runs through the
+        kernels/ops.py ``fedcet_comm`` pair kernel — one visit per
+        element for BOTH outputs instead of two tree.map streams."""
+        if self.use_fused_kernel:
+            from repro.kernels import ops as kops
+
+            d_leaves, treedef = jax.tree.flatten(state.d)
+            pairs = [
+                kops.fedcet_comm(dd, mm, mb, self.c, self.alpha,
+                                 v=(None if vv is mm else vv))
+                for dd, mm, mb, vv in zip(
+                    d_leaves, jax.tree.leaves(msg), jax.tree.leaves(msg_bar),
+                    jax.tree.leaves(mctx))
+            ]
+            d_next = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+            x_next = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+            return FedCETState(x=x_next, d=d_next, t=state.t + 1)
         ca = self.c * self.alpha
         d_next = jax.tree.map(lambda dd, mm, mb: dd + self.c * (mm - mb),
                               state.d, msg, msg_bar)
         x_next = jax.tree.map(lambda vv, mm, mb: vv - ca * (mm - mb),
                               mctx, msg, msg_bar)
         return FedCETState(x=x_next, d=d_next, t=state.t + 1)
+
+    def _fused_tail(self, inner, msg, mctx, extras, step, mask):
+        """The fully fused arena round tail (engine hook; see
+        kernels/ops.py:fedcet_round_tail): when the transform stack is
+        exactly one shift-quantized compression over a packed arena
+        message, the dequantize + weighted reduce + paired ``(d', x')``
+        update + DIANA shift step collapse into ONE kernel visit per
+        element — the quantizer codes, reconstructed wire message and
+        client mean never round-trip through HBM. Replicates the generic
+        seam's PRNG schedule and masked-mean expressions term for term
+        (pinned <= 1e-12 in tests/test_arena.py); any non-matching
+        configuration returns None and takes the generic path."""
+        if not self.use_fused_kernel or len(self.transforms) != 1:
+            return None
+        from repro.core.arena import Arena
+        from repro.core.compressors import Shifted, StochasticQuant
+        from repro.core.engine import _COMPRESS_KEY_TAG, MessageCompression
+
+        t = self.transforms[0]
+        if not isinstance(t, MessageCompression):
+            return None
+        comp = t.compressor
+        if not (isinstance(comp, Shifted)
+                and isinstance(comp.inner, StochasticQuant)
+                and not comp.inner.per_client_dither):
+            return None
+        h = extras[0]
+        if not (isinstance(msg, Arena) and isinstance(h, Arena)
+                and msg.data.ndim == 3
+                and msg.layout.dtype in (jnp.float32, jnp.float64)):
+            return None
+        from repro.core.arena import pack_rows
+        from repro.kernels import ops as kops
+
+        lo, va, ha, da = msg.layout, msg.data, h.data, inner.d.data
+        ft = va.dtype
+        quant = comp.inner
+        levels = 2 ** (quant.bits - 1) - 1
+        # the per-leaf quantizer scale of the shifted RESIDUAL: segment-max
+        # over the leaf's rows (exact — the same max as per-leaf).
+        seg = jnp.asarray(lo.row_segments())
+        row_max = jnp.max(jnp.abs(va - ha), axis=(0, 2))
+        leaf_max = jax.ops.segment_max(row_max, seg,
+                                       num_segments=len(lo.shapes))
+        scale = (leaf_max / levels)[seg][:, None]
+        # MessageCompression's round key, then the per-leaf dither draws
+        # in flatten (== layout) order — bit-identical to the generic path.
+        key = jax.random.fold_in(jax.random.key(t.seed),
+                                 _COMPRESS_KEY_TAG + t.index)
+        key = jax.random.fold_in(key, jnp.asarray(step, jnp.int32))
+        u = pack_rows([jax.random.uniform(jax.random.fold_in(key, i), shp,
+                                          dtype=ft)
+                       for i, shp in enumerate(lo.shapes)], lo)
+        n = va.shape[0]
+        if mask is None:
+            w = jnp.ones((n, 1), ft)
+            den = jnp.full((1, 1), n, ft)
+        else:  # the exact masked_client_mean expressions
+            w = mask.astype(ft).reshape(n, 1)
+            den = jnp.maximum(jnp.sum(mask.astype(jnp.int32)),
+                              1).astype(ft).reshape(1, 1)
+        d2, x2, h2 = kops.fedcet_round_tail(
+            va, ha, da, u, scale, w, den, c=self.c, alpha=self.alpha,
+            beta=comp.step, bits=quant.bits)
+        inner = FedCETState(x=Arena(x2, lo), d=Arena(d2, lo), t=inner.t + 1)
+        return inner, (Arena(h2, lo),)
 
 
 class FedCETLiteralState(NamedTuple):

@@ -13,11 +13,50 @@ def fedcet_v(x, g, d, alpha: float):
     return x - alpha * g - alpha * d
 
 
-def fedcet_comm(d, v, v_bar, c: float, alpha: float):
+def fedcet_comm(d, m, m_bar, c: float, alpha: float, v=None):
     """The FedCET aggregation step, fused:
-    d' = d + c (v - v_bar);  x' = v - c*alpha*(v - v_bar)."""
-    delta = v - v_bar
+    d' = d + c (m - m_bar);  x' = v - c*alpha*(m - m_bar).
+
+    ``m`` is the client's own WIRE message (post-compression) and ``v``
+    the exact local vector the x-update starts from (``mctx``); without
+    compression the two coincide, which is the ``v=None`` default."""
+    if v is None:
+        v = m
+    delta = m - m_bar
     return d + c * delta, v - (c * alpha) * delta
+
+
+def fedcet_round_tail(v, h, d, u, scale, w, den, *, c: float, alpha: float,
+                      beta: float, bits: int):
+    """The whole shift:q8 -> reduce -> FedCET pair round tail, one pass.
+
+    The composed per-leaf seam (Shifted(StochasticQuant(bits)) transform +
+    mean + ``server_aggregate``) computes, with ``h`` the shift memory and
+    ``q`` the dithered fixed-point code of the residual ``v - h``::
+
+        q     = clip(floor((v - h)/scale + u), -levels, levels)
+        recon = h + q*scale                    # the wire message
+        m_bar = sum_c(recon * w) / den         # (masked) client mean
+        d'    = d + c*(recon - m_bar)
+        x'    = v - c*alpha*(recon - m_bar)
+        h'    = h + beta*q*scale               # the DIANA shift step
+
+    Shapes: ``v``/``h``/``d`` are ``[clients, rows, lanes]``; ``u`` is the
+    client-shared dither ``[rows, lanes]``; ``scale`` the per-leaf quant
+    step broadcast to rows ``[rows, 1]``; ``w`` the client weights
+    ``[clients, 1, 1]`` (ones, or the participation mask) and ``den`` the
+    scalar weight sum (the masked-mean denominator). Expressions match
+    compressors.StochasticQuant / Shifted and engine.masked_client_mean
+    term for term, so the fused tail is bitwise-equivalent to the
+    per-leaf transform stack. Returns ``(d', x', h')``."""
+    levels = 2 ** (bits - 1) - 1
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.floor((v - h) * inv + u), -levels, levels)
+    qs = q * scale
+    recon = h + qs
+    m_bar = jnp.sum(recon * w, axis=0, keepdims=True) / den
+    delta = recon - m_bar
+    return d + c * delta, v - (c * alpha) * delta, h + beta * qs
 
 
 def ssd_intra(x, dt, a_cs, Bm, Cm):
