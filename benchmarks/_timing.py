@@ -73,3 +73,32 @@ def write_bench_json(name: str, *, config: dict, timings: dict,
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
     return path
+
+
+def aggregate_trajectory(out_dir: str | None = None) -> str | None:
+    """Merge every ``BENCH_<name>.json`` in ``out_dir`` (default: the
+    repo's ``results/``) into one ``BENCH_trajectory.json`` mapping
+    benchmark name -> {commit, config, timings_us, ...} — the single file
+    a perf dashboard (or a human diff) reads instead of N scattered
+    per-bench documents. Idempotent; skips itself and unparseable files.
+    Returns the written path, or None when no bench documents exist."""
+    out_dir = out_dir or results_dir()
+    merged: dict[str, dict] = {}
+    for fn in sorted(os.listdir(out_dir)):
+        if (not fn.startswith("BENCH_") or not fn.endswith(".json")
+                or fn == "BENCH_trajectory.json"):
+            continue
+        try:
+            with open(os.path.join(out_dir, fn)) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        merged[doc.get("benchmark", fn[len("BENCH_"):-len(".json")])] = doc
+    if not merged:
+        return None
+    path = os.path.join(out_dir, "BENCH_trajectory.json")
+    with open(path, "w") as f:
+        json.dump({"schema": 1, "commit": git_commit(),
+                   "benchmarks": merged}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

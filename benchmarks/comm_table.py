@@ -22,8 +22,8 @@ from repro.roofline.flops import param_counts
 
 
 def _algos(n_clients: int) -> dict:
-    from repro.core import (FedCETCompressed, with_compression, with_delay,
-                            with_topology)
+    from repro.core import (FedCETCompressed, with_cohort, with_compression,
+                            with_delay, with_topology)
 
     fedcet = lambda: FedCET(alpha=1e-3, c=0.05, tau=2, n_clients=n_clients)  # noqa: E731
     return {
@@ -74,6 +74,12 @@ def _algos(n_clients: int) -> dict:
         "fedcet_hier4_tierq8": with_topology(
             with_compression(fedcet(), compressor="shift:q8"), "hier:g4",
             tier_compression="shift:q8"),
+        # cohort execution (core/engine.py): only the sampled size/N slice
+        # of clients computes, transmits OR receives — BOTH duty cycles
+        # scale by the cohort fraction, and stack with compression.
+        "fedcet_cohort4": with_cohort(fedcet(), "block:4"),
+        "fedcet_cohort4_shiftq8": with_cohort(
+            with_compression(fedcet(), compressor="shift:q8"), "block:4"),
     }
 
 
@@ -96,7 +102,8 @@ def run(csv_rows=None, n_clients: int = 16):
                     f"bytes_per_round={total}"
                     f";bits_per_round={int(bits['total_bits'])}"
                     f";up_bits_per_coord={algo.bits_per_coord:g}"
-                    f";up_duty={getattr(algo, 'transmit_frac', 1.0):g}"))
+                    f";up_duty={getattr(algo, 'transmit_frac', 1.0):g}"
+                    f";down_duty={getattr(algo, 'receive_frac', 1.0):g}"))
         assert out[(arch, "fedcet")] * 2 == out[(arch, "scaffold")]
         assert out[(arch, "fedcet")] == out[(arch, "fedavg")]
         # bit-true sanity: seed-synchronized rand-k pays no index traffic,
@@ -153,6 +160,23 @@ def run(csv_rows=None, n_clients: int = 16):
         tbits = comm_bits_per_round(algos["fedcet_hier4_tierq8"], n,
                                     n_clients=n_clients)
         assert tbits["down_bits"] == n * (n_clients + 4) * 32.0
+        # cohort duty: a block:4 cohort of 16 clients scales BOTH the
+        # uplink and the (present-only) downlink by 4/16 — non-sampled
+        # clients neither transmit nor receive.
+        frac = 4 / n_clients
+        assert algos["fedcet_cohort4"].transmit_frac == frac
+        assert algos["fedcet_cohort4"].receive_frac == frac
+        cbits = comm_bits_per_round(algos["fedcet_cohort4"], n,
+                                    n_clients=n_clients)
+        assert math.isclose(cbits["up_bits"], sync_up * frac, rel_tol=1e-12)
+        assert math.isclose(cbits["down_bits"], sync_up * frac,
+                            rel_tol=1e-12)
+        # ...and composes with the compressed wire width (8 bits/coord
+        # before the duty scaling).
+        ccbits = comm_bits_per_round(algos["fedcet_cohort4_shiftq8"], n,
+                                     n_clients=n_clients)
+        assert math.isclose(ccbits["up_bits"], sync_up * frac * 8.0 / 32.0,
+                            rel_tol=1e-12)
     return out
 
 

@@ -16,6 +16,12 @@ Prints ``name,us_per_call,derived`` CSV rows. Modules:
                      stale policy x compression (runs LAST: it enables x64)
   topology_sweep   — aggregation geometry: hierarchical exactness, NIDS
                      gossip rate vs spectral gap (also x64: keep last)
+  telemetry_bench  — in-trace telemetry overhead (<=10% asserted) + the
+                     invariant-monitor staleness boundary replayed live
+                     from one run's JSONL (also x64: keep last)
+
+After the module loop every ``results/BENCH_*.json`` merges into
+``results/BENCH_trajectory.json`` — the one-file perf trajectory.
 """
 
 from __future__ import annotations
@@ -35,8 +41,10 @@ def main() -> None:
         lr_search_bench,
         roofline_table,
         staleness_sweep,
+        telemetry_bench,
         topology_sweep,
     )
+    from benchmarks._timing import aggregate_trajectory
 
     rows: list[tuple] = []
     t0 = time.time()
@@ -51,6 +59,7 @@ def main() -> None:
         ("cohort_scaling", cohort_scaling),    # enables x64: keep last
         ("staleness_sweep", staleness_sweep),  # also x64
         ("topology_sweep", topology_sweep),    # also x64
+        ("telemetry_bench", telemetry_bench),  # also x64
     ]:
         t = time.time()
         try:
@@ -59,6 +68,9 @@ def main() -> None:
         except Exception as e:  # keep the harness going; report at the end
             rows.append((f"{name}/FAILED", 0.0, repr(e)[:120]))
             print(f"# {name}: FAILED {e!r}", file=sys.stderr)
+    traj = aggregate_trajectory()
+    if traj:
+        print(f"# trajectory: {traj}", file=sys.stderr)
     print("name,us_per_call,derived")
     for r in rows:
         print(",".join(str(c) for c in r))

@@ -1,0 +1,206 @@
+"""Benchmark: in-trace telemetry overhead + live invariant-monitor boundary.
+
+Two claims, both asserted:
+
+1. **Overhead**: attaching ``with_telemetry`` to a composed FedCET round
+   (shift:q8 compression x fixed:2 delay) costs <= 10% wall-clock on the
+   paper's quadratic — the captures are a handful of fused reductions
+   riding the existing scan, with zero host syncs inside a segment. The
+   compiled footprint (optimized-HLO instruction count of the K-round
+   runner, off vs on) and the host-side drain cost are reported alongside.
+
+2. **Live boundary**: the invariant monitor reproduces the PR 3 pinned
+   staleness boundary FROM A SINGLE RUN'S JSONL — no offline re-simulation:
+   ``fixed:2`` + ``poly:1`` keeps uniform ages, so the streamed
+   ``invariant_residual`` series stays at f64 noise and the monitor is
+   SILENT; ``rr:2`` + ``poly:1`` makes ages non-uniform, the residual
+   drifts above the 1e-6 bound, and the monitor emits WARN events naming
+   the offending axis (stale_policy).
+
+Emits ``results/BENCH_telemetry.json``. Runs via benchmarks/run.py (late:
+it enables x64 for the f64 residual floor) or directly.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+from benchmarks._timing import min_of_batches, results_dir, write_bench_json
+
+ROUNDS_PER_CALL = 32
+BOUNDARY_ROUNDS = 60
+N_CLIENTS = 32
+DIM = 512
+#: measurements per client — sets the local-step compute the captures
+#: amortize against (the paper's 10 makes the round so small that the
+#: handful of capture reductions shows up as >10%; any realistic local
+#: workload drowns them).
+N_MEAS = 64
+MAX_OVERHEAD = 1.10
+
+
+def _fedcet(problem, tau=2):
+    from repro.core import FedCET, max_weight_c
+    from repro.core.lr_search import lr_search
+
+    alpha = lr_search(problem.mu, problem.L, tau)
+    return FedCET(alpha=alpha, c=max_weight_c(problem.mu, alpha), tau=tau,
+                  n_clients=problem.n_clients)
+
+
+def _runner_and_state(algo, problem):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.engine import make_round_runner
+
+    grad_fn = jax.grad(problem.client_loss)
+    batches = problem.stacked_batches(algo.tau)
+    x0 = jnp.zeros((problem.dim,), dtype=problem.b.dtype)
+    state = algo.init(grad_fn, x0, jax.tree.map(lambda b: b[0], batches))
+    return make_round_runner(algo, grad_fn, repeat=True), state, batches
+
+
+def _time_round(algo, problem) -> tuple[float, object]:
+    import jax
+
+    runner, state, batches = _runner_and_state(algo, problem)
+    best, out = min_of_batches(
+        lambda: runner(state, batches, ROUNDS_PER_CALL), reps=3, batches=5)
+    jax.block_until_ready(out)
+    return best / ROUNDS_PER_CALL, out
+
+
+def _instr_count(algo, problem) -> int:
+    from repro.core.telemetry import instruction_count
+
+    # the runner is already a jitted callable (rounds static) — lower it
+    # directly rather than re-wrapping in jit.
+    runner, state, batches = _runner_and_state(algo, problem)
+    return instruction_count(runner.lower(state, batches, ROUNDS_PER_CALL))
+
+
+def _jsonl_boundary(base, problem, delay_spec: str, path: str):
+    """One LIVE run: simulate with telemetry attached, drain the stacked
+    series into a JSONL sink, then read the FILE back and return the
+    parsed residual series + WARN events (what a dashboard would see)."""
+    import time
+
+    from repro.core import (INVARIANT_MONITOR, JsonlSink, drain, run_manifest,
+                            with_delay, with_telemetry)
+    from repro.core.simulate import simulate_quadratic
+
+    algo = with_telemetry(
+        with_delay(base, delay_spec, policy="poly:1"), True)
+    t0 = time.perf_counter()
+    res = simulate_quadratic(algo, problem, rounds=BOUNDARY_ROUNDS)
+    sink = JsonlSink(path)
+    sink.emit(run_manifest(algo, n_params=problem.dim,
+                           config={"delay": delay_spec, "policy": "poly:1"},
+                           monitors=(INVARIANT_MONITOR,)))
+    drain(res.telemetry, sinks=[sink], monitors=(INVARIANT_MONITOR,),
+          algo=algo, n_params=problem.dim)
+    sink.close()
+    drain_us = (time.perf_counter() - t0) * 1e6 / BOUNDARY_ROUNDS
+    with open(path) as f:
+        events = [json.loads(line) for line in f]
+    assert events[0]["event"] == "manifest", events[0]
+    residuals = [e["invariant_residual"] for e in events
+                 if e["event"] == "round"]
+    warns = [e for e in events
+             if e["event"] == "monitor" and e.get("level") == "WARN"]
+    assert len(residuals) == BOUNDARY_ROUNDS
+    return residuals, warns, drain_us
+
+
+def run(csv_rows=None, quick: bool = False):
+    import jax
+
+    jax.config.update("jax_enable_x64", True)  # residual floor is f64 noise
+
+    from repro.core import with_compression, with_delay, with_telemetry
+    from repro.data.quadratic import make_quadratic_problem
+
+    problem = make_quadratic_problem(0, n_clients=N_CLIENTS, dim=DIM,
+                                     n_measurements=N_MEAS)
+    base = _fedcet(problem)
+    composed = with_delay(
+        with_compression(base, compressor="shift:q8"), "fixed:2",
+        policy="last")
+
+    # ---- 1. wall-clock overhead of the in-trace captures -----------------
+    off_us, out_off = _time_round(composed, problem)
+    on_us, out_on = _time_round(with_telemetry(composed, True), problem)
+    ratio = on_us / off_us
+    # telemetry must also be a bitwise no-op on the state it observed
+    s_off, s_on = out_off[0], out_on[0]
+    diffs = jax.tree.map(lambda a, b: float(abs(a - b).max()),
+                         jax.tree.leaves(s_off), jax.tree.leaves(s_on))
+    assert max(diffs) == 0.0, diffs
+    assert ratio <= MAX_OVERHEAD, (
+        f"telemetry overhead {ratio:.3f}x exceeds {MAX_OVERHEAD}x "
+        f"({off_us:.1f}us -> {on_us:.1f}us per round)")
+
+    instr_off = _instr_count(composed, problem)
+    instr_on = _instr_count(with_telemetry(composed, True), problem)
+
+    # ---- 2. the PR 3 staleness boundary, live from one run's JSONL -------
+    tmp = tempfile.mkdtemp(prefix="telemetry_bench_")
+    exact, exact_warns, drain_exact_us = _jsonl_boundary(
+        base, problem, "fixed:2", os.path.join(tmp, "fixed2_poly1.jsonl"))
+    drift, drift_warns, drain_drift_us = _jsonl_boundary(
+        base, problem, "rr:2", os.path.join(tmp, "rr2_poly1.jsonl"))
+    # fixed:k -> uniform ages -> poly weights uniform -> exact: the monitor
+    # stays silent and the streamed residual series sits at f64 noise.
+    assert max(exact) < 1e-9, max(exact)
+    assert not exact_warns, exact_warns[:2]
+    # rr:2 -> non-uniform ages -> poly weights non-uniform -> Lemma 2
+    # breaks: the residual drifts above the bound and the monitor fires,
+    # naming the offending axis.
+    assert max(drift) > 1e-4, max(drift)
+    assert drift_warns, "monitor failed to fire on rr:2 + poly:1"
+    assert "stale_policy" in drift_warns[0]["axis"]
+
+    timings = {
+        "round_telemetry_off": off_us,
+        "round_telemetry_on": on_us,
+        "drain_per_round_exact": drain_exact_us,
+        "drain_per_round_drift": drain_drift_us,
+    }
+    write_bench_json(
+        "telemetry",
+        config={"n_clients": N_CLIENTS, "dim": DIM,
+                "n_measurements": N_MEAS,
+                "rounds_per_call": ROUNDS_PER_CALL,
+                "boundary_rounds": BOUNDARY_ROUNDS,
+                "scenario": "shift:q8 + fixed:2/last",
+                "max_overhead": MAX_OVERHEAD},
+        timings=timings,
+        extra={"overhead_ratio": round(ratio, 4),
+               "hlo_instructions": {"off": instr_off, "on": instr_on},
+               "boundary": {
+                   "fixed2_poly1_max_residual": max(exact),
+                   "rr2_poly1_max_residual": max(drift),
+                   "rr2_poly1_warns": len(drift_warns)}},
+        out_dir=results_dir())
+    if csv_rows is not None:
+        csv_rows.append((
+            "telemetry/overhead", on_us,
+            f"off_us={off_us:.1f};ratio={ratio:.3f}"
+            f";hlo_off={instr_off};hlo_on={instr_on}"))
+        csv_rows.append((
+            "telemetry/boundary", 0.0,
+            f"fixed2_poly1_max_res={max(exact):.3e}"
+            f";rr2_poly1_max_res={max(drift):.3e}"
+            f";warns={len(drift_warns)}"))
+    return {"ratio": ratio, "exact": max(exact), "drift": max(drift)}
+
+
+if __name__ == "__main__":
+    rows = []
+    run(csv_rows=rows)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(",".join(map(str, r)))

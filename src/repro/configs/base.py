@@ -9,7 +9,7 @@ d_model<=512, <=4 experts) as required by the assignment.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,11 +170,19 @@ class FedScenario:
     every knob above and is pinned <=1e-12-equivalent to the per-leaf
     lowering, so checkpoints and shardings stay flippable either way.
 
+    ``telemetry`` attaches the in-trace round telemetry spec
+    (:mod:`repro.core.telemetry`): per-round metric capture inside the
+    jitted round (norms, compression error, invariant residual, consensus
+    error, participation, staleness ages) with no host sync. ``False`` /
+    ``"none"`` (the default) is a BITWISE no-op — the algorithm object is
+    returned unchanged; any truthy value (``True``, a sink spec string, a
+    ``Telemetry`` object) enables the default metric set.
+
     ``apply`` composes the scenario onto ANY engine algorithm — the same
     expression the simulation tests pin, now reachable from the production
     LM loop (`launch/train.py --compression ... --participation ...
     --delay ... --stale-policy ... --topology ... --tier-compression
-    ... --cohort ... --arena`)."""
+    ... --cohort ... --arena ... --telemetry jsonl:path`)."""
 
     compression: str = "none"
     participation: float = 1.0
@@ -185,13 +193,15 @@ class FedScenario:
     error_feedback: bool | None = None
     cohort: int | str | None = "none"
     arena: bool = False
+    telemetry: Any = False
     seed: int = 0
 
     def apply(self, algo):
         from repro.core.compressors import from_spec
         from repro.core.engine import (with_arena, with_cohort,
                                        with_compression, with_delay,
-                                       with_participation, with_topology)
+                                       with_participation, with_telemetry,
+                                       with_topology)
 
         algo = with_arena(algo, self.arena)
         algo = with_topology(algo, self.topology, seed=self.seed,
@@ -206,7 +216,10 @@ class FedScenario:
                           seed=self.seed)
         # cohort last: it wraps the fully-composed spec so every transform
         # above runs inside the O(cohort) gathered round.
-        return with_cohort(algo, self.cohort, seed=self.seed)
+        algo = with_cohort(algo, self.cohort, seed=self.seed)
+        # telemetry is an observer — attach after everything so captures
+        # see the final composed round (exact no-op when disabled).
+        return with_telemetry(algo, self.telemetry)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -10,7 +10,9 @@ FedTrack / FedLin move two. This module provides
   ``for_params(params, algo=...)`` and it derives per-coordinate wire bits
   from the algorithm's attached compressor stack (``bits_per_coord``) — the
   old ``itemsize=4`` path silently overcounted bf16/quantized uplinks and
-  is deprecated. With a ``with_delay`` model attached the uplink is
+  has been removed from ``for_params`` (it raises with a migration hint;
+  the direct constructor keeps the fixed-width legacy mode for explicit
+  opt-in). With a ``with_delay`` model attached the uplink is
   additionally scaled by the transmit duty cycle (``transmit_frac``):
   buffered rounds where a client does not transmit count zero uplink bits.
   With client sampling attached the DOWNLINK scales by ``receive_frac``
@@ -33,7 +35,6 @@ Chain, ErrorFeedback) live in :mod:`repro.core.compressors`.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -143,10 +144,11 @@ class CommMeter:
       folded in — ``tick`` must NOT also be given ``up_frac`` (raises, to
       catch double counting).
     * **legacy** (``bits_up`` None): dense ``itemsize`` bytes per
-      coordinate scaled by an explicit ``up_frac`` per tick. Kept for old
-      call sites; the ``itemsize`` kwarg of ``for_params`` is deprecated —
-      it was silently wrong for bf16/quantized uplinks (a 4-byte default
-      regardless of what the compressor put on the wire)."""
+      coordinate scaled by an explicit ``up_frac`` per tick. Reachable
+      only through the direct constructor — the ``itemsize`` kwarg of
+      ``for_params`` now raises (it was silently wrong for bf16/quantized
+      uplinks: a 4-byte default regardless of what the compressor put on
+      the wire)."""
 
     n_params: int
     itemsize: int = 4
@@ -180,13 +182,17 @@ class CommMeter:
         """Meter for one parameter pytree. Pass ``algo=`` for bit-true
         accounting from its compressor stack, its delay model's uplink
         duty cycle, its sampling rate's downlink duty cycle, and its
-        topology's per-hop traffic shape; ``itemsize`` is deprecated."""
+        topology's per-hop traffic shape; ``itemsize`` is REMOVED and
+        raises with a migration hint."""
         if itemsize is not None:
-            warnings.warn(
-                "CommMeter.for_params(itemsize=...) is deprecated: it "
-                "assumes a fixed dense width and miscounts compressed "
-                "uplinks. Pass algo= for bit-true accounting.",
-                DeprecationWarning, stacklevel=2)
+            raise ValueError(
+                "CommMeter.for_params(itemsize=...) was removed: it "
+                "assumed a fixed dense width and miscounted compressed "
+                "uplinks. Migrate to CommMeter.for_params(params, "
+                "algo=algo, n_clients=n) for bit-true accounting from the "
+                "algorithm's compressor stack (or construct "
+                "CommMeter(n_params=..., itemsize=...) directly if you "
+                "really want a fixed width).")
         if algo is not None:
             topo = topology_of(algo)
             return cls(n_params=tree_num_params(params), n_clients=n_clients,

@@ -141,6 +141,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import telemetry as tele
 from repro.core.api import GradFn, vmap_grads
 from repro.core.comm import sparsified_up_frac
 from repro.core.staleness import (
@@ -503,6 +504,14 @@ class RoundEngine:
     #: representation-transparent (Arena is a pytree node), so every
     #: transform/axis above composes unchanged.
     arena: bool = dataclasses.field(default=False, kw_only=True)
+    #: in-trace telemetry spec (core/telemetry.py): when attached, the
+    #: round captures per-round scalars (gradient/message norms,
+    #: compression error, participation, staleness ages; the runner adds
+    #: the invariant residual and consensus error from the post-round
+    #: state) onto the runner's tape with no host sync. None (the
+    #: default) is a BITWISE no-op: every capture site is guarded on this
+    #: field, so the disabled round traces the identical jaxpr.
+    telemetry: Any | None = dataclasses.field(default=None, kw_only=True)
     #: mesh axes carrying the client dimension (production launcher only).
     spmd_client_axes: tuple = dataclasses.field(default=(), kw_only=True)
 
@@ -685,25 +694,42 @@ class RoundEngine:
     # ------------------------------------------------------------- plumbing
     def _grad(self, grad_fn: GradFn) -> GradFn:
         gf = vmap_grads(grad_fn, spmd_axis_name=(self.spmd_client_axes or None))
-        if not self.arena:
+        if self.arena:
+            from repro.core.arena import Arena, pack, unpack
+
+            base = gf
+
+            # the model-apply boundary: the loss sees the real pytree, the
+            # engine sees the arena. The unpack is pure slicing — XLA fuses
+            # it into the gradient consumers (measured: unpack+grads costs
+            # ~the grads alone); the repack is the one real crossing per
+            # call. (Returning RAW grads and folding the pack into the
+            # spec's first consumer was tried and is SLOWER: outside the
+            # grad closure the unpacked x/d slices materialize as copies
+            # instead of fusing, so the per-leaf triad + concat streams the
+            # model twice more than pack-then-fused-triad. Keep the pack
+            # here.)
+            def arena_gf(x, batch):
+                if not isinstance(x, Arena):
+                    return base(x, batch)
+                return pack(base(unpack(x), batch), x.layout)
+
+            gf = arena_gf
+        if self.telemetry is None:
             return gf
-        from repro.core.arena import Arena, pack, unpack
 
-        # the model-apply boundary: the loss sees the real pytree, the
-        # engine sees the arena. The unpack is pure slicing — XLA fuses it
-        # into the gradient consumers (measured: unpack+grads costs ~the
-        # grads alone); the repack is the one real crossing per call.
-        # (Returning RAW grads and folding the pack into the spec's first
-        # consumer was tried and is SLOWER: outside the grad closure the
-        # unpacked x/d slices materialize as copies instead of fusing, so
-        # the per-leaf triad + concat streams the model twice more than
-        # pack-then-fused-triad. Keep the pack here.)
-        def arena_gf(x, batch):
-            if not isinstance(x, Arena):
-                return gf(x, batch)
-            return pack(gf(unpack(x), batch), x.layout)
+        inner_gf = gf
 
-        return arena_gf
+        # the capture is a no-op outside the runner's tape and inside the
+        # muted tau-1 local scan; an Arena gradient's zero pads make the
+        # packed norm equal the per-leaf norm.
+        def recording_gf(x, batch):
+            g = inner_gf(x, batch)
+            if tele.collecting():
+                tele.capture("grad_norm", tele.mean_client_norm(g))
+            return g
+
+        return recording_gf
 
     def _msg_shapes(self, gf, inner, init_batch):
         """Abstract (eval_shape) wire-message tree of the current state —
@@ -743,16 +769,25 @@ class RoundEngine:
         ``(inner, extras, dstate, tx)`` — ``tx`` is the post-transform
         wire message (``init`` seeds the buffer from it)."""
         msg, mctx = self.message(gf, inner, batch, rctx)
+        # observer-only telemetry: rec is False when telemetry is detached
+        # (bitwise no-op) or no tape is active (init / direct round calls).
+        rec = self.telemetry is not None and tele.collecting()
+        if rec:
+            tele.capture("msg_norm", tele.mean_client_norm(msg))
         if (dstate is None and self.delay is None and self.topology is None
                 and self.arena):
             fused = self._fused_tail(inner, msg, mctx, extras, step, mask)
             if fused is not None:
                 inner, new_extras = fused
                 return inner, tuple(new_extras), tstate, None, None
+        raw = msg
         new_extras = []
         for t, e in zip(self.transforms, extras):
             msg, e = t.apply(msg, e, step)
             new_extras.append(e)
+        if rec and self.transforms:
+            tele.capture("compress_err", tele.mean_client_norm(
+                jax.tree.map(lambda a, b: a - b, msg, raw)))
 
         if dstate is None:  # synchronous path (and always: init)
             if self.topology is not None:
@@ -767,6 +802,11 @@ class RoundEngine:
         # buffer is server state — it updates and ages every round.
         buf = select_clients(msg, dstate.buf, fresh, self.n_clients)
         age = jnp.where(fresh, 0, dstate.age + 1).astype(dstate.age.dtype)
+        if rec:
+            tele.capture("fresh_count", jnp.sum(fresh.astype(jnp.int32)))
+            tele.capture("age_min", jnp.min(age))
+            tele.capture("age_mean", jnp.mean(age.astype(jnp.float32)))
+            tele.capture("age_max", jnp.max(age))
         w = self.delay.policy.weights(age, fresh)
         # the stale policy's weights feed the TOPOLOGY's reduction (the
         # same weighted seam as the synchronous path), so hierarchical /
@@ -907,6 +947,10 @@ class RoundEngine:
             fresh = self.delay.fresh_mask(step0, self.tau, self.n_clients)
             if mask is not None:
                 fresh = jnp.logical_and(fresh, mask)  # absent can't deliver
+        if self.telemetry is not None and tele.collecting():
+            tele.capture("participating",
+                         jnp.sum(mask.astype(jnp.int32)) if mask is not None
+                         else jnp.asarray(self.n_clients, jnp.int32))
         frozen_inner, frozen_extras = inner, extras
 
         first_b = jax.tree.map(lambda b: b[0], batches)
@@ -918,7 +962,10 @@ class RoundEngine:
             def body(s, b):
                 return self.local_step(gf, s, b, rctx), None
 
-            inner, _ = jax.lax.scan(body, inner, local_b)
+            # muted: a capture inside the scan body would leak inner-scan
+            # tracers onto the round-level telemetry tape.
+            with tele.muted():
+                inner, _ = jax.lax.scan(body, inner, local_b)
 
         last_b = jax.tree.map(lambda b: b[self.tau - 1], batches)
         inner, extras, tstate, dstate, _ = self._comm_step(
@@ -979,9 +1026,10 @@ class RoundEngine:
             st, rctx = self.begin_round(gf, inner, first_b, dense_agg)
             if tau > 1:
                 local_b = jax.tree.map(lambda b: b[: tau - 1], batches)
-                st, _ = jax.lax.scan(
-                    lambda s, b: (self.local_step(gf, s, b, rctx), None),
-                    st, local_b)
+                with tele.muted():
+                    st, _ = jax.lax.scan(
+                        lambda s, b: (self.local_step(gf, s, b, rctx), None),
+                        st, local_b)
             last_b = jax.tree.map(lambda b: b[tau - 1], batches)
             msg, mctx = self.message(gf, st, last_b, rctx)
             inner_c = gather_clients(st, idx, N)
@@ -998,21 +1046,32 @@ class RoundEngine:
             inner_c, rctx_c = self.begin_round(gf, inner_c, first_b, agg)
             if tau > 1:
                 local_b = jax.tree.map(lambda b: b[: tau - 1], batches_c)
-                inner_c, _ = jax.lax.scan(
-                    lambda s, b: (self.local_step(gf, s, b, rctx_c), None),
-                    inner_c, local_b)
+                with tele.muted():
+                    inner_c, _ = jax.lax.scan(
+                        lambda s, b: (self.local_step(gf, s, b, rctx_c),
+                                      None),
+                        inner_c, local_b)
             last_b_c = jax.tree.map(lambda b: b[tau - 1], batches_c)
             msg_c, mctx_c = self.message(gf, inner_c, last_b_c, rctx_c)
 
         # ---- phase B: transforms -> [buffer] -> reduce -> apply, all on
         # cohort-sized arrays in BOTH lowerings (shared code = bitwise
         # lowering equivalence; cross-client ops are per-cohort by design).
+        rec = self.telemetry is not None and tele.collecting()
+        if rec:
+            tele.capture("msg_norm", tele.mean_client_norm(msg_c))
+            tele.capture("participating",
+                         jnp.sum(mask.astype(jnp.int32)) if mask is not None
+                         else jnp.asarray(m, jnp.int32))
         tx_c = msg_c
         new_extras_c = []
         for t, e in zip(self.transforms, extras_c):
             tx_c, e = t.apply(tx_c, e, step0)
             new_extras_c.append(e)
         new_extras_c = tuple(new_extras_c)
+        if rec and self.transforms:
+            tele.capture("compress_err", tele.mean_client_norm(
+                jax.tree.map(lambda a, b: a - b, tx_c, msg_c)))
 
         if dstate is None:
             if self.topology is not None:
@@ -1053,6 +1112,15 @@ class RoundEngine:
                     dstate.buf, buf_c),
                 age=(dstate.age + 1).astype(dstate.age.dtype
                                             ).at[idx].set(age_c))
+            if rec:
+                # cohort arrivals; ages summarize the FULL server buffer
+                # (non-cohort entries keep aging — the system-wide view).
+                tele.capture("fresh_count",
+                             jnp.sum(fresh.astype(jnp.int32)))
+                tele.capture("age_min", jnp.min(dstate_next.age))
+                tele.capture("age_mean",
+                             jnp.mean(dstate_next.age.astype(jnp.float32)))
+                tele.capture("age_max", jnp.max(dstate_next.age))
 
         if mask is not None:
             # absent cohort members keep their pre-round rows entirely
@@ -1254,6 +1322,25 @@ def with_arena(algo: RoundEngine, enable: bool = True) -> RoundEngine:
     return dataclasses.replace(algo, arena=True)
 
 
+def with_telemetry(algo: RoundEngine, telemetry=True) -> RoundEngine:
+    """In-trace round telemetry for ANY engine algorithm (see
+    repro/core/telemetry.py): the round captures per-round scalar metrics
+    (gradient/message norms, compression error, participation, staleness
+    ages, the ``sum_i d_i`` invariant residual, the consensus error) onto
+    the runner's scan — no host sync, no extra algorithm state
+    (checkpoints unaffected).
+
+    ``telemetry`` is ``True`` / a :class:`~repro.core.telemetry.Telemetry`
+    spec / any truthy spec string; disabled specs (``None`` / ``False`` /
+    ``"none"`` / ``"off"``) are exact no-ops — the algorithm object is
+    returned unchanged, so telemetry OFF is bitwise identical to the
+    un-instrumented engine (pinned in tests/test_telemetry.py)."""
+    spec = tele.parse_telemetry(telemetry)
+    if spec is None:
+        return algo
+    return dataclasses.replace(algo, telemetry=spec)
+
+
 # --------------------------------------------------------- multi-round driver
 def make_round_runner(algo, grad_fn: GradFn, *, metric_fn=None,
                       repeat: bool = False, metric_with_batch: bool = False,
@@ -1280,18 +1367,37 @@ def make_round_runner(algo, grad_fn: GradFn, *, metric_fn=None,
     O(cohort) and peak memory ~1x the store. The caller must rebind
     (``state = run(state, ...)``) and never touch the donated value again
     — callers that re-read the input state afterwards (e.g.
-    ``simulate_quadratic``'s err(state0)) must keep the default."""
+    ``simulate_quadratic``'s err(state0)) must keep the default.
+
+    With telemetry attached (``with_telemetry``) each round's body runs
+    under a :func:`repro.core.telemetry.collect` tape and the stacked ys
+    become ``{"metric": ..., "telemetry": {...}}`` — split them with
+    :func:`repro.core.telemetry.split_metrics`. Without telemetry the ys
+    structure (and the traced jaxpr) is exactly the pre-telemetry one."""
     def _metric(s, b):
         if metric_fn is None:
             return None
         return metric_fn(s, b) if metric_with_batch else metric_fn(s)
 
+    tel = getattr(algo, "telemetry", None)
+
+    def _round(s, b):
+        if tel is None:
+            return algo.round(grad_fn, s, b), None
+        with tele.collect() as tape:
+            s = algo.round(grad_fn, s, b)
+        return s, tel.finalize(tape, algo, s)
+
+    def _ys(s, b, tl):
+        m = _metric(s, b)
+        return m if tel is None else {"metric": m, "telemetry": tl}
+
     donate_kw = {"donate_argnums": (0,)} if donate else {}
     if repeat:
         def run(state, batches, rounds):
             def body(s, _):
-                s = algo.round(grad_fn, s, batches)
-                return s, _metric(s, batches)
+                s, tl = _round(s, batches)
+                return s, _ys(s, batches, tl)
 
             return jax.lax.scan(body, state, None, length=rounds)
 
@@ -1299,8 +1405,8 @@ def make_round_runner(algo, grad_fn: GradFn, *, metric_fn=None,
 
     def run(state, batches):
         def body(s, b):
-            s = algo.round(grad_fn, s, b)
-            return s, _metric(s, b)
+            s, tl = _round(s, b)
+            return s, _ys(s, b, tl)
 
         return jax.lax.scan(body, state, batches)
 

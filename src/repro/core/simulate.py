@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import run_rounds
+from repro.core.telemetry import split_metrics
 from repro.data.quadratic import QuadraticProblem
 
 
@@ -24,6 +25,10 @@ class SimResult:
     errors: jax.Array        # [rounds+1] e(k) = ||mean_i x_i(k tau) - x*||
     state: Any               # final algorithm state
     bytes_per_round: int     # per the algorithm's declared vectors
+    #: stacked per-round telemetry series (dict of [rounds] arrays) when
+    #: the algorithm has ``with_telemetry`` attached, else None. Feed it
+    #: to ``repro.core.telemetry.drain`` for sink/monitor processing.
+    telemetry: Any = None
 
     @property
     def final_error(self) -> float:
@@ -46,11 +51,13 @@ def simulate_quadratic(algo, problem: QuadraticProblem, rounds: int,
     def err(state) -> jax.Array:
         return jnp.linalg.norm(algo.global_params(state) - x_star)
 
-    final_state, errs = run_rounds(algo, grad_fn, state0, batches,
-                                   rounds=rounds, metric_fn=err)
+    final_state, ys = run_rounds(algo, grad_fn, state0, batches,
+                                 rounds=rounds, metric_fn=err)
+    errs, telemetry = split_metrics(algo, ys)
     errors = jnp.concatenate([err(state0)[None], errs])
     n_bytes = (algo.vectors_up + algo.vectors_down) * problem.dim * 4 * problem.n_clients
-    return SimResult(errors=errors, state=final_state, bytes_per_round=n_bytes)
+    return SimResult(errors=errors, state=final_state, bytes_per_round=n_bytes,
+                     telemetry=telemetry)
 
 
 def paper_fig1_algorithms(problem: QuadraticProblem, tau: int = 2):

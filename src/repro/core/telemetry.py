@@ -1,0 +1,535 @@
+"""In-trace telemetry: per-round metrics, invariant monitors, event sinks.
+
+The engine's round body runs inside one jitted ``lax.scan`` over K rounds —
+a host callback per round would serialize the scan, and re-running the
+round outside jit to measure it would double the work. This module instead
+captures scalars *while the round is being traced*:
+
+* :func:`capture` writes a named scalar onto the active **tape** — a
+  trace-time collector the round runner opens around ``algo.round`` via
+  :func:`collect`. Outside a tape (direct ``algo.round`` calls, ``init``,
+  ``eval_shape``) and inside :func:`muted` regions (the engine mutes the
+  tau-1 local ``lax.scan`` — a capture there would leak inner-scan tracers
+  into the round-level tape) it is a no-op, so instrumented code needs no
+  caller-side discipline.
+* :meth:`Telemetry.finalize` turns tape + post-round state into the round's
+  metric dict — tape scalars plus state-derived series: FedCET's
+  ``sum_i d_i = 0`` invariant residual (Lemma 2 — the quantity PR 3/PR 5
+  measured drifting under poly staleness / tier recompression, now live)
+  and the consensus error ``max_i ||x_i - x_bar||`` (the gossip-descent
+  quantity). The dict becomes the scan's stacked ys: metrics stay
+  on-device for the whole segment, ZERO host syncs inside the scan.
+* :func:`drain` device-gets the stacked series ONCE per segment and feeds
+  per-round events (plus :class:`Monitor` WARN events and static per-round
+  bit accounting from :func:`repro.core.comm.comm_bits_per_round`) into
+  pluggable sinks: :class:`JsonlSink` (one JSON object per line, manifest
+  first), :class:`CsvSink`, :class:`StdoutSink`, :class:`MemorySink`.
+
+Telemetry disabled (``algo.telemetry is None``) must be a BITWISE no-op:
+the engine guards every capture on the attached spec, so the disabled
+round traces the exact same jaxpr as before this module existed —
+tests/test_telemetry.py pins 0.0 divergence across the composed-scenario
+matrix.
+
+Profiling hooks live here too: :class:`TraceSession` brackets a
+``--trace-rounds a:b`` window with ``jax.profiler`` trace capture, and
+:func:`instruction_count` counts optimized-HLO instructions (reusing
+``roofline/hlo_parse``'s computation splitter) so benchmarks can report
+the instrumentation's compiled footprint.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import subprocess
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ------------------------------------------------------------------ the tape
+#: stack of active trace-time collectors (nested collect()s shadow like
+#: dynamic scope) and a mute depth counter. Trace-time only — never part of
+#: traced state, so it adds no jaxpr inputs and costs nothing when empty.
+_TAPES: list[dict] = []
+_MUTE: int = 0
+
+
+def collecting() -> bool:
+    """True when a tape is active and not muted — the engine's guard for
+    building capture ops at all (disabled telemetry traces zero extra ops)."""
+    return bool(_TAPES) and _MUTE == 0
+
+
+def capture(name: str, value) -> None:
+    """Record a named scalar on the active tape (no-op without one).
+    Repeated captures of the same name within a round keep the LAST value
+    (e.g. ``grad_norm`` at the aggregating step, not a begin_round probe)."""
+    if collecting():
+        _TAPES[-1][name] = value
+
+
+@contextlib.contextmanager
+def collect():
+    """Open a tape around a traced region; yields the dict of captured
+    tracers (valid within the same trace — the caller folds them into its
+    outputs before the trace ends)."""
+    tape: dict = {}
+    _TAPES.append(tape)
+    try:
+        yield tape
+    finally:
+        _TAPES.pop()
+
+
+@contextlib.contextmanager
+def muted():
+    """Suppress captures while tracing an inner ``lax.scan`` body (whose
+    tracers must not escape onto the round-level tape)."""
+    global _MUTE
+    _MUTE += 1
+    try:
+        yield
+    finally:
+        _MUTE -= 1
+
+
+# ----------------------------------------------------------- metric helpers
+def client_sq_norms(tree):
+    """``[clients]`` squared L2 norms: per-client sum of squares over every
+    leaf's non-leading axes (leaves carry a leading clients axis; an Arena
+    leaf's zero pads contribute nothing, so packed == per-leaf)."""
+    tot = None
+    for a in jax.tree.leaves(tree):
+        s = jnp.sum(jnp.square(a), axis=tuple(range(1, a.ndim)))
+        tot = s if tot is None else tot + s
+    return tot
+
+
+def mean_client_norm(tree):
+    """Mean over clients of the per-client L2 norm."""
+    return jnp.mean(jnp.sqrt(client_sq_norms(tree)))
+
+
+def _tree_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(a)) for a in jax.tree.leaves(tree)))
+
+
+# ------------------------------------------------------------------ monitors
+@dataclasses.dataclass(frozen=True)
+class Monitor:
+    """Declarative per-round alert: WARN when ``metric`` crosses ``bound``
+    (``mode="max"``: value > bound; ``"min"``: value < bound). ``axis``
+    names the scenario axis the violation implicates — the WARN event
+    carries it so a drifting invariant points at its cause."""
+
+    metric: str
+    bound: float
+    mode: str = "max"
+    axis: str = ""
+
+    def violated(self, value) -> bool:
+        v = float(value)
+        return v > self.bound if self.mode == "max" else v < self.bound
+
+
+#: the PR 3 pinned boundary as a live check: FedCET's redistributive drift
+#: updates keep sum_i d_i = 0 exactly (Lemma 2) under every exact scenario
+#: (fixed:k delay included — uniform ages make poly discounting uniform);
+#: non-uniform stale-policy weights (poly:a with rr/geom ages) and tier
+#: recompression break the redistribution. The residual is RELATIVE
+#: (||mean_i d_i|| / mean_i ||d_i||): exact scenarios sit at accumulation
+#: noise (~1e-13 in f64), the pinned drift scenarios reach O(1e-2..1).
+INVARIANT_MONITOR = Monitor(
+    metric="invariant_residual", bound=1e-6, mode="max",
+    axis="stale_policy (poly:a discounting with non-uniform ages) or "
+         "tier_compression — non-uniform aggregation weights break the "
+         "sum_i d_i = 0 redistribution (Lemma 2)")
+
+
+# ------------------------------------------------------------- the spec
+@dataclasses.dataclass(frozen=True)
+class Telemetry:
+    """The telemetry spec attached to an engine algorithm
+    (``with_telemetry`` / ``FedScenario(telemetry=...)``). Hashable and
+    stateless — it adds NO algorithm state (checkpoints are unaffected)
+    and selects which metrics the runner stacks and which monitors the
+    drain evaluates.
+
+    ``metrics="auto"`` keeps everything captured plus the state-derived
+    series; a tuple restricts to those names (unavailable names are
+    silently absent — e.g. no ``age_*`` without a delay model).
+    ``monitors="auto"`` evaluates :data:`INVARIANT_MONITOR` on algorithms
+    that expose the drift state; a tuple of :class:`Monitor` overrides."""
+
+    metrics: tuple | str = "auto"
+    monitors: tuple | str = "auto"
+
+    def finalize(self, tape: dict, algo, state) -> dict:
+        """Tape + post-round state -> the round's metric dict (still
+        traced values; becomes the scan's stacked ys)."""
+        out = dict(tape)
+        inner = algo._inner(state)
+        d = getattr(inner, "d", None)
+        if d is not None:
+            num = _tree_norm(jax.tree.map(lambda a: jnp.mean(a, axis=0), d))
+            den = mean_client_norm(d)
+            out["invariant_residual"] = num / jnp.maximum(
+                den, jnp.asarray(1e-30, den.dtype))
+        x = getattr(inner, "x", None)
+        if x is None:
+            x = getattr(inner, "x_curr", None)
+        if x is not None:
+            dev = jax.tree.map(
+                lambda a: a - jnp.mean(a, axis=0, keepdims=True), x)
+            out["consensus_err"] = jnp.sqrt(jnp.max(client_sq_norms(dev)))
+        if self.metrics != "auto":
+            out = {k: out[k] for k in self.metrics if k in out}
+        return out
+
+
+def parse_telemetry(spec) -> Telemetry | None:
+    """Normalize a telemetry knob: ``None`` / ``False`` / ``"none"`` /
+    ``"off"`` / ``""`` -> None (disabled — the factory returns the
+    algorithm unchanged); a :class:`Telemetry` passes through; any other
+    truthy value (``True``, a sink spec string) -> the default spec."""
+    if spec is None or spec is False:
+        return None
+    if isinstance(spec, Telemetry):
+        return spec
+    if isinstance(spec, str) and spec.strip().lower() in (
+            "", "none", "off", "0", "false"):
+        return None
+    return Telemetry()
+
+
+def resolve_monitors(telemetry: Telemetry | None) -> tuple:
+    if telemetry is None:
+        return ()
+    if telemetry.monitors == "auto":
+        return (INVARIANT_MONITOR,)
+    return tuple(telemetry.monitors)
+
+
+def split_metrics(algo, ys):
+    """Split a round runner's stacked ys into ``(metrics, telemetry)`` —
+    the runner nests them only when the algorithm has telemetry attached,
+    so un-instrumented callers see the exact pre-telemetry structure."""
+    if getattr(algo, "telemetry", None) is None or ys is None:
+        return ys, None
+    return ys["metric"], ys["telemetry"]
+
+
+# --------------------------------------------------------------------- sinks
+def _scalar(v):
+    a = np.asarray(v)
+    if a.dtype.kind == "b":
+        return bool(a)
+    if a.dtype.kind in "iu":
+        return int(a)
+    return float(a)
+
+
+class MemorySink:
+    """Collects events in a list (tests / programmatic consumers)."""
+
+    def __init__(self):
+        self.events: list[dict] = []
+
+    def emit(self, event: dict) -> None:
+        self.events.append(event)
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlSink:
+    """One JSON object per line; the run manifest is the first event."""
+
+    def __init__(self, path: str):
+        self.path = path
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(path, "w")
+
+    def emit(self, event: dict) -> None:
+        self._f.write(json.dumps(event) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
+
+
+class CsvSink:
+    """Round events as CSV; columns fixed by the first round event
+    (non-round events are skipped — JSONL is the full stream)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(path, "w")
+        self._keys: list[str] | None = None
+
+    def emit(self, event: dict) -> None:
+        if event.get("event") != "round":
+            return
+        if self._keys is None:
+            self._keys = [k for k in event if k != "event"]
+            self._f.write(",".join(self._keys) + "\n")
+        self._f.write(",".join(str(event.get(k, "")) for k in self._keys)
+                      + "\n")
+
+    def close(self) -> None:
+        self._f.close()
+
+
+class StdoutSink:
+    """Human-readable summary lines; round lines gated by ``every``."""
+
+    def __init__(self, every: int = 1):
+        self.every = max(int(every), 1)
+
+    @staticmethod
+    def _fmt(v):
+        return f"{v:.6g}" if isinstance(v, float) else str(v)
+
+    def emit(self, event: dict) -> None:
+        kind = event.get("event")
+        if kind == "round":
+            if event.get("round", 0) % self.every:
+                return
+            body = "  ".join(f"{k}={self._fmt(v)}" for k, v in event.items()
+                             if k not in ("event", "round"))
+            print(f"[telemetry] round {event.get('round', 0):5d}  {body}")
+        elif kind == "monitor":
+            print(f"[telemetry] WARN round {event.get('round')}: "
+                  f"{event.get('metric')}={self._fmt(event.get('value'))} "
+                  f"{'>' if event.get('mode', 'max') == 'max' else '<'} "
+                  f"{event.get('bound')}  (axis: {event.get('axis', '')})")
+        elif kind == "manifest":
+            print(f"[telemetry] run algo={event.get('algo')} "
+                  f"n_clients={event.get('n_clients')} tau={event.get('tau')} "
+                  f"commit={event.get('commit')}")
+        elif kind == "profile":
+            print(f"[telemetry] profiler {event.get('action')} at round "
+                  f"{event.get('round')} -> {event.get('dir')}")
+
+    def close(self) -> None:
+        pass
+
+
+def parse_sinks(spec) -> list:
+    """Sink spec grammar (the ``--telemetry`` CLI knob): comma-separated
+    ``jsonl:<path>`` | ``csv:<path>`` | ``stdout[:every]`` | ``memory``.
+    Sink objects / lists pass through; None -> []."""
+    if spec is None or spec is True:
+        return []
+    if not isinstance(spec, str):
+        return list(spec) if isinstance(spec, (list, tuple)) else [spec]
+    sinks = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        kind, _, arg = part.partition(":")
+        kind = kind.lower()
+        if kind == "jsonl":
+            sinks.append(JsonlSink(arg or "telemetry.jsonl"))
+        elif kind == "csv":
+            sinks.append(CsvSink(arg or "telemetry.csv"))
+        elif kind == "stdout":
+            sinks.append(StdoutSink(every=int(arg) if arg else 1))
+        elif kind in ("memory", "mem"):
+            sinks.append(MemorySink())
+        else:
+            raise ValueError(f"unknown telemetry sink {part!r} "
+                             "(jsonl:<path> | csv:<path> | stdout[:k] | "
+                             "memory)")
+    return sinks
+
+
+def emit_event(sinks, event: dict) -> None:
+    for s in sinks:
+        s.emit(event)
+
+
+def close_sinks(sinks) -> None:
+    for s in sinks:
+        s.close()
+
+
+# ----------------------------------------------------------- manifest/drain
+def _git_commit() -> str | None:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() or None
+    except OSError:
+        return None
+
+
+def run_manifest(algo, *, n_params: int | None = None, config: dict | None = None,
+                 monitors: tuple = (), extra: dict | None = None) -> dict:
+    """The run's first event: what ran, where, and what one round costs on
+    the wire (the ``comm_hops_per_round`` per-hop contract + totals)."""
+    tel = getattr(algo, "telemetry", None)
+    ev = {
+        "event": "manifest", "schema": 1,
+        "algo": getattr(algo, "name", type(algo).__name__),
+        "n_clients": getattr(algo, "n_clients", None),
+        "tau": getattr(algo, "tau", None),
+        "commit": _git_commit(),
+        "mesh": {"backend": jax.default_backend(),
+                 "n_devices": jax.device_count()},
+        "metrics": (list(tel.metrics)
+                    if tel is not None and tel.metrics != "auto" else "auto"),
+        "monitors": [dataclasses.asdict(m) for m in monitors],
+        "config": dict(config or {}),
+    }
+    if n_params:
+        from repro.core.comm import comm_bits_per_round, comm_hops_per_round
+
+        nc = getattr(algo, "n_clients", 1)
+        ev["bits_per_round"] = comm_bits_per_round(algo, n_params, nc)
+        ev["hops"] = comm_hops_per_round(algo, n_params, nc)
+    if extra:
+        ev.update(extra)
+    return ev
+
+
+def drain(series: dict | None, *, sinks=(), monitors=(), start_round: int = 0,
+          static: dict | None = None, algo=None,
+          n_params: int | None = None) -> list:
+    """Device-get the stacked per-round telemetry pytree ONCE and emit one
+    ``round`` event per round into the sinks, evaluating ``monitors``
+    against each (violations emit a structured WARN event right after
+    their round). ``static`` merges constant per-round fields; passing
+    ``algo``/``n_params`` derives the bit-true ``bits_up``/``bits_down``
+    per round from the comm accounting. Returns the emitted events."""
+    events: list[dict] = []
+    if not series:
+        return events
+    host = {k: np.asarray(jax.device_get(v)) for k, v in series.items()}
+    n = len(next(iter(host.values())))
+    stat = dict(static or {})
+    if algo is not None and n_params:
+        from repro.core.comm import comm_bits_per_round
+
+        bits = comm_bits_per_round(algo, n_params,
+                                   getattr(algo, "n_clients", 1))
+        stat.setdefault("bits_up", bits["up_bits"])
+        stat.setdefault("bits_down", bits["down_bits"])
+    for i in range(n):
+        ev = {"event": "round", "round": int(start_round + i)}
+        for k, v in host.items():
+            ev[k] = _scalar(v[i])
+        ev.update(stat)
+        events.append(ev)
+        emit_event(sinks, ev)
+        for m in monitors:
+            if m.metric in ev and m.violated(ev[m.metric]):
+                warn = {"event": "monitor", "level": "WARN",
+                        "metric": m.metric, "round": ev["round"],
+                        "value": ev[m.metric], "bound": m.bound,
+                        "mode": m.mode, "axis": m.axis}
+                events.append(warn)
+                emit_event(sinks, warn)
+    return events
+
+
+def write_csv_rows(path: str, rows: list[dict]) -> None:
+    """The trainer's CSV contract, verbatim (``FedTrainer._write_csv``
+    routes through this so the bytes stay identical): header from the
+    first row's keys, ``str()``-formatted values."""
+    if not rows:
+        return
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    keys = list(rows[0])
+    with open(path, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for row in rows:
+            f.write(",".join(str(row[k]) for k in keys) + "\n")
+
+
+# ----------------------------------------------------------------- profiling
+def parse_trace_rounds(spec) -> tuple[int, int] | None:
+    """``"a:b"`` -> the half-open round window [a, b) to trace; ``"a"``
+    traces the single round a. None/empty -> no tracing."""
+    if spec is None or spec == "":
+        return None
+    if isinstance(spec, tuple):
+        lo, hi = spec
+    else:
+        a, _, b = str(spec).partition(":")
+        lo = int(a)
+        hi = int(b) if b else lo + 1
+    if hi <= lo or lo < 0:
+        raise ValueError(f"bad --trace-rounds window {spec!r} (want a:b "
+                         "with 0 <= a < b)")
+    return lo, hi
+
+
+@dataclasses.dataclass
+class TraceSession:
+    """Brackets a ``--trace-rounds a:b`` window with ``jax.profiler``
+    trace capture. The caller forces scan-segment boundaries at the
+    window edges (:meth:`boundaries`) and calls :meth:`maybe_start` before
+    / :meth:`maybe_stop` after each segment; both return a ``profile``
+    event for the sinks when they act."""
+
+    window: tuple[int, int] | None
+    out_dir: str = "profile_trace"
+    active: bool = False
+
+    def boundaries(self) -> tuple:
+        """Round indices that must END a scan segment so the traced
+        segment starts/stops exactly at the window edges."""
+        if self.window is None:
+            return ()
+        return tuple(b for b in (self.window[0] - 1, self.window[1] - 1)
+                     if b >= 0)
+
+    def maybe_start(self, first_round: int) -> dict | None:
+        if (self.window is None or self.active
+                or not (self.window[0] <= first_round < self.window[1])):
+            return None
+        jax.profiler.start_trace(self.out_dir)
+        self.active = True
+        return {"event": "profile", "action": "start_trace",
+                "round": first_round, "dir": self.out_dir}
+
+    def maybe_stop(self, next_round: int) -> dict | None:
+        if not self.active or next_round < self.window[1]:
+            return None
+        jax.profiler.stop_trace()
+        self.active = False
+        return {"event": "profile", "action": "stop_trace",
+                "round": next_round, "dir": self.out_dir}
+
+    def close(self) -> None:
+        if self.active:
+            jax.profiler.stop_trace()
+            self.active = False
+
+
+def instruction_count(lowered_or_text) -> int:
+    """Instruction count of an optimized HLO module (a ``jit(...).lower()``
+    result or its compiled text), via ``roofline/hlo_parse``'s computation
+    splitter — one count per "name = op(...)" line across all
+    computations. Benchmarks use it to report telemetry's compiled
+    footprint next to its wall-clock cost."""
+    txt = lowered_or_text
+    if not isinstance(txt, str):
+        txt = lowered_or_text.compile().as_text()
+    from repro.roofline.hlo_parse import _split_computations
+
+    return sum(1 for lines in _split_computations(txt).values()
+               for ln in lines if " = " in ln)

@@ -22,7 +22,12 @@ Responsibilities a real deployment needs beyond the algorithm step:
   delay model's uplink duty cycle, the sampling rate's PRESENT-ONLY
   downlink duty, and the topology's per-hop traffic shape (hierarchical
   tier messages; gossip edges, no broadcast),
-* CSV metrics logging.
+* CSV metrics logging (through the telemetry module's CSV-row writer —
+  same bytes as the trainer always wrote), and — when the algorithm has
+  ``with_telemetry`` attached and the trainer is given ``sinks=`` — the
+  in-trace per-round telemetry stream: each scan segment's stacked series
+  drains into the sinks (JSONL manifest + round events, monitor WARNs)
+  with zero host syncs inside the segment.
 
 Works with any engine algorithm (FedCET — plain, compressed, sampled,
 delayed and/or re-topologized via the ``with_*`` factories — FedAvg,
@@ -33,7 +38,6 @@ exposing ``loss(params, batch)``.
 from __future__ import annotations
 
 import dataclasses
-import os
 import time
 from typing import Any, Callable
 
@@ -41,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.ckpt import restore, save
+from repro.core import telemetry as tele
 from repro.core.comm import CommMeter
 from repro.core.engine import make_round_runner, scan_segments
 
@@ -53,9 +58,9 @@ class TrainerConfig:
     ckpt_dir: str | None = None
     ckpt_keep: int = 3
     log_csv: str | None = None
-    #: DEPRECATED: fixed transmitted element width (bytes). None (default)
-    #: meters bit-true from the algorithm's compressor stack; setting a
-    #: value forces the legacy dense-itemsize accounting.
+    #: REMOVED: the legacy fixed transmitted element width (bytes). Must
+    #: stay None — ``CommMeter.for_params(itemsize=...)`` now raises with
+    #: a migration hint; the bit-true ``algo=`` accounting is always used.
     itemsize: int | None = None
     #: upper bound on rounds per jitted scan segment — bounds the memory
     #: spent on stacked per-round batches when eval/ckpt are sparse or off.
@@ -63,10 +68,17 @@ class TrainerConfig:
 
 
 class FedTrainer:
-    def __init__(self, algo, loss_fn: Callable, cfg: TrainerConfig):
+    def __init__(self, algo, loss_fn: Callable, cfg: TrainerConfig,
+                 sinks=None):
         self.algo = algo
         self.loss_fn = loss_fn
         self.cfg = cfg
+        #: telemetry event sinks (a ``parse_sinks`` spec string, a list of
+        #: sink objects, or None). Round telemetry flows into them when
+        #: the algorithm has ``with_telemetry`` attached.
+        self.sinks = tele.parse_sinks(sinks)
+        self.monitors = tele.resolve_monitors(getattr(algo, "telemetry",
+                                                      None))
         self.grad_fn = jax.grad(loss_fn)
         # ONE runner per mode for the whole fit: jit caches a compilation
         # per distinct segment length, so steady-state segments never
@@ -121,9 +133,15 @@ class FedTrainer:
         if self.cfg.itemsize is None:
             meter = CommMeter.for_params(params1, algo=self.algo,
                                          n_clients=self.algo.n_clients)
-        else:  # legacy fixed-width accounting (deprecated)
+        else:  # removed legacy path: for_params raises a migration hint
             meter = CommMeter.for_params(params1, itemsize=self.cfg.itemsize,
                                          n_clients=self.algo.n_clients)
+        if self.sinks:
+            tele.emit_event(self.sinks, tele.run_manifest(
+                self.algo, n_params=meter.n_params,
+                config={"rounds": self.cfg.rounds,
+                        "eval_every": self.cfg.eval_every},
+                monitors=self.monitors))
         t0 = time.time()
         # train-batch eval rides the scan's metric hook (no host round-trip
         # inside a segment); a held-out eval fn needs the out-of-scan path.
@@ -136,7 +154,12 @@ class FedTrainer:
             stacked = jax.tree.map(
                 lambda *bs: jnp.stack(bs),
                 *[batches_for(i) for i in range(r, stop + 1)])
-            state, metrics = runner(state, stacked)
+            state, ys = runner(state, stacked)
+            metrics, tel_series = tele.split_metrics(self.algo, ys)
+            if tel_series is not None and self.sinks:
+                tele.drain(tel_series, sinks=self.sinks,
+                           monitors=self.monitors, start_round=r,
+                           algo=self.algo, n_params=meter.n_params)
             for _ in range(r, stop + 1):
                 meter.tick_round(self.algo)
             if self._eval_at(stop):
@@ -156,6 +179,7 @@ class FedTrainer:
                 save(self.cfg.ckpt_dir, stop + 1, state, keep=self.cfg.ckpt_keep)
         if self.cfg.log_csv:
             self._write_csv()
+        tele.close_sinks(self.sinks)
         return state
 
     # ----------------------------------------------------------------- eval
@@ -172,11 +196,7 @@ class FedTrainer:
         }
 
     def _write_csv(self):
-        if not self.history:
-            return
-        os.makedirs(os.path.dirname(self.cfg.log_csv) or ".", exist_ok=True)
-        keys = list(self.history[0])
-        with open(self.cfg.log_csv, "w") as f:
-            f.write(",".join(keys) + "\n")
-            for row in self.history:
-                f.write(",".join(str(row[k]) for k in keys) + "\n")
+        # the telemetry module's CSV-row writer replicates the trainer's
+        # historical format exactly (header from the first row's keys,
+        # str()-formatted values) — output bytes are unchanged.
+        tele.write_csv_rows(self.cfg.log_csv, self.history)

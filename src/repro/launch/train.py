@@ -207,6 +207,8 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
                  delay: str = "none", stale_policy: str = "last",
                  topology: str = "star", tier_compression: str = "none",
                  cohort: int | str | None = "none", arena: bool = False,
+                 telemetry: str | None = None, trace_rounds: str | None = None,
+                 trace_dir: str = "profile_trace",
                  log_every: int = 10, ckpt_dir: str | None = None,
                  callback=None) -> dict:
     """End-to-end FedCET LM training on the host device(s). Returns metrics
@@ -232,9 +234,21 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
     uplink billed. ``arena`` packs the client store into the contiguous
     ``[clients, rows, 1024]`` parameter arena (unpacking only at the
     per-client gradient call) so the round tail streams one buffer
-    instead of one per pytree leaf — numerically <=1e-12-equivalent."""
+    instead of one per pytree leaf — numerically <=1e-12-equivalent.
+
+    ``telemetry`` is a sink spec (``"jsonl:run.jsonl"``, ``"csv:m.csv"``,
+    ``"stdout[:k]"``, ``"memory"``, comma-chained) — any non-empty spec
+    attaches the in-trace telemetry transform (per-round norms, invariant
+    residual, consensus error, staleness ages — captured inside the jitted
+    scan, drained into the sinks per segment behind a run manifest).
+    ``trace_rounds`` (``"a:b"`` or ``"a"``) brackets that round window
+    with a ``jax.profiler`` trace written under ``trace_dir`` — segment
+    boundaries are forced at the window edges so the trace covers exactly
+    those rounds. Per-round stdout summary lines (round, loss, bits_up,
+    active_clients) print for every ``log_every``-th round."""
     from repro.checkpoint.ckpt import save
-    from repro.core.comm import CommMeter
+    from repro.core import telemetry as tele
+    from repro.core.comm import CommMeter, comm_bits_per_round
     from repro.data.synthetic import make_hetero_lm_dataset
 
     cfg = get_config(arch)
@@ -246,7 +260,8 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
                            participation=participation, delay=delay,
                            stale_policy=stale_policy, topology=topology,
                            tier_compression=tier_compression, cohort=cohort,
-                           arena=arena, seed=seed)
+                           arena=arena, telemetry=telemetry or False,
+                           seed=seed)
     algo = scenario.apply(FedCET(alpha=alpha, c=c, tau=tau, n_clients=n_clients))
     ds = make_hetero_lm_dataset(cfg.vocab_size, n_clients, seq_len, batch,
                                 heterogeneity=heterogeneity, seed=seed)
@@ -257,30 +272,75 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
         return {"tokens": toks}
 
     state = algo.init(grad_fn, params, jax.tree.map(lambda b: b[0], batches_for(0)))
+
+    # per-round mean client loss ON-DEVICE inside the scan (same expression
+    # the old boundary-only eval computed on the segment's last round, so
+    # logged history values are unchanged).
+    def round_loss(s, b):
+        b0 = jax.tree.map(lambda a: a[0], b)
+        return jnp.mean(jax.vmap(model.loss)(algo.client_params(s), b0))
+
     # the shared multi-round scan driver: rounds between log/checkpoint
     # boundaries run as one jitted lax.scan segment. The carry is donated
     # so the client store ((x, d), extras, delay buffers) updates in
     # place — the loop below rebinds `state` each call, never reusing the
     # donated buffers.
-    runner = make_round_runner(algo, grad_fn, donate=True)
+    runner = make_round_runner(algo, grad_fn, metric_fn=round_loss,
+                               metric_with_batch=True, donate=True)
 
-    mean_loss = jax.jit(lambda xs, b: jnp.mean(jax.vmap(model.loss)(xs, b)))
+    sinks = tele.parse_sinks(telemetry)
+    monitors = tele.resolve_monitors(getattr(algo, "telemetry", None))
+    trace = tele.TraceSession(tele.parse_trace_rounds(trace_rounds),
+                              out_dir=trace_dir)
+    trace_stops = set(trace.boundaries())
 
     def is_stop(r):
-        return (r % log_every == 0 or r == steps - 1
+        return (r % log_every == 0 or r == steps - 1 or r in trace_stops
                 or (ckpt_dir is not None and (r + 1) % 50 == 0))
 
     meter = CommMeter.for_params(params, algo=algo, n_clients=n_clients)
+    per_round_bits = comm_bits_per_round(algo, meter.n_params, n_clients)
+    # fallback when telemetry is off: the expected participant count (with
+    # telemetry on, the line reports the exact in-trace count).
+    expected_active = int(round(n_clients * min(participation, 1.0)))
+    if sinks:
+        tele.emit_event(sinks, tele.run_manifest(
+            algo, n_params=meter.n_params,
+            config={"arch": arch, "steps": steps, "tau": tau,
+                    "n_clients": n_clients, "batch": batch,
+                    "seq_len": seq_len, "compression": compression,
+                    "participation": participation, "delay": delay,
+                    "stale_policy": stale_policy, "topology": topology,
+                    "tier_compression": tier_compression,
+                    "cohort": str(cohort), "arena": arena, "seed": seed},
+            monitors=monitors))
     history = {"round": [], "loss": [], "comm_bytes": []}
     for r, stop in scan_segments(0, steps, is_stop):
+        ev = trace.maybe_start(r)
+        if ev:
+            tele.emit_event(sinks, ev)
         per_round = [batches_for(i) for i in range(r, stop + 1)]
         stacked = jax.tree.map(lambda *bs: jnp.stack(bs), *per_round)
-        state, _ = runner(state, stacked)
+        state, ys = runner(state, stacked)
+        losses, tel_series = tele.split_metrics(algo, ys)
+        ev = trace.maybe_stop(stop + 1)
+        if ev:
+            tele.emit_event(sinks, ev)
+        if tel_series is not None and sinks:
+            tele.drain(tel_series, sinks=sinks, monitors=monitors,
+                       start_round=r, algo=algo, n_params=meter.n_params)
         for _ in range(r, stop + 1):
             meter.tick_round(algo)
+        losses = jax.device_get(losses)
+        active = None if tel_series is None else tel_series.get("participating")
+        for i, rr in enumerate(range(r, stop + 1)):
+            if rr % log_every == 0 or rr == steps - 1:
+                a = expected_active if active is None else int(active[i])
+                print(f"round {rr:5d}  loss {float(losses[i]):.4f}  "
+                      f"bits_up {(rr + 1) * per_round_bits['up_bits']:.4g}  "
+                      f"active_clients {a}")
         if stop % log_every == 0 or stop == steps - 1:
-            loss = float(mean_loss(algo.client_params(state),
-                                   jax.tree.map(lambda x: x[0], per_round[-1])))
+            loss = float(losses[-1])
             history["round"].append(stop)
             history["loss"].append(loss)
             history["comm_bytes"].append(meter.total)
@@ -288,6 +348,8 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
                 callback(stop, loss, meter.total)
         if ckpt_dir and (stop + 1) % 50 == 0:
             save(ckpt_dir, stop + 1, state)
+    trace.close()
+    tele.close_sinks(sinks)
     return history
 
 
@@ -330,6 +392,18 @@ def main(argv=None):
                     help="pack the client store into the contiguous "
                          "[clients, rows, 1024] parameter arena (fused "
                          "round tail; <=1e-12-equivalent to per-leaf)")
+    ap.add_argument("--telemetry", default=None,
+                    help="telemetry sink spec: jsonl:<path> | csv:<path> | "
+                         "stdout[:every] | memory (comma-chained). Any "
+                         "non-empty spec enables in-trace round telemetry "
+                         "+ invariant monitors; omitted = bitwise no-op")
+    ap.add_argument("--log-every", type=int, default=10,
+                    help="print a per-round summary line (round, loss, "
+                         "bits_up, active_clients) every k rounds")
+    ap.add_argument("--trace-rounds", default=None,
+                    help="profile round window 'a:b' (or 'a') with "
+                         "jax.profiler — trace written under --trace-dir")
+    ap.add_argument("--trace-dir", default="profile_trace")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
     hist = run_training(
@@ -340,7 +414,8 @@ def main(argv=None):
         delay=args.delay, stale_policy=args.stale_policy,
         topology=args.topology, tier_compression=args.tier_compression,
         cohort=args.cohort, arena=args.arena,
-        callback=lambda r, l, b: print(f"round {r:5d}  loss {l:.4f}  comm {b/1e6:.1f} MB"))
+        telemetry=args.telemetry, trace_rounds=args.trace_rounds,
+        trace_dir=args.trace_dir, log_every=args.log_every)
     print("final loss:", hist["loss"][-1])
 
 

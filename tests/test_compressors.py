@@ -6,7 +6,6 @@ vs legacy cross-client top-k, the per-round PRNG key schedule threaded
 through MessageCompression, the spec-string parser, the bit-true
 CommMeter, and the FedScenario launch knob."""
 
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -313,16 +312,14 @@ def test_comm_meter_bit_true_mode():
         m.tick(1, 1, up_frac=0.5)
 
 
-def test_comm_meter_itemsize_deprecated():
+def test_comm_meter_itemsize_removed():
     params = {"w": jnp.zeros((10,))}
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        with pytest.raises(DeprecationWarning):
-            CommMeter.for_params(params, itemsize=2)
-    # legacy mode still works (and still takes an explicit up_frac)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore")
-        m = CommMeter.for_params(params, itemsize=4, n_clients=2)
+    # the deprecated fixed-width kwarg now raises with a migration hint
+    with pytest.raises(ValueError, match="algo=algo"):
+        CommMeter.for_params(params, itemsize=2)
+    # the direct constructor keeps the legacy fixed-width mode (and still
+    # takes an explicit up_frac)
+    m = CommMeter(n_params=10, itemsize=4, n_clients=2)
     m.tick(2, 1, up_frac=0.5)
     assert m.bytes_up == int(2 * 10 * 4 * 2 * 0.5)
     assert m.bytes_down == 10 * 4 * 2

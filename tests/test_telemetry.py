@@ -1,0 +1,330 @@
+"""In-trace telemetry subsystem (repro/core/telemetry.py).
+
+The load-bearing contract: telemetry DISABLED is a BITWISE no-op (max
+abs diff 0.0, not <=eps) on every composed scenario — the engine guards
+every capture site on an active tape, so the disabled trace is the
+identical jaxpr. Enabled, the stacked per-round series streams through
+``drain`` into sinks behind a run manifest, and the declarative invariant
+monitor reproduces the PR 3 staleness boundary live: silent where
+``sum_i d_i = 0`` survives (bare, fixed:k + poly), WARN events naming the
+offending axis where non-uniform ages break it (rr:2 + poly:1).
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import restore, save
+from repro.configs.base import FedScenario
+from repro.core import (
+    INVARIANT_MONITOR,
+    FedAvg,
+    FedCET,
+    JsonlSink,
+    MemorySink,
+    Monitor,
+    Scaffold,
+    Telemetry,
+    drain,
+    max_weight_c,
+    parse_sinks,
+    parse_telemetry,
+    resolve_monitors,
+    run_manifest,
+    split_metrics,
+    with_delay,
+    with_telemetry,
+)
+from repro.core.engine import run_rounds
+from repro.core.lr_search import lr_search
+from repro.core.simulate import simulate_quadratic
+from repro.data.quadratic import make_quadratic_problem
+
+jax.config.update("jax_enable_x64", True)
+
+ROUNDS = 8
+
+
+def _problem():
+    return make_quadratic_problem(0, n_clients=8, dim=24)
+
+
+def _algo(name, problem, tau=2):
+    mu, L, n = problem.mu, problem.L, problem.n_clients
+    alpha = lr_search(mu, L, tau)
+    return {
+        "fedcet": lambda: FedCET(alpha=alpha, c=max_weight_c(mu, alpha),
+                                 tau=tau, n_clients=n),
+        "fedavg": lambda: FedAvg(alpha=1.0 / (2 * tau * L), tau=tau,
+                                 n_clients=n),
+        "scaffold": lambda: Scaffold(alpha_l=1.0 / (81 * tau * L), tau=tau,
+                                     n_clients=n),
+    }[name]()
+
+
+SCENARIOS = {
+    "bare": dict(),
+    # the full composition: compression x participation x delay x cohort
+    # x arena — the exact stack the engine instruments.
+    "composed": dict(compression="shift:q8", participation=0.8,
+                     delay="fixed:2", stale_policy="poly:1",
+                     cohort="block:4", arena=True),
+    "hier": dict(compression="shift:q8", topology="hier:g4"),
+}
+
+
+def _assert_bitwise_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype and x.shape == y.shape
+        diff = np.abs(x.astype(np.float64) - y.astype(np.float64)).max() \
+            if x.size else 0.0
+        assert diff == 0.0, f"max abs diff {diff} != 0.0"
+
+
+# --------------------------------------------------------- bitwise no-op
+@pytest.mark.parametrize("algo_name", ["fedcet", "fedavg", "scaffold"])
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_disabled_vs_enabled_is_bitwise_identical(algo_name, scenario):
+    """Telemetry ON observes; it must never perturb — final state and the
+    metric series match the telemetry-off run at EXACTLY 0.0 divergence,
+    for every algorithm x fully-composed scenario."""
+    problem = _problem()
+    kw = SCENARIOS[scenario]
+    off = FedScenario(telemetry=False, **kw).apply(_algo(algo_name, problem))
+    on = FedScenario(telemetry=True, **kw).apply(_algo(algo_name, problem))
+    assert getattr(on, "telemetry", None) is not None
+    res_off = simulate_quadratic(off, problem, rounds=ROUNDS)
+    res_on = simulate_quadratic(on, problem, rounds=ROUNDS)
+    assert res_off.telemetry is None
+    assert res_on.telemetry is not None
+    _assert_bitwise_equal(res_off.state, res_on.state)
+    _assert_bitwise_equal(res_off.errors, res_on.errors)
+
+
+def test_disabled_is_bitwise_noop_across_checkpoint_resume(tmp_path):
+    """Telemetry adds NO state: a checkpoint written mid-run with
+    telemetry ON restores into the telemetry-OFF algorithm (and vice
+    versa) and continues bitwise identically to the uninterrupted run."""
+    problem = _problem()
+    kw = SCENARIOS["composed"]
+    off = FedScenario(telemetry=False, **kw).apply(_algo("fedcet", problem))
+    on = FedScenario(telemetry=True, **kw).apply(_algo("fedcet", problem))
+    grad = jax.grad(problem.client_loss)
+    batches = problem.stacked_batches(off.tau)
+    x0 = jnp.zeros((problem.dim,), dtype=problem.b.dtype)
+    init_b = jax.tree.map(lambda b: b[0], batches)
+    state0 = off.init(grad, x0, init_b)
+    _assert_bitwise_equal(state0, on.init(grad, x0, init_b))
+
+    straight, _ = run_rounds(off, grad, state0, batches, rounds=ROUNDS)
+    mid_on, _ = run_rounds(on, grad, state0, batches, rounds=ROUNDS // 2)
+    save(str(tmp_path / "ck"), ROUNDS // 2, mid_on)
+    restored, step = restore(str(tmp_path / "ck"), mid_on)
+    assert step == ROUNDS // 2
+    resumed_off, _ = run_rounds(off, grad, restored, batches,
+                                rounds=ROUNDS - ROUNDS // 2)
+    _assert_bitwise_equal(straight, resumed_off)
+
+
+def test_with_telemetry_disabled_returns_same_object():
+    algo = _algo("fedcet", _problem())
+    for spec in (None, False, "none", "off", ""):
+        assert with_telemetry(algo, spec) is algo
+    on = with_telemetry(algo, True)
+    assert on is not algo and isinstance(on.telemetry, Telemetry)
+    # idempotent re-attach of an explicit spec
+    assert with_telemetry(algo, Telemetry()).telemetry == Telemetry()
+
+
+# ------------------------------------------------------- series content
+def test_series_keys_and_shapes():
+    problem = _problem()
+    algo = FedScenario(telemetry=True, **SCENARIOS["composed"]).apply(
+        _algo("fedcet", problem))
+    res = simulate_quadratic(algo, problem, rounds=ROUNDS)
+    series = res.telemetry
+    for key in ("grad_norm", "msg_norm", "compress_err", "participating",
+                "fresh_count", "age_min", "age_mean", "age_max",
+                "invariant_residual", "consensus_err"):
+        assert key in series, sorted(series)
+        assert len(series[key]) == ROUNDS
+    assert np.all(np.asarray(series["participating"]) <= 4)  # cohort size
+    assert np.all(np.asarray(series["grad_norm"]) > 0)
+
+
+def test_metric_subset_selection():
+    problem = _problem()
+    algo = with_telemetry(_algo("fedcet", problem),
+                          Telemetry(metrics=("grad_norm", "msg_norm")))
+    res = simulate_quadratic(algo, problem, rounds=3)
+    assert sorted(res.telemetry) == ["grad_norm", "msg_norm"]
+
+
+# --------------------------------------------------- monitors: boundary
+def _residual_series(delay, policy, rounds=24):
+    problem = _problem()
+    algo = _algo("fedcet", problem)
+    if delay != "none":
+        algo = with_delay(algo, delay, policy=policy)
+    res = simulate_quadratic(with_telemetry(algo, True), problem,
+                             rounds=rounds)
+    events = drain(res.telemetry, monitors=(INVARIANT_MONITOR,))
+    warns = [e for e in events if e["event"] == "monitor"]
+    residuals = [e["invariant_residual"] for e in events
+                 if e["event"] == "round"]
+    return residuals, warns
+
+
+def test_invariant_monitor_silent_on_exact_scenarios():
+    """sum_i d_i = 0 holds bare and under fixed:k + poly (uniform ages =>
+    uniform weights): the residual sits at f64 noise, no WARNs."""
+    for delay, policy in (("none", "last"), ("fixed:2", "poly:1")):
+        residuals, warns = _residual_series(delay, policy)
+        assert max(residuals) < 1e-9, (delay, policy, max(residuals))
+        assert not warns, (delay, policy, warns[:1])
+
+
+def test_invariant_monitor_fires_on_poly_staleness():
+    """rr:2 + poly:1 has non-uniform ages => non-uniform weights => the
+    Lemma 2 redistribution breaks; the monitor fires and names the axis."""
+    residuals, warns = _residual_series("rr:2", "poly:1")
+    assert max(residuals) > 1e-4
+    assert warns, "monitor must fire"
+    w = warns[0]
+    assert w["level"] == "WARN" and w["metric"] == "invariant_residual"
+    assert "stale_policy" in w["axis"]
+
+
+def test_monitor_modes():
+    assert Monitor("m", 2.0, "max").violated(3.0)
+    assert not Monitor("m", 2.0, "max").violated(1.0)
+    assert Monitor("m", 2.0, "min").violated(1.0)
+    assert not Monitor("m", 2.0, "min").violated(3.0)
+
+
+# ------------------------------------------------------- sinks / events
+def test_jsonl_sink_round_trips_with_manifest(tmp_path):
+    problem = _problem()
+    algo = with_telemetry(with_delay(_algo("fedcet", problem), "rr:2",
+                                     policy="poly:1"), True)
+    res = simulate_quadratic(algo, problem, rounds=6)
+    path = str(tmp_path / "run.jsonl")
+    sink = JsonlSink(path)
+    sink.emit(run_manifest(algo, n_params=problem.dim,
+                           config={"rounds": 6},
+                           monitors=resolve_monitors(algo.telemetry)))
+    drain(res.telemetry, sinks=[sink],
+          monitors=resolve_monitors(algo.telemetry),
+          algo=algo, n_params=problem.dim)
+    sink.close()
+    events = [json.loads(line) for line in open(path)]
+    man = events[0]
+    assert man["event"] == "manifest" and man["schema"] == 1
+    assert man["algo"] == "fedcet" and man["n_clients"] == problem.n_clients
+    assert man["mesh"]["n_devices"] >= 1
+    assert man["monitors"][0]["metric"] == "invariant_residual"
+    assert man["bits_per_round"]["up_bits"] > 0
+    assert man["hops"][0]["hop"] == "client"
+    rounds = [e for e in events if e["event"] == "round"]
+    assert [e["round"] for e in rounds] == list(range(6))
+    assert all("invariant_residual" in e and "bits_up" in e for e in rounds)
+    assert any(e["event"] == "monitor" for e in events)
+
+
+def test_parse_sinks_grammar(tmp_path):
+    sinks = parse_sinks(f"jsonl:{tmp_path}/a.jsonl,memory,stdout:5")
+    kinds = [type(s).__name__ for s in sinks]
+    assert kinds == ["JsonlSink", "MemorySink", "StdoutSink"]
+    assert sinks[2].every == 5
+    for s in sinks:
+        s.close()
+    assert parse_sinks(None) == []
+    mem = MemorySink()
+    assert parse_sinks([mem]) == [mem]
+    with pytest.raises(ValueError):
+        parse_sinks("carrier-pigeon:coop")
+
+
+def test_parse_telemetry_spec():
+    assert parse_telemetry(None) is None
+    assert parse_telemetry("none") is None
+    assert parse_telemetry(False) is None
+    assert parse_telemetry(True) == Telemetry()
+    assert parse_telemetry("jsonl:x.jsonl") == Telemetry()
+    spec = Telemetry(metrics=("grad_norm",))
+    assert parse_telemetry(spec) is spec
+
+
+# ------------------------------------------------------------- trainer
+def _lm_setup(telemetry, sinks, log_csv):
+    from repro.configs import get_config
+    from repro.data.synthetic import make_hetero_lm_dataset
+    from repro.fed import FedTrainer, TrainerConfig
+    from repro.models import build_model
+
+    cfg = get_config("fedlm-100m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    n_clients, tau, B, S = 3, 2, 2, 32
+    algo = FedCET(alpha=3e-3, c=0.05, tau=tau, n_clients=n_clients)
+    algo = with_telemetry(algo, telemetry)
+    ds = make_hetero_lm_dataset(cfg.vocab_size, n_clients, S, B, seed=1)
+    batches_for = lambda r: {"tokens": ds.sample_round(r, tau)}  # noqa: E731
+    tc = TrainerConfig(rounds=4, eval_every=2, log_csv=log_csv)
+    trainer = FedTrainer(algo, model.loss, tc, sinks=sinks)
+    state = trainer.init_state(params, jax.tree.map(lambda b: b[0],
+                                                    batches_for(0)))
+    return trainer, state, batches_for
+
+
+def test_trainer_csv_bytes_identical_with_telemetry(tmp_path):
+    """The trainer's CSV log must be identical whether or not telemetry +
+    sinks ride the same fit — the observer cannot perturb the metrics
+    pipeline either. (Every field is compared byte-for-byte except
+    ``wall_s``, which differs between ANY two runs.)"""
+    csv_off = str(tmp_path / "off.csv")
+    csv_on = str(tmp_path / "on.csv")
+    jsonl = str(tmp_path / "run.jsonl")
+    trainer, state, batches_for = _lm_setup(False, None, csv_off)
+    final_off = trainer.fit(state, batches_for)
+    trainer2, state2, batches_for2 = _lm_setup(True, f"jsonl:{jsonl}", csv_on)
+    final_on = trainer2.fit(state2, batches_for2)
+    with open(csv_off) as a, open(csv_on) as b:
+        rows_a, rows_b = a.read().splitlines(), b.read().splitlines()
+    assert rows_a[0] == rows_b[0]          # identical header
+    header = rows_a[0].split(",")
+    wall = header.index("wall_s")          # the only nondeterministic field
+    for ra, rb in zip(rows_a[1:], rows_b[1:]):
+        ca, cb = ra.split(","), rb.split(",")
+        ca[wall] = cb[wall] = ""
+        assert ca == cb, (ra, rb)
+    _assert_bitwise_equal(final_off, final_on)
+    events = [json.loads(line) for line in open(jsonl)]
+    assert events[0]["event"] == "manifest"
+    assert sum(e["event"] == "round" for e in events) == 4
+
+
+def test_run_training_per_round_stdout_lines(capsys, tmp_path):
+    """launch.train emits a per-round summary (round, loss, bits_up,
+    active_clients) gated by log_every, and drains telemetry into the
+    requested sinks."""
+    from repro.launch.train import run_training
+
+    jsonl = str(tmp_path / "t.jsonl")
+    hist = run_training("fedlm-100m", steps=3, n_clients=2, batch=2,
+                        seq_len=16, log_every=1, telemetry=f"jsonl:{jsonl}")
+    out = capsys.readouterr().out
+    lines = [ln for ln in out.splitlines() if ln.startswith("round ")]
+    assert len(lines) == 3
+    for ln in lines:
+        assert "loss" in ln and "bits_up" in ln and "active_clients" in ln
+    assert len(hist["round"]) == 3
+    events = [json.loads(line) for line in open(jsonl)]
+    assert events[0]["event"] == "manifest"
+    assert sum(e["event"] == "round" for e in events) == 3
