@@ -1,0 +1,351 @@
+"""Static HTML run report from one run's telemetry JSONL.
+
+Renders a SELF-CONTAINED page (inline SVG + CSS, zero dependencies — no
+matplotlib, no JS libraries; the file opens from disk or a CI artifact
+tab) with:
+
+  * the run manifest (algo, scenario config, commit, mesh, wire cost),
+  * the convergence curve (log-y) of the residual series with the fitted
+    linear rate rho_hat annotated and every monitor WARN (invariant
+    violations, rate breaks) marked at its round,
+  * distribution ribbons for each sketch source present (p50/p90/p99/max
+    bands of per-client ||d_i||, drift, compression error, staleness age
+    — the population view that mean curves hide),
+  * the communication budget (cumulative uplink/downlink bits from the
+    bit-true per-round accounting), and
+  * the perf trajectory table from ``results/BENCH_trajectory.json``
+    when present (one row per bench timing).
+
+Usage:
+    python benchmarks/report.py run.jsonl -o report.html \
+        [--trajectory results/BENCH_trajectory.json]
+
+The rate fit here is the same windowed log-residual regression the drain
+runs live (core/telemetry.py:fit_rate) — reimplemented in stdlib math so
+the report renders anywhere the JSONL lands.
+"""
+
+from __future__ import annotations
+
+import argparse
+import html
+import json
+import math
+import os
+
+W, H = 820, 300
+PAD_L, PAD_R, PAD_T, PAD_B = 64, 16, 28, 40
+COLORS = ["#1f77b4", "#d62728", "#2ca02c", "#9467bd", "#ff7f0e", "#8c564b"]
+RIBBON_SOURCES = ("d_norm", "drift", "compress_err", "age")
+
+
+# ------------------------------------------------------------------ data
+def load_events(path: str):
+    manifest, rounds, warns, leaves = None, [], [], []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            ev = json.loads(line)
+            kind = ev.get("event")
+            if kind == "manifest" and manifest is None:
+                manifest = ev
+            elif kind == "round":
+                rounds.append(ev)
+            elif kind == "monitor" and ev.get("level") == "WARN":
+                warns.append(ev)
+            elif kind == "leaf_stats":
+                leaves.append(ev)
+    return manifest, rounds, warns, leaves
+
+
+def fit_rate(rounds, values) -> float | None:
+    """exp(least-squares slope of ln(v) vs round) — core/telemetry.py:
+    fit_rate in stdlib math (the report must render without the repo)."""
+    pts = [(r, math.log(v)) for r, v in zip(rounds, values) if v > 0]
+    if len(pts) < 3:
+        return None
+    n = len(pts)
+    mr = sum(p[0] for p in pts) / n
+    mv = sum(p[1] for p in pts) / n
+    den = sum((p[0] - mr) ** 2 for p in pts)
+    if den == 0:
+        return None
+    return math.exp(sum((p[0] - mr) * (p[1] - mv) for p in pts) / den)
+
+
+def residual_series(rounds):
+    """The convergence series: distance-to-optimum when the run logged it
+    (quadratic sims), else the loss curve (LM runs)."""
+    for key in ("err", "loss", "invariant_residual"):
+        xs = [e["round"] for e in rounds if isinstance(e.get(key), (int, float))]
+        ys = [e[key] for e in rounds if isinstance(e.get(key), (int, float))]
+        if len(ys) >= 2:
+            return key, xs, ys
+    return None, [], []
+
+
+# ------------------------------------------------------------------- svg
+class Chart:
+    """Linear/log-y data-to-pixel mapping + primitive emitters."""
+
+    def __init__(self, xs, ys_all, *, logy: bool):
+        self.logy = logy
+        self.x0, self.x1 = min(xs), max(xs)
+        vals = [v for v in ys_all if not logy or v > 0]
+        if not vals:
+            vals = [1e-12, 1.0]
+        lo, hi = min(vals), max(vals)
+        if logy:
+            self.y0, self.y1 = math.log10(lo), math.log10(max(hi, lo * 10))
+        else:
+            span = (hi - lo) or 1.0
+            self.y0, self.y1 = lo - 0.05 * span, hi + 0.05 * span
+        if self.x1 == self.x0:
+            self.x1 = self.x0 + 1
+        if self.y1 == self.y0:
+            self.y1 += 1
+
+    def px(self, x):
+        return PAD_L + (x - self.x0) / (self.x1 - self.x0) * (W - PAD_L - PAD_R)
+
+    def py(self, y):
+        v = math.log10(y) if self.logy else y
+        frac = (v - self.y0) / (self.y1 - self.y0)
+        return H - PAD_B - frac * (H - PAD_T - PAD_B)
+
+    def polyline(self, xs, ys, color, width=1.6, dash=""):
+        pts = " ".join(f"{self.px(x):.1f},{self.py(y):.1f}"
+                       for x, y in zip(xs, ys)
+                       if not self.logy or y > 0)
+        d = f' stroke-dasharray="{dash}"' if dash else ""
+        return (f'<polyline points="{pts}" fill="none" stroke="{color}" '
+                f'stroke-width="{width}"{d}/>')
+
+    def band(self, xs, lo_ys, hi_ys, color, opacity=0.18):
+        fwd = [(x, y) for x, y in zip(xs, hi_ys) if not self.logy or y > 0]
+        bwd = [(x, y) for x, y in zip(xs, lo_ys) if not self.logy or y > 0]
+        if not fwd or not bwd:
+            return ""
+        pts = " ".join(f"{self.px(x):.1f},{self.py(y):.1f}" for x, y in fwd)
+        pts += " " + " ".join(f"{self.px(x):.1f},{self.py(y):.1f}"
+                              for x, y in reversed(bwd))
+        return (f'<polygon points="{pts}" fill="{color}" '
+                f'opacity="{opacity}" stroke="none"/>')
+
+    def vmark(self, x, color="#d62728"):
+        return (f'<line x1="{self.px(x):.1f}" y1="{PAD_T}" '
+                f'x2="{self.px(x):.1f}" y2="{H - PAD_B}" stroke="{color}" '
+                f'stroke-width="1" stroke-dasharray="3,3" opacity="0.7"/>')
+
+    def axes(self, n_yticks=5, n_xticks=6):
+        out = [f'<rect x="{PAD_L}" y="{PAD_T}" width="{W - PAD_L - PAD_R}" '
+               f'height="{H - PAD_T - PAD_B}" fill="none" stroke="#ccc"/>']
+        for i in range(n_yticks + 1):
+            v = self.y0 + (self.y1 - self.y0) * i / n_yticks
+            y = H - PAD_B - (H - PAD_T - PAD_B) * i / n_yticks
+            lbl = f"1e{v:.0f}" if self.logy else f"{v:.3g}"
+            out.append(f'<line x1="{PAD_L - 4}" y1="{y:.1f}" x2="{PAD_L}" '
+                       f'y2="{y:.1f}" stroke="#888"/>')
+            out.append(f'<text x="{PAD_L - 8}" y="{y + 4:.1f}" '
+                       f'text-anchor="end" class="tick">{lbl}</text>')
+        for i in range(n_xticks + 1):
+            x = self.x0 + (self.x1 - self.x0) * i / n_xticks
+            px = PAD_L + (W - PAD_L - PAD_R) * i / n_xticks
+            out.append(f'<line x1="{px:.1f}" y1="{H - PAD_B}" x2="{px:.1f}" '
+                       f'y2="{H - PAD_B + 4}" stroke="#888"/>')
+            out.append(f'<text x="{px:.1f}" y="{H - PAD_B + 16}" '
+                       f'text-anchor="middle" class="tick">{x:.0f}</text>')
+        return "".join(out)
+
+
+def svg(title: str, body: str, legend: list[tuple[str, str]] = ()) -> str:
+    leg = ""
+    lx = PAD_L + 8
+    for name, color in legend:
+        leg += (f'<rect x="{lx}" y="{PAD_T + 6}" width="12" height="3" '
+                f'fill="{color}"/>'
+                f'<text x="{lx + 16}" y="{PAD_T + 11}" class="tick">'
+                f'{html.escape(name)}</text>')
+        lx += 16 + 7 * len(name) + 18
+    return (f'<svg viewBox="0 0 {W} {H}" class="chart" role="img">'
+            f'<text x="{PAD_L}" y="16" class="title">{html.escape(title)}'
+            f"</text>{body}{leg}</svg>")
+
+
+# -------------------------------------------------------------- sections
+def convergence_section(rounds, warns) -> str:
+    key, xs, ys = residual_series(rounds)
+    if key is None:
+        return "<p>No residual series in this run's round events.</p>"
+    rho = fit_rate(xs, ys)
+    # prefer the live-annotated estimate when the drain ran a RateMonitor
+    rho_live = [e["rho_hat"] for e in rounds
+                if isinstance(e.get("rho_hat"), (int, float))]
+    ch = Chart(xs, ys, logy=all(v > 0 for v in ys))
+    body = ch.axes() + ch.polyline(xs, ys, COLORS[0])
+    marks, legend = "", [(key, COLORS[0])]
+    for w in warns:
+        if w.get("round") is not None:
+            marks += ch.vmark(w["round"])
+    rate_breaks = [w for w in warns if w.get("kind") == "rate_break"]
+    rho_txt = f"rho_hat = {rho:.4f} (whole-run fit)" if rho else ""
+    if rho_live:
+        rho_txt = f"rho_hat = {rho_live[-1]:.4f} (windowed, live)"
+    note = ""
+    if rate_breaks:
+        b = rate_breaks[0]
+        note = (f'<p class="warn">RATE BREAK at round {b.get("round")}: '
+                f'rho_hat {b.get("rho_hat"):.4f} after established '
+                f'{b.get("rho_ref"):.4f} — suspect axis: '
+                f'{html.escape(str(b.get("axis", "")))}</p>')
+    extra = (f'<text x="{W - PAD_R - 6}" y="{PAD_T + 14}" text-anchor="end" '
+             f'class="anno">{rho_txt}</text>') if rho_txt else ""
+    return (svg(f"convergence ({key}, {len(warns)} WARNs marked)",
+                body + marks + extra, legend) + note)
+
+
+def ribbon_section(rounds) -> str:
+    out = []
+    for i, src in enumerate(RIBBON_SOURCES):
+        keys = [f"{src}_p50", f"{src}_p90", f"{src}_p99", f"{src}_max"]
+        sel = [e for e in rounds
+               if all(isinstance(e.get(k), (int, float)) for k in keys)]
+        if len(sel) < 2:
+            continue
+        xs = [e["round"] for e in sel]
+        p50 = [e[keys[0]] for e in sel]
+        p90 = [e[keys[1]] for e in sel]
+        p99 = [e[keys[2]] for e in sel]
+        mx = [e[keys[3]] for e in sel]
+        col = COLORS[i % len(COLORS)]
+        logy = all(v > 0 for v in p50 + mx)
+        ch = Chart(xs, p50 + p90 + p99 + mx, logy=logy)
+        body = (ch.axes() + ch.band(xs, p50, p99, col)
+                + ch.polyline(xs, p50, col)
+                + ch.polyline(xs, p90, col, width=1.0, dash="4,3")
+                + ch.polyline(xs, mx, col, width=1.0, dash="1,3"))
+        out.append(svg(f"{src} per-client distribution "
+                       "(p50 solid / p90 dashed / p99 band / max dotted)",
+                       body, [(src, col)]))
+    if not out:
+        return ("<p>No distribution sketches in this run — launch with "
+                "<code>--telemetry ...,hist:48,topk:4</code>.</p>")
+    return "".join(out)
+
+
+def comm_section(manifest, rounds) -> str:
+    xs, up, dn = [], [], []
+    cu = cd = 0.0
+    for e in rounds:
+        bu, bd = e.get("bits_up"), e.get("bits_down")
+        if not isinstance(bu, (int, float)):
+            continue
+        cu += bu
+        cd += bd if isinstance(bd, (int, float)) else 0.0
+        xs.append(e["round"])
+        up.append(cu)
+        dn.append(cd)
+    if len(xs) < 2:
+        bits = (manifest or {}).get("bits_per_round")
+        return (f"<p>Per-round wire cost: <code>{html.escape(json.dumps(bits))}"
+                "</code></p>" if bits else "<p>No comm accounting logged.</p>")
+    ch = Chart(xs, up + dn, logy=False)
+    body = (ch.axes() + ch.polyline(xs, up, COLORS[0])
+            + ch.polyline(xs, dn, COLORS[4], dash="4,3"))
+    tot = (f'<p>Total uplink {up[-1]:.3e} bits, downlink {dn[-1]:.3e} bits '
+           f'over {len(xs)} rounds.</p>')
+    return svg("cumulative communication budget (bits)", body,
+               [("uplink", COLORS[0]), ("downlink", COLORS[4])]) + tot
+
+
+def trajectory_section(path: str | None) -> str:
+    if not path or not os.path.exists(path):
+        return ""
+    try:
+        traj = json.loads(open(path).read())
+    except (OSError, json.JSONDecodeError):
+        return ""
+    benches = traj.get("benchmarks", traj if isinstance(traj, dict) else {})
+    rows = []
+    for name in sorted(benches):
+        b = benches[name]
+        if not isinstance(b, dict):
+            continue
+        for k, v in sorted(b.get("timings_us", {}).items()):
+            if isinstance(v, (int, float)):
+                rows.append(f"<tr><td>{html.escape(str(name))}</td>"
+                            f"<td>{html.escape(k)}</td>"
+                            f"<td>{v:.1f}</td></tr>")
+    if not rows:
+        return ""
+    return ("<h2>Perf trajectory</h2><table><tr><th>bench</th><th>timing"
+            "</th><th>us</th></tr>" + "".join(rows) + "</table>")
+
+
+def manifest_section(manifest) -> str:
+    if not manifest:
+        return "<p>No manifest event found.</p>"
+    cfg = manifest.get("config", {})
+    rows = [("algo", manifest.get("algo")),
+            ("n_clients", manifest.get("n_clients")),
+            ("tau", manifest.get("tau")),
+            ("commit", manifest.get("commit")),
+            ("mesh", json.dumps(manifest.get("mesh")))]
+    rows += sorted(cfg.items())
+    cells = "".join(f"<tr><td>{html.escape(str(k))}</td>"
+                    f"<td><code>{html.escape(str(v))}</code></td></tr>"
+                    for k, v in rows)
+    return f"<table>{cells}</table>"
+
+
+STYLE = """
+body { font-family: -apple-system, 'Segoe UI', Roboto, sans-serif;
+       max-width: 900px; margin: 24px auto; color: #222; }
+h1 { font-size: 1.4em; } h2 { font-size: 1.1em; margin-top: 28px; }
+table { border-collapse: collapse; font-size: 0.85em; }
+td, th { border: 1px solid #ddd; padding: 3px 8px; text-align: left; }
+svg.chart { width: 100%; height: auto; margin: 8px 0; }
+svg .title { font-size: 13px; font-weight: 600; }
+svg .tick { font-size: 10px; fill: #555; }
+svg .anno { font-size: 12px; fill: #d62728; font-weight: 600; }
+p.warn { color: #b71c1c; font-weight: 600; }
+code { background: #f5f5f5; padding: 1px 4px; }
+"""
+
+
+def render(jsonl_path: str, trajectory: str | None = None) -> str:
+    manifest, rounds, warns, _leaves = load_events(jsonl_path)
+    parts = [
+        "<!doctype html><html><head><meta charset='utf-8'>",
+        f"<title>run report — {html.escape(os.path.basename(jsonl_path))}"
+        f"</title><style>{STYLE}</style></head><body>",
+        f"<h1>Run report — <code>{html.escape(jsonl_path)}</code></h1>",
+        "<h2>Manifest</h2>", manifest_section(manifest),
+        "<h2>Convergence &amp; linear rate</h2>",
+        convergence_section(rounds, warns),
+        "<h2>Population distribution ribbons</h2>", ribbon_section(rounds),
+        "<h2>Communication budget</h2>", comm_section(manifest, rounds),
+        trajectory_section(trajectory),
+        "</body></html>",
+    ]
+    return "".join(parts)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("jsonl", help="telemetry JSONL from a run "
+                                  "(--telemetry jsonl:<path>,...)")
+    ap.add_argument("-o", "--out", default="report.html")
+    ap.add_argument("--trajectory", default=None,
+                    help="results/BENCH_trajectory.json for the perf table")
+    args = ap.parse_args(argv)
+    doc = render(args.jsonl, args.trajectory)
+    with open(args.out, "w") as f:
+        f.write(doc)
+    print(f"wrote {args.out} ({len(doc)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,6 @@
-"""Benchmark: in-trace telemetry overhead + live invariant-monitor boundary.
+"""Benchmark: in-trace telemetry overhead + live monitor boundaries.
 
-Two claims, both asserted:
+Three claims, all asserted:
 
 1. **Overhead**: attaching ``with_telemetry`` to a composed FedCET round
    (shift:q8 compression x fixed:2 delay) costs <= 10% wall-clock on the
@@ -8,14 +8,27 @@ Two claims, both asserted:
    riding the existing scan, with zero host syncs inside a segment. The
    compiled footprint (optimized-HLO instruction count of the K-round
    runner, off vs on) and the host-side drain cost are reported alongside.
+   With the FULL distribution-sketch stack on top (per-client norm
+   log-histograms + quantiles + top-k over every source, one O(N) pass
+   per round), the pin loosens to <= 1.15x — and the sketch-on state
+   stays a bitwise no-op.
 
-2. **Live boundary**: the invariant monitor reproduces the PR 3 pinned
-   staleness boundary FROM A SINGLE RUN'S JSONL — no offline re-simulation:
-   ``fixed:2`` + ``poly:1`` keeps uniform ages, so the streamed
-   ``invariant_residual`` series stays at f64 noise and the monitor is
-   SILENT; ``rr:2`` + ``poly:1`` makes ages non-uniform, the residual
-   drifts above the 1e-6 bound, and the monitor emits WARN events naming
-   the offending axis (stale_policy).
+2. **Live invariant boundary**: the invariant monitor reproduces the
+   PR 3 pinned staleness boundary FROM A SINGLE RUN'S JSONL — no offline
+   re-simulation: ``fixed:2`` + ``poly:1`` keeps uniform ages, so the
+   streamed ``invariant_residual`` series stays at f64 noise and the
+   monitor is SILENT; ``rr:2`` + ``poly:1`` makes ages non-uniform, the
+   residual drifts above the 1e-6 bound, and the monitor emits WARN
+   events naming the offending axis (stale_policy).
+
+3. **Live rate boundary**: the online linear-rate estimator
+   (``RateMonitor``, windowed log-residual regression over the streamed
+   ``err`` series) detects the SAME boundary as a rate break: ``fixed:2``
+   + ``poly:1`` contracts linearly every round (rho_hat < 1, silent);
+   ``rr:2`` + ``poly:1`` floors, the windowed rho_hat crosses 1 after
+   linear convergence was established, and the monitor WARNs naming the
+   suspect axis — verified both live at drain time and by re-running
+   ``replay_jsonl`` over the finished file alone.
 
 Emits ``results/BENCH_telemetry.json``. Runs via benchmarks/run.py (late:
 it enables x64 for the f64 residual floor) or directly.
@@ -39,6 +52,9 @@ DIM = 512
 #: workload drowns them).
 N_MEAS = 64
 MAX_OVERHEAD = 1.10
+#: full sketch stack (hist + quantiles + top-k over every source) — one
+#: O(N) pass over the whole client store per round rides on top.
+MAX_SKETCH_OVERHEAD = 1.15
 
 
 def _fedcet(problem, tau=2):
@@ -84,24 +100,31 @@ def _instr_count(algo, problem) -> int:
 
 def _jsonl_boundary(base, problem, delay_spec: str, path: str):
     """One LIVE run: simulate with telemetry attached, drain the stacked
-    series into a JSONL sink, then read the FILE back and return the
-    parsed residual series + WARN events (what a dashboard would see)."""
+    series (plus the distance-to-optimum ``err`` series the rate
+    estimator watches) into a JSONL sink, then read the FILE back and
+    return the parsed residual series + WARN events split by monitor kind
+    (what a dashboard would see)."""
     import time
 
-    from repro.core import (INVARIANT_MONITOR, JsonlSink, drain, run_manifest,
-                            with_delay, with_telemetry)
+    import numpy as np
+
+    from repro.core import (INVARIANT_MONITOR, JsonlSink, RateMonitor, drain,
+                            rate_axis, run_manifest, with_delay,
+                            with_telemetry)
     from repro.core.simulate import simulate_quadratic
 
     algo = with_telemetry(
         with_delay(base, delay_spec, policy="poly:1"), True)
+    monitors = (INVARIANT_MONITOR, RateMonitor(axis=rate_axis(algo)))
     t0 = time.perf_counter()
     res = simulate_quadratic(algo, problem, rounds=BOUNDARY_ROUNDS)
     sink = JsonlSink(path)
     sink.emit(run_manifest(algo, n_params=problem.dim,
                            config={"delay": delay_spec, "policy": "poly:1"},
-                           monitors=(INVARIANT_MONITOR,)))
-    drain(res.telemetry, sinks=[sink], monitors=(INVARIANT_MONITOR,),
-          algo=algo, n_params=problem.dim)
+                           monitors=monitors))
+    # errors[0] is the pre-round state; round r's event carries errors[r+1]
+    drain({**res.telemetry, "err": np.asarray(res.errors)[1:]},
+          sinks=[sink], monitors=monitors, algo=algo, n_params=problem.dim)
     sink.close()
     drain_us = (time.perf_counter() - t0) * 1e6 / BOUNDARY_ROUNDS
     with open(path) as f:
@@ -111,8 +134,10 @@ def _jsonl_boundary(base, problem, delay_spec: str, path: str):
                  if e["event"] == "round"]
     warns = [e for e in events
              if e["event"] == "monitor" and e.get("level") == "WARN"]
+    inv_warns = [w for w in warns if w.get("kind") != "rate_break"]
+    rate_warns = [w for w in warns if w.get("kind") == "rate_break"]
     assert len(residuals) == BOUNDARY_ROUNDS
-    return residuals, warns, drain_us
+    return residuals, inv_warns, rate_warns, drain_us
 
 
 def run(csv_rows=None, quick: bool = False):
@@ -143,15 +168,34 @@ def run(csv_rows=None, quick: bool = False):
         f"telemetry overhead {ratio:.3f}x exceeds {MAX_OVERHEAD}x "
         f"({off_us:.1f}us -> {on_us:.1f}us per round)")
 
+    # full distribution-sketch stack on top: hist + quantiles + top-k per
+    # source, one O(N) pass over the whole client store each round.
+    from repro.core import Telemetry
+
+    sketch_spec = Telemetry(sketches="auto", topk=4)
+    sketch_us, out_sk = _time_round(with_telemetry(composed, sketch_spec),
+                                    problem)
+    sketch_ratio = sketch_us / off_us
+    s_sk = out_sk[0]
+    diffs = jax.tree.map(lambda a, b: float(abs(a - b).max()),
+                         jax.tree.leaves(s_off), jax.tree.leaves(s_sk))
+    assert max(diffs) == 0.0, diffs
+    assert sketch_ratio <= MAX_SKETCH_OVERHEAD, (
+        f"sketch overhead {sketch_ratio:.3f}x exceeds {MAX_SKETCH_OVERHEAD}x "
+        f"({off_us:.1f}us -> {sketch_us:.1f}us per round)")
+
     instr_off = _instr_count(composed, problem)
     instr_on = _instr_count(with_telemetry(composed, True), problem)
+    instr_sk = _instr_count(with_telemetry(composed, sketch_spec), problem)
 
-    # ---- 2. the PR 3 staleness boundary, live from one run's JSONL -------
+    # ---- 2+3. the PR 3 staleness boundary, live from one run's JSONL -----
     tmp = tempfile.mkdtemp(prefix="telemetry_bench_")
-    exact, exact_warns, drain_exact_us = _jsonl_boundary(
-        base, problem, "fixed:2", os.path.join(tmp, "fixed2_poly1.jsonl"))
-    drift, drift_warns, drain_drift_us = _jsonl_boundary(
-        base, problem, "rr:2", os.path.join(tmp, "rr2_poly1.jsonl"))
+    exact_path = os.path.join(tmp, "fixed2_poly1.jsonl")
+    drift_path = os.path.join(tmp, "rr2_poly1.jsonl")
+    exact, exact_warns, exact_rate, drain_exact_us = _jsonl_boundary(
+        base, problem, "fixed:2", exact_path)
+    drift, drift_warns, drift_rate, drain_drift_us = _jsonl_boundary(
+        base, problem, "rr:2", drift_path)
     # fixed:k -> uniform ages -> poly weights uniform -> exact: the monitor
     # stays silent and the streamed residual series sits at f64 noise.
     assert max(exact) < 1e-9, max(exact)
@@ -162,10 +206,26 @@ def run(csv_rows=None, quick: bool = False):
     assert max(drift) > 1e-4, max(drift)
     assert drift_warns, "monitor failed to fire on rr:2 + poly:1"
     assert "stale_policy" in drift_warns[0]["axis"]
+    # the rate estimator sees the same boundary: fixed:2 contracts
+    # linearly to the end (no break); rr:2 floors and the windowed
+    # rho_hat crossing 1 fires a rate break naming the suspect axis.
+    assert not exact_rate, exact_rate[:2]
+    assert drift_rate, "rate monitor failed to fire on rr:2 + poly:1"
+    assert "stale_policy" in drift_rate[0]["axis"]
+    assert drift_rate[0]["rho_hat"] >= 0.99, drift_rate[0]
+    # ... and reproduces POST HOC from the finished file alone.
+    from repro.core import RateMonitor, replay_jsonl
+
+    replayed = [w for w in replay_jsonl(drift_path, (RateMonitor(),))
+                if w.get("kind") == "rate_break"]
+    assert replayed, "replay_jsonl missed the rr:2 rate break"
+    assert replayed[0]["round"] == drift_rate[0]["round"], (
+        replayed[0], drift_rate[0])
 
     timings = {
         "round_telemetry_off": off_us,
         "round_telemetry_on": on_us,
+        "round_sketch_on": sketch_us,
         "drain_per_round_exact": drain_exact_us,
         "drain_per_round_drift": drain_drift_us,
     }
@@ -176,26 +236,37 @@ def run(csv_rows=None, quick: bool = False):
                 "rounds_per_call": ROUNDS_PER_CALL,
                 "boundary_rounds": BOUNDARY_ROUNDS,
                 "scenario": "shift:q8 + fixed:2/last",
-                "max_overhead": MAX_OVERHEAD},
+                "max_overhead": MAX_OVERHEAD,
+                "max_sketch_overhead": MAX_SKETCH_OVERHEAD},
         timings=timings,
         extra={"overhead_ratio": round(ratio, 4),
-               "hlo_instructions": {"off": instr_off, "on": instr_on},
+               "sketch_overhead_ratio": round(sketch_ratio, 4),
+               "hlo_instructions": {"off": instr_off, "on": instr_on,
+                                    "sketches": instr_sk},
                "boundary": {
                    "fixed2_poly1_max_residual": max(exact),
                    "rr2_poly1_max_residual": max(drift),
-                   "rr2_poly1_warns": len(drift_warns)}},
+                   "rr2_poly1_warns": len(drift_warns),
+                   "fixed2_poly1_rate_breaks": len(exact_rate),
+                   "rr2_poly1_rate_breaks": len(drift_rate),
+                   "rr2_poly1_break_round": drift_rate[0]["round"],
+                   "rr2_poly1_break_rho_hat": drift_rate[0]["rho_hat"]}},
         out_dir=results_dir())
     if csv_rows is not None:
         csv_rows.append((
             "telemetry/overhead", on_us,
             f"off_us={off_us:.1f};ratio={ratio:.3f}"
-            f";hlo_off={instr_off};hlo_on={instr_on}"))
+            f";sketch_ratio={sketch_ratio:.3f}"
+            f";hlo_off={instr_off};hlo_on={instr_on};hlo_sk={instr_sk}"))
         csv_rows.append((
             "telemetry/boundary", 0.0,
             f"fixed2_poly1_max_res={max(exact):.3e}"
             f";rr2_poly1_max_res={max(drift):.3e}"
-            f";warns={len(drift_warns)}"))
-    return {"ratio": ratio, "exact": max(exact), "drift": max(drift)}
+            f";warns={len(drift_warns)}"
+            f";rate_breaks={len(drift_rate)}"))
+    return {"ratio": ratio, "sketch_ratio": sketch_ratio,
+            "exact": max(exact), "drift": max(drift),
+            "rate_breaks": len(drift_rate)}
 
 
 if __name__ == "__main__":

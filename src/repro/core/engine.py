@@ -774,6 +774,8 @@ class RoundEngine:
         rec = self.telemetry is not None and tele.collecting()
         if rec:
             tele.capture("msg_norm", tele.mean_client_norm(msg))
+            if self.telemetry.leaf_stats:
+                tele.capture("leaf_msg_norm", tele.leaf_client_norms(msg))
         if (dstate is None and self.delay is None and self.topology is None
                 and self.arena):
             fused = self._fused_tail(inner, msg, mctx, extras, step, mask)
@@ -786,8 +788,14 @@ class RoundEngine:
             msg, e = t.apply(msg, e, step)
             new_extras.append(e)
         if rec and self.transforms:
-            tele.capture("compress_err", tele.mean_client_norm(
-                jax.tree.map(lambda a, b: a - b, msg, raw)))
+            diff = jax.tree.map(lambda a, b: a - b, msg, raw)
+            tele.capture("compress_err", tele.mean_client_norm(diff))
+            if self.telemetry.wants_sketch("compress_err"):
+                tele.capture("compress_err_clients",
+                             jnp.sqrt(tele.client_sq_norms(diff)))
+            if self.telemetry.leaf_stats:
+                tele.capture("leaf_compress_err",
+                             tele.leaf_client_norms(diff))
 
         if dstate is None:  # synchronous path (and always: init)
             if self.topology is not None:
@@ -1063,6 +1071,8 @@ class RoundEngine:
             tele.capture("participating",
                          jnp.sum(mask.astype(jnp.int32)) if mask is not None
                          else jnp.asarray(m, jnp.int32))
+            if self.telemetry.leaf_stats:
+                tele.capture("leaf_msg_norm", tele.leaf_client_norms(msg_c))
         tx_c = msg_c
         new_extras_c = []
         for t, e in zip(self.transforms, extras_c):
@@ -1070,8 +1080,17 @@ class RoundEngine:
             new_extras_c.append(e)
         new_extras_c = tuple(new_extras_c)
         if rec and self.transforms:
-            tele.capture("compress_err", tele.mean_client_norm(
-                jax.tree.map(lambda a, b: a - b, tx_c, msg_c)))
+            diff_c = jax.tree.map(lambda a, b: a - b, tx_c, msg_c)
+            tele.capture("compress_err", tele.mean_client_norm(diff_c))
+            if self.telemetry.wants_sketch("compress_err"):
+                # cohort-sized wire data — finalize translates top-k slots
+                # to GLOBAL client ids through the captured cohort index.
+                tele.capture("compress_err_clients",
+                             jnp.sqrt(tele.client_sq_norms(diff_c)))
+                tele.capture("cohort_ids", idx.astype(jnp.int32))
+            if self.telemetry.leaf_stats:
+                tele.capture("leaf_compress_err",
+                             tele.leaf_client_norms(diff_c))
 
         if dstate is None:
             if self.topology is not None:

@@ -25,6 +25,31 @@ captures scalars *while the round is being traced*:
   pluggable sinks: :class:`JsonlSink` (one JSON object per line, manifest
   first), :class:`CsvSink`, :class:`StdoutSink`, :class:`MemorySink`.
 
+Beyond scalars, the spec can request **distribution sketches**
+(``Telemetry(sketches="auto")`` / the ``--telemetry hist:...`` grammar):
+fixed-bin log-histograms, p50/p90/p99/max quantiles and top-k
+outlier-client ids of the per-client ``||d_i||``, the drift
+``||x_i - x_bar||``, the per-client compression error and the staleness
+ages — vector-valued captures that ride the scan ys next to the scalars.
+Sketches are computed in :meth:`Telemetry.finalize` from the post-round
+state, so under cohort mode they read the FULL ``[N, ...]`` client store
+in one O(N) pass (the scalars above see only the cohort) and are
+identical between the gather and dense cohort lowerings. On a packed
+parameter arena the norm+histogram reduction routes through the fused
+Pallas kernel (``kernels/telemetry_reduce.py`` via
+``kernels/ops.py:telemetry_sketch``). ``leaf_stats=True`` adds the
+per-leaf msg-norm / compression-error breakdown (the bit-budget
+allocator's future input) via the arena's row->leaf segment map,
+drained as ``leaf_stats`` events.
+
+At drain time :class:`RateMonitor` fits the **online linear-rate
+estimator** rho_hat — a windowed least-squares slope of ``log(residual)``
+vs round — annotating round events and emitting a ``rate_break`` WARN
+(naming the scenario axis) when a series that was contracting stalls
+above the numerical floor: the PR 3 (rr:2 + poly:1) and PR 5 (tier
+shift:q8) error floors become live detections from one run's JSONL
+alone (:func:`replay_jsonl`).
+
 Telemetry disabled (``algo.telemetry is None``) must be a BITWISE no-op:
 the engine guards every capture on the attached spec, so the disabled
 round traces the exact same jaxpr as before this module existed —
@@ -43,6 +68,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import json
+import math
 import os
 import subprocess
 from typing import Any
@@ -119,6 +145,97 @@ def _tree_norm(tree):
     return jnp.sqrt(sum(jnp.sum(jnp.square(a)) for a in jax.tree.leaves(tree)))
 
 
+# ------------------------------------------------------ distribution sketches
+#: the state-derived per-client distributions ``sketches="auto"`` tracks
+#: (each is silently absent when its source state is — e.g. no ``age_*``
+#: without a delay model, no ``compress_err_*`` without transforms).
+SKETCH_SOURCES = ("d_norm", "drift", "compress_err", "age")
+
+
+def log_histogram(vals, bins: int, lo: float, hi: float):
+    """``[bins]`` int32 counts of ``vals`` (non-negative) over log10-spaced
+    bins covering ``[10^lo, 10^hi)``; zeros and underflow clip into bin 0,
+    overflow into the last bin. The binning expression is shared verbatim
+    with ``kernels/ref.py:client_sketch`` and the Pallas
+    ``telemetry_reduce`` kernel (their parity contract)."""
+    logs = jnp.where(vals > 0, jnp.log10(vals), lo)
+    idx = jnp.clip(jnp.floor((logs - lo) * (bins / (hi - lo))),
+                   0, bins - 1).astype(jnp.int32)
+    return jnp.zeros((bins,), jnp.int32).at[idx].add(1)
+
+
+def _finish_sketch(name, vals, hist, spec, ids=None,
+                   top=None) -> dict:
+    """Quantiles + top-k around a per-client value vector whose histogram
+    is already computed; ``ids`` maps local (cohort-slot) indices back to
+    global client ids, ``top`` passes kernel-computed top-k through."""
+    q = jnp.quantile(vals, jnp.asarray([0.5, 0.9, 0.99], vals.dtype))
+    if top is None:
+        top = jax.lax.top_k(vals, min(spec.topk, vals.shape[0]))
+    tv, ti = top
+    ti = ti.astype(jnp.int32)
+    if ids is not None:
+        ti = ids[ti]
+    return {f"{name}_hist": hist,
+            f"{name}_p50": q[0], f"{name}_p90": q[1], f"{name}_p99": q[2],
+            f"{name}_max": jnp.max(vals),
+            f"{name}_top_vals": tv, f"{name}_top_ids": ti}
+
+
+def sketch_values(name, vals, spec, ids=None) -> dict:
+    """Distribution sketch of a per-client ``[n]`` value vector: log-bin
+    histogram, p50/p90/p99/max and the top-k outlier (value, client-id)
+    pairs — all still traced (they ride the scan ys)."""
+    if not jnp.issubdtype(vals.dtype, jnp.floating):
+        vals = vals.astype(jnp.float32)
+    hist = log_histogram(vals, spec.hist_bins, spec.hist_lo, spec.hist_hi)
+    return _finish_sketch(name, vals, hist, spec, ids=ids)
+
+
+def sketch_client_norms(name, tree, spec, ids=None) -> dict:
+    """Sketch the per-client L2 norms of a ``[clients, ...]`` state tree.
+    A packed-arena tree takes the fused one-pass Pallas norm+histogram
+    reduction (``kernels/ops.py:telemetry_sketch`` — the Mosaic kernel on
+    TPU, the same-math XLA expression elsewhere); any other pytree takes
+    the generic ``client_sq_norms`` path. Both bin identically."""
+    from repro.core.arena import Arena
+
+    if isinstance(tree, Arena) and tree.data.ndim == 3:
+        from repro.kernels import ops
+
+        norms, hist, tv, ti = ops.telemetry_sketch(
+            tree.data, bins=spec.hist_bins, lo=spec.hist_lo,
+            hi=spec.hist_hi, k=min(spec.topk, tree.data.shape[0]))
+        return _finish_sketch(name, norms, hist, spec, ids=ids,
+                              top=(tv, ti))
+    return sketch_values(name, jnp.sqrt(client_sq_norms(tree)), spec,
+                         ids=ids)
+
+
+def leaf_client_norms(tree):
+    """``[n_leaves]`` mean-client L2 norm per MODEL leaf — the per-leaf
+    breakdown of ``msg_norm`` / ``compress_err`` (``leaf_stats`` events;
+    the input a per-leaf bit-budget allocator would consume). On an arena
+    the reduction runs over the packed buffer through the static
+    row->leaf segment map; on a plain pytree it is the per-leaf norm
+    stack. Arena zero pads contribute nothing, so packed ~= per-leaf."""
+    from repro.core.arena import Arena
+
+    if isinstance(tree, Arena):
+        seg = jnp.asarray(tree.layout.row_segments())
+        n_leaves = len(tree.layout.shapes)
+        row_sq = jnp.sum(jnp.square(tree.data), axis=-1)
+        if row_sq.ndim == 1:
+            row_sq = row_sq[None, :]
+        per = jax.ops.segment_sum(row_sq.T, seg,
+                                  num_segments=n_leaves)  # [leaves, clients]
+        return jnp.mean(jnp.sqrt(per), axis=1)
+    return jnp.stack([
+        jnp.mean(jnp.sqrt(jnp.sum(jnp.square(a),
+                                  axis=tuple(range(1, a.ndim)))))
+        for a in jax.tree.leaves(tree)])
+
+
 # ------------------------------------------------------------------ monitors
 @dataclasses.dataclass(frozen=True)
 class Monitor:
@@ -151,6 +268,134 @@ INVARIANT_MONITOR = Monitor(
          "sum_i d_i = 0 redistribution (Lemma 2)")
 
 
+# ------------------------------------------------------ linear-rate estimator
+def fit_rate(rounds, values) -> float:
+    """Windowed log-residual regression: the least-squares slope of
+    ``ln(value)`` against round index, returned as the per-round
+    contraction factor ``rho_hat = exp(slope)`` — the paper's linear rate
+    as a measured number (``rho_hat < 1``: still converging linearly;
+    ``>= 1``: stalled or diverging)."""
+    r = np.asarray(rounds, dtype=float)
+    v = np.log(np.asarray(values, dtype=float))
+    r = r - r.mean()
+    denom = float(np.sum(r * r)) or 1.0
+    return float(math.exp(float(np.sum(r * (v - v.mean()))) / denom))
+
+
+def rate_axis(algo) -> str:
+    """The scenario axes attached to ``algo`` that can break the paper's
+    linear rate — what a :class:`RateMonitor` WARN names as the suspects
+    (mirroring the measured boundaries: PR 3 stale-policy discounting,
+    PR 5 tier recompression, biased compression)."""
+    parts = []
+    delay = getattr(algo, "delay", None)
+    if delay is not None:
+        parts.append("stale_policy (poly:a discounting under non-uniform "
+                     "delay ages floors FedCET — the PR 3 boundary)")
+    topo = getattr(algo, "topology", None)
+    if topo is not None and getattr(topo, "tier_compression", None) is not None:
+        parts.append("tier_compression (interior-hop recompression lacks "
+                     "wire-consistency — the PR 5 freeze)")
+    if getattr(algo, "transforms", ()):
+        parts.append("compression (a biased compressor without error "
+                     "feedback keeps an error floor)")
+    return " or ".join(parts) or "no lossy axis attached"
+
+
+@dataclasses.dataclass
+class RateMonitor:
+    """Online linear-rate estimator + rate-break alert, evaluated at drain
+    time over the streamed round events (stateful across a run's drain
+    segments — :func:`resolve_monitors` builds a fresh one per run).
+
+    Each round it appends ``(round, metric)`` and fits
+    :func:`fit_rate` over the trailing ``window`` points, annotating the
+    round event with ``rho_hat``. A **rate break** fires when a series
+    that had established linear convergence (best windowed estimate
+    ``<= ref_rho``) stalls (``rho_hat >= stall_rho``) while still far
+    above the numerical floor (``value > floor`` — so the healthy f64
+    noise plateau of an exact run never alerts). The WARN event carries
+    ``kind="rate_break"`` and ``axis`` — the scenario axes under
+    suspicion (:func:`rate_axis`).
+
+    ``metric`` defaults to ``"err"`` — a residual-type series the caller
+    merges into the drained round events (``simulate_quadratic``'s
+    distance-to-optimum; anything that decays to ZERO under exact
+    scenarios). Non-residual series (e.g. an LM loss with a nonzero
+    irreducible floor) would false-alarm at convergence; rounds without
+    the metric are simply skipped, so attaching the monitor to a run
+    that never emits it is harmless."""
+
+    metric: str = "err"
+    window: int = 12
+    stall_rho: float = 0.99
+    ref_rho: float = 0.97
+    floor: float = 1e-10
+    cooldown: int = 10
+    axis: str = ""
+
+    def __post_init__(self):
+        self._rounds: list[int] = []
+        self._values: list[float] = []
+        self._best: float | None = None
+        self._last_warn: int | None = None
+
+    def observe(self, ev: dict) -> dict | None:
+        """Feed one round event (annotates it with ``rho_hat`` in place);
+        returns the rate-break WARN event when one fires, else None."""
+        v = ev.get(self.metric)
+        if not isinstance(v, (int, float)) or isinstance(v, bool) or v <= 0:
+            return None
+        r = int(ev.get("round", len(self._rounds)))
+        self._rounds.append(r)
+        self._values.append(float(v))
+        if len(self._rounds) < self.window:
+            return None
+        rho = fit_rate(self._rounds[-self.window:],
+                       self._values[-self.window:])
+        ev["rho_hat"] = rho
+        self._best = rho if self._best is None else min(self._best, rho)
+        if (rho >= self.stall_rho and self._best <= self.ref_rho
+                and v > self.floor
+                and (self._last_warn is None
+                     or r - self._last_warn >= self.cooldown)):
+            self._last_warn = r
+            return {"event": "monitor", "kind": "rate_break",
+                    "level": "WARN", "metric": self.metric, "round": r,
+                    "value": float(v), "rho_hat": rho,
+                    "rho_ref": self._best, "axis": self.axis}
+        return None
+
+
+def replay_jsonl(path: str, monitors) -> list[dict]:
+    """Re-run a monitor set over a finished run's JSONL file ALONE — no
+    re-simulation: stream its round events through threshold
+    :class:`Monitor` checks and :class:`RateMonitor` observers exactly as
+    a live drain would, returning the WARN events. This is how the
+    pinned scenario boundaries are reproduced post hoc from one run's
+    log (benchmarks/telemetry_bench.py, benchmarks/report.py)."""
+    warns: list[dict] = []
+    with open(path) as f:
+        for line in f:
+            ev = json.loads(line)
+            if ev.get("event") != "round":
+                continue
+            for m in monitors:
+                if hasattr(m, "observe"):
+                    w = m.observe(ev)
+                    if w:
+                        warns.append(w)
+                    continue
+                v = ev.get(m.metric)
+                if (isinstance(v, (int, float))
+                        and not isinstance(v, bool) and m.violated(v)):
+                    warns.append({"event": "monitor", "level": "WARN",
+                                  "metric": m.metric, "round": ev["round"],
+                                  "value": v, "bound": m.bound,
+                                  "mode": m.mode, "axis": m.axis})
+    return warns
+
+
 # ------------------------------------------------------------- the spec
 @dataclasses.dataclass(frozen=True)
 class Telemetry:
@@ -164,15 +409,48 @@ class Telemetry:
     series; a tuple restricts to those names (unavailable names are
     silently absent — e.g. no ``age_*`` without a delay model).
     ``monitors="auto"`` evaluates :data:`INVARIANT_MONITOR` on algorithms
-    that expose the drift state; a tuple of :class:`Monitor` overrides."""
+    that expose the drift state (plus a :class:`RateMonitor` when
+    :func:`resolve_monitors` is given the algorithm); a tuple of
+    :class:`Monitor` overrides.
+
+    ``sketches`` turns on the population-scale distribution sketches:
+    ``False`` (default — scalar telemetry only, the pre-sketch stream),
+    ``"auto"`` / ``True`` (every source in :data:`SKETCH_SOURCES` whose
+    state exists) or a tuple of source names. Each source ``s`` adds
+    ``s_hist`` (``[hist_bins]`` int32 log-histogram over
+    ``[10^hist_lo, 10^hist_hi)``), ``s_p50``/``s_p90``/``s_p99``/
+    ``s_max`` and the ``[topk]`` outlier pairs ``s_top_vals`` /
+    ``s_top_ids`` (GLOBAL client ids, also under cohort mode).
+    ``leaf_stats=True`` adds the per-leaf ``leaf_msg_norm`` /
+    ``leaf_compress_err`` vectors (drained as ``leaf_stats`` events)."""
 
     metrics: tuple | str = "auto"
     monitors: tuple | str = "auto"
+    sketches: tuple | str | bool = False
+    hist_bins: int = 48
+    hist_lo: float = -12.0
+    hist_hi: float = 4.0
+    topk: int = 4
+    leaf_stats: bool = False
+
+    def wants_sketch(self, name: str) -> bool:
+        """Whether the spec sketches source ``name`` — the engine's guard
+        for building the per-client capture ops at all."""
+        if not self.sketches:
+            return False
+        if self.sketches is True or self.sketches == "auto":
+            return True
+        return name in self.sketches
 
     def finalize(self, tape: dict, algo, state) -> dict:
         """Tape + post-round state -> the round's metric dict (still
-        traced values; becomes the scan's stacked ys)."""
+        traced values; becomes the scan's stacked ys). Sketches read the
+        post-round state, which is the FULL ``[N, ...]`` client store in
+        both cohort lowerings — the one O(N) pass per round."""
         out = dict(tape)
+        # raw per-client seam captures feed sketches only — never emitted.
+        cohort_ids = out.pop("cohort_ids", None)
+        err_clients = out.pop("compress_err_clients", None)
         inner = algo._inner(state)
         d = getattr(inner, "d", None)
         if d is not None:
@@ -183,35 +461,89 @@ class Telemetry:
         x = getattr(inner, "x", None)
         if x is None:
             x = getattr(inner, "x_curr", None)
+        dev = None
         if x is not None:
             dev = jax.tree.map(
                 lambda a: a - jnp.mean(a, axis=0, keepdims=True), x)
             out["consensus_err"] = jnp.sqrt(jnp.max(client_sq_norms(dev)))
+        if self.sketches:
+            if d is not None and self.wants_sketch("d_norm"):
+                out.update(sketch_client_norms("d_norm", d, self))
+            if dev is not None and self.wants_sketch("drift"):
+                out.update(sketch_client_norms("drift", dev, self))
+            if err_clients is not None and self.wants_sketch("compress_err"):
+                out.update(sketch_values("compress_err", err_clients, self,
+                                         ids=cohort_ids))
+            if self.wants_sketch("age"):
+                split = getattr(algo, "_split", None)
+                dstate = split(state)[3] if split is not None else None
+                if dstate is not None:
+                    out.update(sketch_values(
+                        "age", dstate.age.astype(jnp.float32), self))
         if self.metrics != "auto":
             out = {k: out[k] for k in self.metrics if k in out}
         return out
+
+
+#: spec-string parts that configure the SPEC rather than name a sink —
+#: ``parse_telemetry`` consumes them, ``parse_sinks`` skips them, so one
+#: ``--telemetry`` string drives both (``"jsonl:run.jsonl,hist:48"``).
+_SPEC_PART_KINDS = ("hist", "topk", "leafstats", "leaf_stats")
+
+
+def _spec_overrides(spec: str) -> dict:
+    """Telemetry-field overrides encoded in a sink-spec string:
+    ``hist[:bins[:lo:hi]]`` (log10 bin range) and ``topk[:k]`` turn the
+    distribution sketches on, ``leafstats`` the per-leaf breakdown."""
+    ov: dict = {}
+    for part in spec.split(","):
+        kind, _, arg = part.strip().partition(":")
+        kind = kind.lower()
+        if kind == "hist":
+            ov["sketches"] = "auto"
+            sub = [s for s in arg.split(":") if s]
+            if sub:
+                ov["hist_bins"] = int(sub[0])
+            if len(sub) >= 3:
+                ov["hist_lo"], ov["hist_hi"] = float(sub[1]), float(sub[2])
+        elif kind == "topk":
+            ov["sketches"] = "auto"
+            if arg:
+                ov["topk"] = int(arg)
+        elif kind in ("leafstats", "leaf_stats"):
+            ov["leaf_stats"] = True
+    return ov
 
 
 def parse_telemetry(spec) -> Telemetry | None:
     """Normalize a telemetry knob: ``None`` / ``False`` / ``"none"`` /
     ``"off"`` / ``""`` -> None (disabled — the factory returns the
     algorithm unchanged); a :class:`Telemetry` passes through; any other
-    truthy value (``True``, a sink spec string) -> the default spec."""
+    truthy value (``True``, a sink spec string) -> the default spec, with
+    ``hist``/``topk``/``leafstats`` parts of a spec string turning the
+    distribution sketches on (see :func:`_spec_overrides`)."""
     if spec is None or spec is False:
         return None
     if isinstance(spec, Telemetry):
         return spec
-    if isinstance(spec, str) and spec.strip().lower() in (
-            "", "none", "off", "0", "false"):
-        return None
+    if isinstance(spec, str):
+        if spec.strip().lower() in ("", "none", "off", "0", "false"):
+            return None
+        return Telemetry(**_spec_overrides(spec))
     return Telemetry()
 
 
-def resolve_monitors(telemetry: Telemetry | None) -> tuple:
+def resolve_monitors(telemetry: Telemetry | None, algo=None) -> tuple:
+    """The drain-time monitor set for a spec: explicit tuples pass
+    through; ``"auto"`` is the invariant monitor plus — when the
+    algorithm is given, so the WARN can name its attached lossy axes —
+    a fresh (stateful) :class:`RateMonitor` on the residual series."""
     if telemetry is None:
         return ()
     if telemetry.monitors == "auto":
-        return (INVARIANT_MONITOR,)
+        if algo is None:
+            return (INVARIANT_MONITOR,)
+        return (INVARIANT_MONITOR, RateMonitor(axis=rate_axis(algo)))
     return tuple(telemetry.monitors)
 
 
@@ -232,6 +564,18 @@ def _scalar(v):
     if a.dtype.kind in "iu":
         return int(a)
     return float(a)
+
+
+def _jsonable(v):
+    """Host value -> JSON-serializable event value: native scalar, or a
+    list for the 1-D sketch vectors (histogram bins, top-k ids)."""
+    a = np.asarray(v)
+    if a.ndim == 0:
+        return _scalar(a)
+    if a.ndim == 1:
+        return [_scalar(x) for x in a]
+    raise ValueError("telemetry events carry scalars or 1-D vectors, got "
+                     f"shape {a.shape}")
 
 
 class MemorySink:
@@ -267,7 +611,14 @@ class JsonlSink:
 
 class CsvSink:
     """Round events as CSV; columns fixed by the first round event
-    (non-round events are skipped — JSONL is the full stream)."""
+    (non-round events are skipped — JSONL is the full stream).
+
+    Vector-valued metrics (the distribution sketches: ``*_hist`` bins,
+    ``*_top_ids``/``*_top_vals``) are flattened into stable indexed
+    columns ``name.0 .. name.{k-1}`` — the column set stays fixed because
+    sketch shapes are static (``hist_bins``/``topk`` are spec fields).
+    Anything deeper than 1-D is rejected with a pointer at the JSONL
+    sink, never silently stringified into an unparseable cell."""
 
     def __init__(self, path: str):
         self.path = path
@@ -277,13 +628,31 @@ class CsvSink:
         self._f = open(path, "w")
         self._keys: list[str] | None = None
 
+    @staticmethod
+    def _flatten(event: dict) -> dict:
+        flat = {}
+        for k, v in event.items():
+            if k == "event":
+                continue
+            if isinstance(v, (list, tuple)):
+                if any(isinstance(x, (list, tuple)) for x in v):
+                    raise ValueError(
+                        f"CsvSink cannot flatten nested vector metric {k!r}"
+                        " — route this stream to a jsonl:<path> sink")
+                for i, x in enumerate(v):
+                    flat[f"{k}.{i}"] = x
+            else:
+                flat[k] = v
+        return flat
+
     def emit(self, event: dict) -> None:
         if event.get("event") != "round":
             return
+        flat = self._flatten(event)
         if self._keys is None:
-            self._keys = [k for k in event if k != "event"]
+            self._keys = list(flat)
             self._f.write(",".join(self._keys) + "\n")
-        self._f.write(",".join(str(event.get(k, "")) for k in self._keys)
+        self._f.write(",".join(str(flat.get(k, "")) for k in self._keys)
                       + "\n")
 
     def close(self) -> None:
@@ -305,9 +674,19 @@ class StdoutSink:
         if kind == "round":
             if event.get("round", 0) % self.every:
                 return
+            # sketch vectors stay in jsonl/csv — a 48-bin histogram per
+            # line would drown the summary.
             body = "  ".join(f"{k}={self._fmt(v)}" for k, v in event.items()
-                             if k not in ("event", "round"))
+                             if k not in ("event", "round")
+                             and not isinstance(v, (list, tuple)))
             print(f"[telemetry] round {event.get('round', 0):5d}  {body}")
+        elif kind == "monitor" and event.get("kind") == "rate_break":
+            print(f"[telemetry] WARN round {event.get('round')}: rate break "
+                  f"on {event.get('metric')} — rho_hat="
+                  f"{self._fmt(event.get('rho_hat'))} after established "
+                  f"{self._fmt(event.get('rho_ref'))} at value "
+                  f"{self._fmt(event.get('value'))}  "
+                  f"(axis: {event.get('axis', '')})")
         elif kind == "monitor":
             print(f"[telemetry] WARN round {event.get('round')}: "
                   f"{event.get('metric')}={self._fmt(event.get('value'))} "
@@ -328,6 +707,8 @@ class StdoutSink:
 def parse_sinks(spec) -> list:
     """Sink spec grammar (the ``--telemetry`` CLI knob): comma-separated
     ``jsonl:<path>`` | ``csv:<path>`` | ``stdout[:every]`` | ``memory``.
+    Spec-configuring parts (``hist``/``topk``/``leafstats`` — consumed by
+    :func:`parse_telemetry`) are skipped so one string drives both.
     Sink objects / lists pass through; None -> []."""
     if spec is None or spec is True:
         return []
@@ -340,6 +721,8 @@ def parse_sinks(spec) -> list:
             continue
         kind, _, arg = part.partition(":")
         kind = kind.lower()
+        if kind in _SPEC_PART_KINDS:
+            continue
         if kind == "jsonl":
             sinks.append(JsonlSink(arg or "telemetry.jsonl"))
         elif kind == "csv":
@@ -407,13 +790,21 @@ def run_manifest(algo, *, n_params: int | None = None, config: dict | None = Non
 
 def drain(series: dict | None, *, sinks=(), monitors=(), start_round: int = 0,
           static: dict | None = None, algo=None,
-          n_params: int | None = None) -> list:
+          n_params: int | None = None, leaf_names=None) -> list:
     """Device-get the stacked per-round telemetry pytree ONCE and emit one
     ``round`` event per round into the sinks, evaluating ``monitors``
     against each (violations emit a structured WARN event right after
     their round). ``static`` merges constant per-round fields; passing
     ``algo``/``n_params`` derives the bit-true ``bits_up``/``bits_down``
-    per round from the comm accounting. Returns the emitted events."""
+    per round from the comm accounting. Returns the emitted events.
+
+    Vector-valued series (the distribution sketches) land in the round
+    event as JSON lists; ``leaf_*`` series split off into a per-round
+    ``leaf_stats`` event (``leaf_names`` labels its entries on the first
+    round of the segment). Observer monitors (:class:`RateMonitor` —
+    anything with ``.observe``) see and annotate each round event BEFORE
+    it is emitted, so ``rho_hat`` rides the stream; threshold
+    :class:`Monitor` checks skip vector values."""
     events: list[dict] = []
     if not series:
         return events
@@ -427,21 +818,40 @@ def drain(series: dict | None, *, sinks=(), monitors=(), start_round: int = 0,
                                    getattr(algo, "n_clients", 1))
         stat.setdefault("bits_up", bits["up_bits"])
         stat.setdefault("bits_down", bits["down_bits"])
+    leaf_keys = [k for k in host if k.startswith("leaf_")]
+    observers = [m for m in monitors if hasattr(m, "observe")]
+    checks = [m for m in monitors if not hasattr(m, "observe")]
     for i in range(n):
         ev = {"event": "round", "round": int(start_round + i)}
         for k, v in host.items():
-            ev[k] = _scalar(v[i])
+            if k in leaf_keys:
+                continue
+            ev[k] = _jsonable(v[i])
         ev.update(stat)
+        rate_warns = [w for w in (m.observe(ev) for m in observers) if w]
         events.append(ev)
         emit_event(sinks, ev)
-        for m in monitors:
-            if m.metric in ev and m.violated(ev[m.metric]):
+        if leaf_keys:
+            lev = {"event": "leaf_stats", "round": ev["round"]}
+            if leaf_names is not None and i == 0:
+                lev["names"] = list(leaf_names)
+            for k in leaf_keys:
+                lev[k[len("leaf_"):]] = _jsonable(host[k][i])
+            events.append(lev)
+            emit_event(sinks, lev)
+        for m in checks:
+            v = ev.get(m.metric)
+            if (isinstance(v, (int, float)) and not isinstance(v, bool)
+                    and m.violated(v)):
                 warn = {"event": "monitor", "level": "WARN",
                         "metric": m.metric, "round": ev["round"],
-                        "value": ev[m.metric], "bound": m.bound,
+                        "value": v, "bound": m.bound,
                         "mode": m.mode, "axis": m.axis}
                 events.append(warn)
                 emit_event(sinks, warn)
+        for w in rate_warns:
+            events.append(w)
+            emit_event(sinks, w)
     return events
 
 

@@ -123,6 +123,38 @@ def gossip_reduce(contrib, *, slots: int):
     return out[:n, :d]
 
 
+@functools.partial(jax.jit, static_argnames=("bins", "lo", "hi", "k", "impl"))
+def telemetry_sketch(data, *, bins: int, lo: float, hi: float, k: int,
+                     impl: str = "auto"):
+    """One-pass per-client distribution sketch over the packed client
+    store (see kernels/telemetry_reduce.py; oracle:
+    kernels/ref.py:client_sketch). ``data`` is ``[clients, ...]`` —
+    typically the arena's ``[clients, rows, 1024]`` buffer, flattened
+    per client here (zero pad entries contribute 0 to the norms).
+
+    Returns ``(norms [clients], hist [bins] int32, top_vals [k],
+    top_ids [k] int32)``: the per-client ``||x_i||``, their
+    log10-histogram over ``[10^lo, 10^hi)`` and the k largest with their
+    client indices. The top-k runs on the ``[clients]`` norms vector out
+    here — next to a D-wide sweep it is free."""
+    from repro.kernels import telemetry_reduce as KT
+
+    n = data.shape[0]
+    flat = data.reshape(n, -1)
+    if _use_kernel(impl):
+        cb = min(KT.CLIENT_BLOCK, n)
+        db = min(KT.LANE_BLOCK, -(-flat.shape[1] // 128) * 128)
+        t = jnp.pad(flat, ((0, -n % cb), (0, -flat.shape[1] % db)))
+        sq, hist = KT.client_sketch_2d(t, bins=bins, lo=lo, hi=hi,
+                                       n_valid=n, interpret=_interpret())
+        sq, hist = sq[:n, 0], hist[0, :bins]
+    else:
+        sq, hist = R.client_sketch(flat, bins=bins, lo=lo, hi=hi)
+    norms = jnp.sqrt(sq)
+    tv, ti = jax.lax.top_k(norms, min(k, n))
+    return norms, hist, tv, ti.astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("c", "alpha", "impl"))
 def fedcet_comm(d, m, m_bar, c: float, alpha: float, v=None,
                 impl: str = "auto"):

@@ -101,6 +101,24 @@ def segment_reduce(vals, slots: int):
     return jax.ops.segment_sum(vals, seg, num_segments=n)
 
 
+def client_sketch(x, *, bins: int, lo: float, hi: float):
+    """Per-client norm + log-histogram oracle (kernels/telemetry_reduce.py).
+
+    ``x`` is the flattened client store ``[clients, D]`` (zero pad columns
+    contribute 0). Returns ``(sq_norms [clients], hist [bins] int32)``
+    where ``hist`` counts ``||x_i||`` into ``bins`` log10-uniform bins
+    over ``[10^lo, 10^hi)`` — the binning formula is shared verbatim with
+    ``core/telemetry.py:log_histogram`` (zeros land in bin 0, overflow
+    clips into the edge bins)."""
+    sq = jnp.sum(x * x, axis=1)
+    v = jnp.sqrt(sq)
+    logs = jnp.where(v > 0, jnp.log10(v), lo)
+    idx = jnp.clip(jnp.floor((logs - lo) * (bins / (hi - lo))),
+                   0, bins - 1).astype(jnp.int32)
+    hist = jnp.zeros((bins,), jnp.int32).at[idx].add(1)
+    return sq, hist
+
+
 def topk_mask(x, k: int):
     """Magnitude top-k (per flattened leaf): keep the k largest |x|."""
     flat = x.reshape(-1)

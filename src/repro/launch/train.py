@@ -241,6 +241,14 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
     attaches the in-trace telemetry transform (per-round norms, invariant
     residual, consensus error, staleness ages — captured inside the jitted
     scan, drained into the sinks per segment behind a run manifest).
+    Adding ``hist[:bins[:lo:hi]]`` / ``topk[:k]`` parts to the same
+    string turns on the population distribution sketches (per-client
+    ``||d_i||``, drift, compression error and age log-histograms +
+    quantiles + top-k outlier client ids, one O(N) pass over the full
+    client store per round); ``leafstats`` adds the per-leaf
+    msg_norm/compress_err breakdown as ``leaf_stats`` events. The drain
+    also runs an online linear-rate estimator whose ``rho_hat`` rides
+    each round event and WARNs on rate breaks naming the suspect axis.
     ``trace_rounds`` (``"a:b"`` or ``"a"``) brackets that round window
     with a ``jax.profiler`` trace written under ``trace_dir`` — segment
     boundaries are forced at the window edges so the trace covers exactly
@@ -289,7 +297,14 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
                                metric_with_batch=True, donate=True)
 
     sinks = tele.parse_sinks(telemetry)
-    monitors = tele.resolve_monitors(getattr(algo, "telemetry", None))
+    tel_spec = getattr(algo, "telemetry", None)
+    # passing the algo gives the monitor set a RateMonitor that names the
+    # attached lossy axes when the measured linear rate breaks.
+    monitors = tele.resolve_monitors(tel_spec, algo)
+    leaf_names = None
+    if tel_spec is not None and tel_spec.leaf_stats:
+        leaf_names = [jax.tree_util.keystr(p) for p, _ in
+                      jax.tree_util.tree_flatten_with_path(params)[0]]
     trace = tele.TraceSession(tele.parse_trace_rounds(trace_rounds),
                               out_dir=trace_dir)
     trace_stops = set(trace.boundaries())
@@ -327,8 +342,11 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
         if ev:
             tele.emit_event(sinks, ev)
         if tel_series is not None and sinks:
-            tele.drain(tel_series, sinks=sinks, monitors=monitors,
-                       start_round=r, algo=algo, n_params=meter.n_params)
+            # the per-round loss rides the round events so the rate
+            # estimator / report can read the LM convergence curve.
+            tele.drain({**tel_series, "loss": losses}, sinks=sinks,
+                       monitors=monitors, start_round=r, algo=algo,
+                       n_params=meter.n_params, leaf_names=leaf_names)
         for _ in range(r, stop + 1):
             meter.tick_round(algo)
         losses = jax.device_get(losses)
@@ -396,7 +414,12 @@ def main(argv=None):
                     help="telemetry sink spec: jsonl:<path> | csv:<path> | "
                          "stdout[:every] | memory (comma-chained). Any "
                          "non-empty spec enables in-trace round telemetry "
-                         "+ invariant monitors; omitted = bitwise no-op")
+                         "+ invariant/rate monitors; add hist[:bins[:lo:hi]]"
+                         " / topk:<k> parts for the per-client distribution"
+                         " sketches and leafstats for the per-leaf "
+                         "msg_norm/compress_err breakdown (e.g. "
+                         "'jsonl:run.jsonl,hist:48,topk:4'); omitted = "
+                         "bitwise no-op")
     ap.add_argument("--log-every", type=int, default=10,
                     help="print a per-round summary line (round, loss, "
                          "bits_up, active_clients) every k rounds")
