@@ -3,7 +3,15 @@ for each assigned architecture's parameter count (the paper's headline:
 FedCET transmits HALF of SCAFFOLD/FedTrack/FedLin at equal round counts),
 plus BIT-TRUE bits/round for every compressor stack (the compressor
 subsystem's accounting contract: sparsifiers pay index bits, quantizers
-shrink value bits, seed-synchronized rand-k pays values only)."""
+shrink value bits, seed-synchronized rand-k pays values only).
+
+Per-leaf plan billing (``_plan_leaf_billing``) additionally pins the
+lowering-invariance contract: a :class:`CompressionPlan`'s per-leaf bits
+are identical (not merely close) whether the leaf sizes come from the
+unpacked pytree (``leaf_info_of``) or the packed parameter arena
+(``ArenaLayout.leaf_sizes``), and the DECLARED per-leaf wire bits agree
+with the ACTUALLY kept coordinate counts to <= 1 coordinate per leaf
+(the ``max(1, round(k_frac * n))`` rounding fix)."""
 
 from __future__ import annotations
 
@@ -81,6 +89,79 @@ def _algos(n_clients: int) -> dict:
         "fedcet_cohort4_shiftq8": with_cohort(
             with_compression(fedcet(), compressor="shift:q8"), "block:4"),
     }
+
+
+def _plan_leaf_billing(csv_rows=None, n_clients: int = 16) -> None:
+    """Per-leaf plan billing on the reduced LM geometry: identical bits
+    from the packed-arena layout and the unpacked pytree (<= 1e-12), and
+    declared-vs-actual kept coordinates within 1 per leaf."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core import (leaf_info_of, message_leaf_bits_of, parse_plan,
+                            with_compression)
+    from repro.core.arena import ArenaLayout
+    from repro.core.comm import CommMeter
+    from repro.core.compressors import (ErrorFeedback, Shifted, _k_of,
+                                        _wire_stages)
+    from repro.models import build_model
+
+    cfg = get_config("fedlm-100m").reduced()
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    info = leaf_info_of(params)
+
+    plan = parse_plan("embed*:topk:0.3,ln*:q4,lm_head*:randk:0.5+q8,"
+                      "*:shift:q6")
+    algo = with_compression(
+        FedCET(alpha=1e-3, c=0.05, tau=2, n_clients=n_clients),
+        compressor=plan, seed=0)
+
+    # (1) lowering invariance: billing never inspects how the message is
+    # packed — per-leaf sizes from ArenaLayout (layout order == flatten
+    # order) and from leaf_info_of produce IDENTICAL per-leaf bits.
+    layout = ArenaLayout.for_tree(params)
+    arena_info = list(zip((nm for nm, _ in info), layout.leaf_sizes()))
+    pytree_bits = message_leaf_bits_of(algo, info)
+    arena_bits = message_leaf_bits_of(algo, arena_info)
+    assert pytree_bits and arena_bits and len(pytree_bits) == len(info)
+    for a, b in zip(pytree_bits, arena_bits):
+        assert abs(a - b) <= 1e-12, (a, b)
+    meter = CommMeter.for_params(params, algo=algo, n_clients=n_clients)
+    assert meter.leaf_bits == tuple(pytree_bits)
+    assert abs(meter.bits_up - sum(pytree_bits) / meter.n_params) <= 1e-12
+
+    # (2) declared vs actual: compress a random leaf through each resolved
+    # stack and count surviving coordinates — the declared kept count
+    # (max(1, round(k_frac * n)), the rounding fix) matches to <= 1.
+    key = jax.random.key(3)
+    for i, (nm, n) in enumerate(info):
+        comp = plan.resolve(i, nm)
+        stages = _wire_stages(comp)
+        frac, declared = 1.0, float(n)
+        for s in stages:
+            if s.keep_frac < 1.0:
+                frac *= s.keep_frac
+                declared = float(_k_of(frac, n))
+        if frac >= 1.0:
+            continue  # dense stack: every coordinate survives
+        # count survivors after the SPARSIFYING stages only — a trailing
+        # quantizer legitimately rounds small kept values to zero, but
+        # those coordinates are still transmitted (and billed).
+        q = jax.random.normal(jax.random.fold_in(key, i), (1, n))
+        for j, s in enumerate(stages):
+            if s.keep_frac < 1.0:
+                sub = jax.random.fold_in(jax.random.fold_in(key, i), j)
+                q = s.compress(sub if s.requires_key else None, q)
+        actual = int(jnp.sum(q != 0))
+        assert abs(declared - actual) <= 1, (nm, declared, actual)
+        if csv_rows is not None:
+            csv_rows.append((f"comm/plan_leaf/{nm}", 0.0,
+                             f"declared_kept={declared:g}"
+                             f";actual_kept={actual}"
+                             f";bits={pytree_bits[i]:g}"))
 
 
 def run(csv_rows=None, n_clients: int = 16):
@@ -177,6 +258,7 @@ def run(csv_rows=None, n_clients: int = 16):
                                      n_clients=n_clients)
         assert math.isclose(ccbits["up_bits"], sync_up * frac * 8.0 / 32.0,
                             rel_tol=1e-12)
+    _plan_leaf_billing(csv_rows, n_clients)
     return out
 
 

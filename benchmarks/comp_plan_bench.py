@@ -1,0 +1,215 @@
+"""Benchmark: per-leaf compression plans vs the uniform uplink on the LM
+track — does a bit-budget allocator buy a better error floor at the SAME
+measured wire cost?
+
+Uniform ``shift:q8`` spends 8 bits on every coordinate of every leaf.
+The allocator (``CompressionPlan.allocate``) instead water-fills the same
+TOTAL budget across leaves by sensitivity: dithered quantization at ``b``
+bits on a leaf with RMS ``s`` costs ``~ n * s^2 * 4^-b`` mean-square
+error, so the marginal value of one more bit on leaf ``i`` is
+``s_i^2 * 4^-b_i`` and the optimum equalizes it across leaves. We use
+``sensitivity='absmax'`` — StochasticQuant scales its grid to
+``max|leaf|``, so absmax is the model-matched weighting. On the
+fedlm-100m geometry the norm scales are zeros-init (residual
+parametrization, zero quantization error at any width) and get dropped
+to the floor, freeing bits that flow into the widest-range matmuls
+(mlp/up) at the expense of the flatter embedding tables.
+
+Two measurements, both at a budget pinned to the MEASURED uniform
+shift:q8 bits/round (exact per-leaf accounting, actual kept counts):
+
+1. **quantization error head-to-head** — one round-message-shaped tree
+   (the model parameters: FedCET transmits the ABSOLUTE iterate, so
+   params are the right scale model) through both compressor stacks;
+   relative MSE must drop under the plan at <= the uniform bits;
+2. **LM training** — ``launch.train.run_training`` end to end, uniform
+   vs allocated plan at the same round count and data; the plan must
+   land at-or-below the uniform loss while its meter (bit-true,
+   per-leaf) reports equal-or-fewer transmitted bytes.
+
+Committed findings live in results/BENCH_comp_plan.json; full (non
+``--quick``) runs re-assert:
+
+* plan bits/round <= uniform bits/round (measured, per-leaf exact);
+* plan quantization MSE <= MSE_WIN_MAX x uniform MSE (the allocator's
+  whole point — measured ~0.85x on this init-time geometry, where the
+  sensitivity spread across matmul leaves is modest);
+* plan final LM loss <= LOSS_WASH_MAX x uniform final loss (the error
+  win must not cost convergence).
+
+``--quick`` (CI) shrinks rounds/clients and skips the assertions.
+"""
+
+from __future__ import annotations
+
+try:
+    from benchmarks._timing import results_dir, write_bench_json
+except ImportError:  # run directly as a script: benchmarks/ is sys.path[0]
+    from _timing import results_dir, write_bench_json
+
+ARCH = "fedlm-100m"
+CLIENTS = 8
+TAU = 2
+BATCH = 2
+SEQ = 32
+ROUNDS = 24          # quick: 4
+SEED = 0
+
+# conservative pins under the measured findings (full mode only).
+MSE_WIN_MAX = 0.95   # plan quant MSE <= 0.95x uniform's (measured ~0.85)
+LOSS_WASH_MAX = 1.02  # plan final loss within 2% of uniform (or better)
+
+
+def _budget_and_plan(quick: bool):
+    """The measured uniform shift:q8 bits/round and the sensitivity-
+    weighted plan allocated to exactly that budget (both exact per-leaf
+    accounting — actual kept counts, first-narrowest-wins chains)."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import (CompressionPlan, FedCET, leaf_info_of,
+                            message_leaf_bits_of, with_compression)
+    from repro.models import build_model
+
+    cfg = get_config(ARCH).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(SEED))
+    info = leaf_info_of(params)
+
+    n = 4 if quick else CLIENTS
+    uniform = with_compression(
+        FedCET(alpha=3e-3, c=0.05, tau=TAU, n_clients=n),
+        compressor="shift:q8", seed=SEED)
+    uniform_leaf_bits = message_leaf_bits_of(uniform, info)
+    budget = float(sum(uniform_leaf_bits))
+
+    plan = CompressionPlan().allocate(
+        budget, leaves=params, sensitivity="absmax", wrap="shift",
+        min_bits=2, max_bits=14)
+    plan_bits = float(sum(plan.tree_wire_bits(info)))
+    return model, params, info, budget, plan, plan_bits
+
+
+def quant_error_head_to_head(plan, params, csv_rows=None) -> dict:
+    """Relative quantization MSE of one message-shaped tree through the
+    uniform q8 stack vs the plan's per-leaf stacks (bare quantizers — the
+    shift wrappers share the same inner quantizer on round one, when the
+    shift memory is zero, so this IS the round-one compression error)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.compressors import ErrorFeedback, Shifted, from_spec
+
+    def strip(c):
+        return c.inner if isinstance(c, (ErrorFeedback, Shifted)) else c
+
+    key = jax.random.key(7)
+    flat, _ = jax.tree_util.tree_flatten(params)
+
+    def tree_mse(comp_for_leaf):
+        num = den = 0.0
+        for i, leaf in enumerate(flat):
+            comp = comp_for_leaf(i)
+            sub = jax.random.fold_in(key, i)
+            q = leaf if comp is None else comp.compress(
+                sub if comp.requires_key else None, leaf[None])[0]
+            num += float(jnp.sum(jnp.square(q - leaf)))
+            den += float(jnp.sum(jnp.square(leaf)))
+        return num / den
+
+    from repro.core.comm import leaf_info_of
+
+    names = [nm for nm, _ in leaf_info_of(params)]
+    q8 = strip(from_spec("shift:q8"))
+    mse_uniform = tree_mse(lambda i: q8)
+    mse_plan = tree_mse(lambda i: strip(plan.resolve(i, names[i])))
+    out = {"mse_uniform_q8": mse_uniform, "mse_plan": mse_plan,
+           "mse_ratio": mse_plan / mse_uniform}
+    if csv_rows is not None:
+        csv_rows.append(("comp_plan/quant_mse_ratio", out["mse_ratio"],
+                         f"uniform={mse_uniform:.3e};plan={mse_plan:.3e}"))
+    return out
+
+
+def lm_track(plan, quick: bool, csv_rows=None) -> dict:
+    """End-to-end LM training, uniform shift:q8 vs the allocated plan —
+    same data, seed and round count; per-leaf bit-true comm metering."""
+    import time
+
+    from repro.launch.train import run_training
+
+    n = 4 if quick else CLIENTS
+    rounds = 4 if quick else ROUNDS
+    out = {}
+    for name, kw in (("uniform_q8", {"compression": "shift:q8"}),
+                     ("plan", {"compression_plan": plan})):
+        t0 = time.perf_counter()
+        hist = run_training(ARCH, steps=rounds, tau=TAU, n_clients=n,
+                            batch=BATCH, seq_len=SEQ, seed=SEED,
+                            log_every=max(rounds // 2, 1), **kw)
+        wall = time.perf_counter() - t0
+        out[name] = {"loss": hist["loss"][-1],
+                     "comm_bytes": hist["comm_bytes"][-1],
+                     "round_us": wall / rounds * 1e6}
+        if csv_rows is not None:
+            csv_rows.append((f"comp_plan/loss/{name}", hist["loss"][-1],
+                             f"rounds={rounds};bytes={hist['comm_bytes'][-1]}"))
+    out["loss_ratio"] = out["plan"]["loss"] / out["uniform_q8"]["loss"]
+    out["bytes_ratio"] = (out["plan"]["comm_bytes"]
+                          / out["uniform_q8"]["comm_bytes"])
+    if csv_rows is not None:
+        csv_rows.append(("comp_plan/loss_ratio", out["loss_ratio"],
+                         f"bytes_ratio={out['bytes_ratio']:.6f}"))
+    return out
+
+
+def run(csv_rows=None, quick: bool = False):
+    model, params, info, budget, plan, plan_bits = _budget_and_plan(quick)
+    n_total = sum(n for _, n in info)
+    if csv_rows is not None:
+        csv_rows.append(("comp_plan/bits_per_coord", plan_bits / n_total,
+                         f"uniform={budget / n_total:.4f};"
+                         f"leaves={len(info)}"))
+    mse = quant_error_head_to_head(plan, params, csv_rows)
+    track = lm_track(plan, quick, csv_rows)
+
+    write_bench_json(
+        "comp_plan",
+        config={"arch": ARCH, "clients": (4 if quick else CLIENTS),
+                "tau": TAU, "batch": BATCH, "seq": SEQ,
+                "rounds": (4 if quick else ROUNDS), "seed": SEED,
+                "budget_bits_per_round": budget, "quick": quick,
+                "sensitivity": "absmax", "wrap": "shift"},
+        timings={"round/uniform_q8": track["uniform_q8"]["round_us"],
+                 "round/plan": track["plan"]["round_us"]},
+        extra={"bits": {"uniform_q8": budget, "plan": plan_bits,
+                        "ratio": plan_bits / budget},
+               "quant_mse": mse,
+               "lm_track": track,
+               "plan_rules": [(pat, repr(c)) for pat, c in plan.rules]},
+        out_dir=results_dir())
+
+    # ---- pinned findings (full mode only; see module docstring)
+    if not quick:
+        assert plan_bits <= budget + 1e-9, (
+            "allocated plan exceeds the measured uniform budget",
+            plan_bits, budget)
+        assert mse["mse_ratio"] <= MSE_WIN_MAX, (
+            "plan no longer beats uniform q8 on quantization error at "
+            "matched bits", mse)
+        assert track["loss_ratio"] <= LOSS_WASH_MAX, (
+            "plan loss fell off the uniform baseline", track)
+        assert track["bytes_ratio"] <= 1.0 + 1e-9, (
+            "plan transmitted more than uniform", track)
+    return {"bits": {"uniform": budget, "plan": plan_bits}, "mse": mse,
+            "track": track}
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = []
+    run(csv_rows=rows, quick="--quick" in sys.argv)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(",".join(map(str, r)))

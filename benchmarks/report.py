@@ -12,7 +12,11 @@ tab) with:
     bands of per-client ||d_i||, drift, compression error, staleness age
     — the population view that mean curves hide),
   * the communication budget (cumulative uplink/downlink bits from the
-    bit-true per-round accounting), and
+    bit-true per-round accounting),
+  * the budget-vs-leaf breakdown (exact per-leaf wire bits from the
+    manifest — compression-plan rules and actual kept counts included —
+    joined with each leaf's mean compress_err from the ``leaf_stats``
+    events), and
   * the perf trajectory table from ``results/BENCH_trajectory.json``
     when present (one row per bench timing).
 
@@ -260,6 +264,55 @@ def comm_section(manifest, rounds) -> str:
                [("uplink", COLORS[0]), ("downlink", COLORS[4])]) + tot
 
 
+def leaf_budget_section(manifest, leaves) -> str:
+    """Budget-vs-leaf breakdown: how the per-round uplink bits split
+    across message leaves (the manifest's exact per-leaf billing — plan
+    rules and actual kept counts included), joined against the mean
+    per-leaf compression error from the run's ``leaf_stats`` events."""
+    man = manifest or {}
+    names = man.get("leaf_names")
+    bits = man.get("leaf_bits")
+    sizes = man.get("leaf_sizes")
+    err_sum, err_n = {}, {}
+    for ev in leaves:
+        if names is None and isinstance(ev.get("names"), list):
+            names = ev["names"]
+        if bits is None and isinstance(ev.get("bits"), list):
+            bits = ev["bits"]
+        errs = ev.get("compress_err")
+        if isinstance(errs, list):
+            for i, v in enumerate(errs):
+                if isinstance(v, (int, float)):
+                    err_sum[i] = err_sum.get(i, 0.0) + v
+                    err_n[i] = err_n.get(i, 0) + 1
+    if not names or not isinstance(bits, list):
+        return ("<p>No per-leaf billing in this run — needs an algorithm "
+                "whose compressor stack decomposes per leaf (manifest "
+                "<code>leaf_bits</code>).</p>")
+    total = sum(bits) or 1.0
+    rows = []
+    for i, nm in enumerate(names):
+        b = bits[i] if i < len(bits) else None
+        if not isinstance(b, (int, float)):
+            continue
+        n = sizes[i] if sizes and i < len(sizes) else None
+        per = f"{b / n:.2f}" if n else "—"
+        err = (f"{err_sum[i] / err_n[i]:.3e}"
+               if err_n.get(i) else "—")
+        rows.append(f"<tr><td><code>{html.escape(str(nm))}</code></td>"
+                    f"<td>{n if n else '—'}</td><td>{per}</td>"
+                    f"<td>{b:.0f}</td>"
+                    f"<td>{100.0 * b / total:.1f}%</td>"
+                    f"<td>{err}</td></tr>")
+    if not rows:
+        return "<p>No per-leaf billing in this run.</p>"
+    return ("<table><tr><th>leaf</th><th>coords</th><th>bits/coord</th>"
+            "<th>bits/round</th><th>budget share</th>"
+            "<th>mean compress_err</th></tr>" + "".join(rows)
+            + f"</table><p>Total client-hop uplink: {total:.3e} bits "
+              "per client per round (exact per-leaf accounting).</p>")
+
+
 def trajectory_section(path: str | None) -> str:
     if not path or not os.path.exists(path):
         return ""
@@ -316,7 +369,7 @@ code { background: #f5f5f5; padding: 1px 4px; }
 
 
 def render(jsonl_path: str, trajectory: str | None = None) -> str:
-    manifest, rounds, warns, _leaves = load_events(jsonl_path)
+    manifest, rounds, warns, leaves = load_events(jsonl_path)
     parts = [
         "<!doctype html><html><head><meta charset='utf-8'>",
         f"<title>run report — {html.escape(os.path.basename(jsonl_path))}"
@@ -327,6 +380,7 @@ def render(jsonl_path: str, trajectory: str | None = None) -> str:
         convergence_section(rounds, warns),
         "<h2>Population distribution ribbons</h2>", ribbon_section(rounds),
         "<h2>Communication budget</h2>", comm_section(manifest, rounds),
+        "<h2>Budget vs leaf</h2>", leaf_budget_section(manifest, leaves),
         trajectory_section(trajectory),
         "</body></html>",
     ]

@@ -5,6 +5,9 @@ Prints ``name,us_per_call,derived`` CSV rows. Modules:
   comm_table       — Remark 2: bytes/round per algorithm x architecture
   lr_search_bench  — Algorithm 1 output/timing across regimes
   fed_lm_bench     — federated LM round throughput + bytes-to-target-error
+  comp_plan_bench  — per-leaf compression plans: budget-matched allocated
+                     plan vs uniform shift:q8 on the LM track (plan must
+                     win at equal-or-fewer measured bits/round)
   kernel_bench     — Pallas fedcet-update kernels (interpret mode)
   roofline_table   — (arch x shape x mesh) roofline terms from the dry-run
                      results JSON, when present
@@ -70,10 +73,17 @@ def check_drift(threshold: float = 1.5) -> list[str]:
                 text=True, check=True,
                 cwd=os.path.dirname(os.path.abspath(__file__))).stdout)
         except (subprocess.CalledProcessError, json.JSONDecodeError):
-            print(f"# drift: {name}: no committed baseline (new bench)",
+            # freshly added bench (not in HEAD yet — e.g. the file this
+            # very run just emitted): new, skip. NOT a failure.
+            print(f"# drift: new {name}: no committed baseline, skipping",
                   file=sys.stderr)
             continue
-        fresh = json.loads(open(path).read())
+        try:
+            fresh = json.loads(open(path).read())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"# drift: WARN {name}: unreadable working-tree file "
+                  f"({e})", file=sys.stderr)
+            continue
         base_t = committed.get("timings_us", {})
         for k, v in fresh.get("timings_us", {}).items():
             b = base_t.get(k)
@@ -110,6 +120,7 @@ def main(argv=None) -> None:
     from benchmarks import (
         cohort_scaling,
         comm_table,
+        comp_plan_bench,
         fed_lm_bench,
         fig1_convergence,
         gossip_scaling,
@@ -127,6 +138,7 @@ def main(argv=None) -> None:
         ("comm_table", comm_table),
         ("lr_search_bench", lr_search_bench),
         ("fed_lm_bench", fed_lm_bench),
+        ("comp_plan_bench", comp_plan_bench),
         ("kernel_bench", kernel_bench),
         ("roofline_table", roofline_table),
         ("gossip_scaling", gossip_scaling),

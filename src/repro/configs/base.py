@@ -135,6 +135,11 @@ class FedScenario:
     ``"shift:q8"`` (DIANA-style shifted quantization), chains via ``+``
     (``"randk:0.5+q8"``), ``"ef:"`` prefix to force error feedback.
     ``error_feedback=None`` auto-wraps biased compressors only.
+    ``compression_plan`` is the PER-LEAF alternative
+    (:func:`repro.core.compressors.parse_plan`): first-match-wins
+    ``pattern:spec`` rules over leaf paths, e.g.
+    ``"embed*:q12,ln*:bf16,*:shift:q6"`` — mutually exclusive with
+    ``compression``.
 
     ``delay`` is a spec string for :func:`repro.core.staleness.parse_delay`
     — ``"none"``, ``"fixed:2"`` (periodic uplink), ``"rr:1"`` (round-robin
@@ -185,6 +190,14 @@ class FedScenario:
     ... --cohort ... --arena ... --telemetry jsonl:path`)."""
 
     compression: str = "none"
+    #: per-leaf compression plan — comma-separated ``pattern:spec`` rules
+    #: for :func:`repro.core.compressors.parse_plan`, first-match-wins
+    #: (``"embed*:q12,ln*:bf16,*:shift:q6"``; patterns glob slash-joined
+    #: leaf paths or name flatten-order leaf indices), or a ready
+    #: :class:`~repro.core.compressors.CompressionPlan` (e.g. from
+    #: ``plan.allocate``). Mutually exclusive with ``compression`` — a
+    #: plan IS the uplink compressor; ``error_feedback`` applies per rule.
+    compression_plan: Any = "none"
     participation: float = 1.0
     delay: str = "none"
     stale_policy: str = "last"
@@ -197,7 +210,7 @@ class FedScenario:
     seed: int = 0
 
     def apply(self, algo):
-        from repro.core.compressors import from_spec
+        from repro.core.compressors import from_spec, parse_plan
         from repro.core.engine import (with_arena, with_cohort,
                                        with_compression, with_delay,
                                        with_participation, with_telemetry,
@@ -208,6 +221,17 @@ class FedScenario:
                              tier_compression=self.tier_compression)
         algo = with_participation(algo, self.participation, seed=self.seed)
         comp = from_spec(self.compression)  # one normalizer for the grammar
+        plan = parse_plan(self.compression_plan,
+                          error_feedback=self.error_feedback)
+        if comp is not None and plan is not None:
+            raise ValueError(
+                "pass EITHER compression= or compression_plan=, not both — "
+                "a plan IS the uplink compressor (put a '*:<spec>' "
+                "catch-all rule in the plan for the uniform part): "
+                f"compression={self.compression!r}, "
+                f"compression_plan={self.compression_plan!r}")
+        if plan is not None:
+            algo = with_compression(algo, compressor=plan, seed=self.seed)
         if comp is not None:
             algo = with_compression(algo, compressor=comp,
                                     error_feedback=self.error_feedback,

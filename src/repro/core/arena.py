@@ -102,6 +102,15 @@ class ArenaLayout:
         return np.repeat(np.arange(len(self.shapes), dtype=np.int32),
                          self.rows_per_leaf)
 
+    def leaf_sizes(self) -> tuple:
+        """Per-leaf coordinate counts in flatten order — the segment index
+        of ``row_segments`` IS the leaf index a
+        :class:`~repro.core.compressors.CompressionPlan` digit rule names,
+        and these sizes are the ``n`` its exact ``wire_bits`` rounding
+        bills (same order as ``repro.core.comm.leaf_info_of`` on the
+        unpacked tree)."""
+        return tuple(math.prod(s) for s in self.shapes)
+
 
 class Arena:
     """A pytree whose leaves live packed in one ``[..., rows, LANES]``

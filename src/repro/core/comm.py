@@ -61,6 +61,42 @@ def quantize_bf16(a: jax.Array) -> jax.Array:
     return a.astype(jnp.bfloat16).astype(a.dtype)
 
 
+def leaf_name(path) -> str:
+    """Canonical slash-joined leaf name for a jax key path — the naming
+    contract shared by :class:`~repro.core.compressors.CompressionPlan`
+    globs, telemetry ``leaf_stats`` labels and per-leaf billing (e.g.
+    ``('embed', 'w') -> "embed/w"``, list positions render as digits)."""
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(str(k.name))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        else:  # FlattenedIndexKey and friends
+            parts.append(str(getattr(k, "key", k)).strip(".[]'\""))
+    return "/".join(parts)
+
+
+def leaf_info_of(params) -> list:
+    """The message leaf decomposition ``[(name, n_coords), ...]`` of a
+    model pytree, in flatten order (== ``ArenaLayout.row_segments`` leaf
+    order — arena runs unpack to exactly this tree). This is the shared
+    vocabulary between plans, billing and telemetry: names feed plan
+    globs, sizes feed the exact ``wire_bits`` rounding."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    return [(leaf_name(p), int(leaf.size)) for p, leaf in flat]
+
+
+def message_leaf_bits_of(algo, leaf_info) -> list | None:
+    """Per-leaf exact uplink wire bits for one client's one UP vector, or
+    None when the algorithm cannot bill per-leaf (no ``message_leaf_bits``
+    hook, or internal compression the engine cannot decompose — FedLin)."""
+    fn = getattr(algo, "message_leaf_bits", None)
+    return None if fn is None else fn(leaf_info)
+
+
 def bits_per_coord_of(algo) -> float:
     """Bit-true uplink width (bits per model coordinate per UP vector) an
     algorithm declares; falls back to ``32 * up_frac`` for objects that
@@ -106,7 +142,8 @@ def tier_bits_of(topo) -> float:
     return float(getattr(topo, "tier_bits_per_coord", 32.0))
 
 
-def comm_hops_per_round(algo, n_params: int, n_clients: int = 1) -> list:
+def comm_hops_per_round(algo, n_params: int, n_clients: int = 1,
+                        leaf_info=None) -> list:
     """Per-hop EXPECTED uplink traffic for one round, as dicts of
     ``{hop, messages, bits}``. The client (first) hop pays the compressor
     stack's wire width x the transmit duty cycle — once per message,
@@ -116,14 +153,26 @@ def comm_hops_per_round(algo, n_params: int, n_clients: int = 1) -> list:
     Aggregator-tier hops (edge->root re-transmissions in a hierarchy)
     carry dense f32 partial aggregates unless the hierarchy attaches a
     ``tier_compression`` — then each upward tier message pays that
-    compressor's wire width instead (:func:`tier_bits_of`)."""
+    compressor's wire width instead (:func:`tier_bits_of`).
+
+    Pass ``leaf_info`` (see :func:`leaf_info_of`) to bill the client hop
+    EXACTLY per leaf: actual sparsifier kept counts (``max(1, round(k *
+    n))`` — tiny leaves cost more than the fraction declares) and
+    per-leaf :class:`~repro.core.compressors.CompressionPlan` rules,
+    falling back to the fractional ``n_params * bits_per_coord`` when the
+    algorithm cannot decompose per leaf."""
     topo = topology_of(algo)
     up_mult = topo.client_up_mult(n_clients) if topo is not None else 1.0
+    msg_bits = float(n_params) * bits_per_coord_of(algo)
+    if leaf_info is not None:
+        lb = message_leaf_bits_of(algo, leaf_info)
+        if lb is not None:
+            msg_bits = float(sum(lb))
     hops = [{
         "hop": "client",
         "messages": n_clients * up_mult,
-        "bits": (algo.vectors_up * n_params * n_clients * up_mult
-                 * bits_per_coord_of(algo) * transmit_frac_of(algo)),
+        "bits": (algo.vectors_up * msg_bits * n_clients * up_mult
+                 * transmit_frac_of(algo)),
     }]
     for label, msgs in (topo.aggregator_hops(n_clients) if topo else ()):
         hops.append({"hop": label, "messages": msgs,
@@ -172,6 +221,12 @@ class CommMeter:
     down_mult: float = 1.0
     agg_msgs: float = 0.0
     tier_bits_up: float = 32.0
+    #: exact per-leaf uplink wire bits for one client's one UP vector, in
+    #: leaf flatten order (``for_params`` fills this whenever the algorithm
+    #: can bill per leaf). When set, ``bits_up == sum(leaf_bits)/n_params``
+    #: — the exact size-weighted width, actual kept counts and per-leaf
+    #: plan rules included.
+    leaf_bits: tuple | None = None
     rounds: int = 0
     bytes_up: int = 0
     bytes_down: int = 0
@@ -195,8 +250,13 @@ class CommMeter:
                 "really want a fixed width).")
         if algo is not None:
             topo = topology_of(algo)
-            return cls(n_params=tree_num_params(params), n_clients=n_clients,
-                       bits_up=bits_per_coord_of(algo),
+            n_params = tree_num_params(params)
+            lb = message_leaf_bits_of(algo, leaf_info_of(params))
+            bits_up = (sum(lb) / float(n_params) if lb
+                       else bits_per_coord_of(algo))
+            return cls(n_params=n_params, n_clients=n_clients,
+                       bits_up=bits_up,
+                       leaf_bits=tuple(lb) if lb else None,
                        bits_down=32.0 * float(getattr(algo, "down_frac", 1.0)),
                        up_duty=transmit_frac_of(algo),
                        down_duty=receive_frac_of(algo),
@@ -257,7 +317,8 @@ class CommMeter:
         return self.bytes_up + self.bytes_down
 
 
-def comm_bits_per_round(algo, n_params: int, n_clients: int = 1) -> dict:
+def comm_bits_per_round(algo, n_params: int, n_clients: int = 1,
+                        leaf_info=None) -> dict:
     """Bit-true EXPECTED wire bits per communication round (the Remark 2
     accounting with the compressor stack, the delay model's uplink duty
     cycle, the sampling rate's downlink duty cycle, and the topology's
@@ -265,9 +326,13 @@ def comm_bits_per_round(algo, n_params: int, n_clients: int = 1) -> dict:
     sums all uplink hops (see :func:`comm_hops_per_round` — interior
     tier hops pay the tier compressor's width when one is attached); the
     hierarchy's downward tier re-broadcasts mirror the upward hops but
-    always stay dense f32 (tier recompression is an UPLINK mechanism)."""
+    always stay dense f32 (tier recompression is an UPLINK mechanism).
+    ``leaf_info`` upgrades the client hop to exact per-leaf billing
+    (actual kept counts + per-leaf plan rules) — see
+    :func:`comm_hops_per_round`."""
     topo = topology_of(algo)
-    up = sum(h["bits"] for h in comm_hops_per_round(algo, n_params, n_clients))
+    up = sum(h["bits"] for h in
+             comm_hops_per_round(algo, n_params, n_clients, leaf_info))
     down_mult = topo.broadcast_mult(n_clients) if topo is not None else 1.0
     agg_msgs = (sum(m for _, m in topo.aggregator_hops(n_clients))
                 if topo is not None else 0)

@@ -44,9 +44,27 @@ compressor declares
   derived from the above; ``up_frac = bits_per_coord / 32``.
 
 :class:`Chain` composes stages left-to-right and accounts exactly: value
-width is set by the last quantizer, index bits accumulate per stage at that
-stage's survival fraction. Per-leaf scalar overheads (one f32 scale per
-leaf for :class:`StochasticQuant`) are O(1) per tensor and excluded.
+width is the NARROWEST any stage puts on the wire (first-narrowest-wins —
+a later, wider quantizer re-encodes already-narrow values and cannot widen
+the payload), index bits accumulate per stage at that stage's survival
+fraction. Per-leaf scalar overheads (one f32 scale per leaf for
+:class:`StochasticQuant`) are O(1) per tensor and excluded.
+
+Fractional accounting (``bits_per_coord``) is an n -> infinity statement;
+the ACTUAL kept count of a sparsifier is ``max(1, round(k_frac * n))`` per
+leaf, so tiny leaves (biases, layernorm scales) transmit more than the
+declared fraction. ``wire_bits(n)`` is the exact per-leaf cost with that
+rounding applied — ``CommMeter``/``comm_bits_per_round`` bill it when
+given the leaf decomposition (repro/core/comm.py:leaf_info_of).
+
+:class:`CompressionPlan` maps leaf paths (globs over ``embed/w``-style
+slash-joined names, or flatten-order leaf indices — the same order as
+``ArenaLayout.row_segments``) to per-leaf compressor specs, with a greedy
+bit-budget allocator (``plan.allocate``) and an adaptive tightening hook
+(:class:`AdaptivePlan`). A plan IS a Compressor: it rides the same
+``MessageCompression`` transform, and a plan mapping every leaf to one
+spec is bitwise-identical to the uniform path (same ``fold_in(key, i)``
+per-leaf subkey enumeration, same per-leaf stateful-wrapper math).
 
 ``from_spec`` parses the launch-config grammar (configs/base.py):
 ``"topk:0.3"``, ``"randk:0.25"``, ``"q8"``, ``"nat"`` (natural /
@@ -69,8 +87,10 @@ from repro.core.arena import Arena, pack, pack_rows, unpack
 from repro.core.comm import quantize_bf16, topk_sparsify
 
 __all__ = [
+    "AdaptivePlan",
     "Bf16",
     "Chain",
+    "CompressionPlan",
     "Compressor",
     "ErrorFeedback",
     "Identity",
@@ -82,6 +102,8 @@ __all__ = [
     "as_compressor",
     "auto_wrap",
     "from_spec",
+    "parse_plan",
+    "stack_wire_bits",
 ]
 
 
@@ -152,6 +174,17 @@ class Compressor:
         (``E|C(x) - x|^2 <= omega |x|^2``); 0.0 for (near-)deterministic
         ones. Drives :class:`Shifted`'s stable step ``beta = 1/(1+omega)``."""
         return 0.0
+
+    def wire_bits(self, n: int) -> float:
+        """EXACT uplink wire bits one client pays for one leaf of ``n``
+        coordinates — the actual-kept-count analogue of
+        ``n * bits_per_coord``. Sparsifying stages keep
+        ``max(1, round(k_frac * n))`` coordinates (the same rounding
+        ``compress`` applies), so tiny leaves bill their real cost; the
+        drift vs the fractional declaration is at most one coordinate's
+        worth of bits per sparsifying stage per leaf (pinned in
+        tests/test_comm.py)."""
+        return _stages_wire_bits(_wire_stages(self), n)
 
     # -------------------------------------------------------------- compute
     def compress(self, key, leaf):
@@ -442,10 +475,11 @@ class Bf16(Compressor):
 class Chain(Compressor):
     """Left-to-right composition: ``Chain((a, b))`` transmits ``b(a(v))``.
 
-    Accounting is exact: the final value width is the last stage that sets
-    one; index bits accumulate per sparsifying stage, weighted by the
-    survival fraction at that stage (e.g. ``TopK(0.3) + Bf16`` costs
-    ``0.3 * (16 + 32)`` bits/coordinate — bf16 values, int32 indices)."""
+    Accounting is exact: the value width is the narrowest any stage sets
+    (first-narrowest-wins); index bits accumulate per sparsifying stage,
+    weighted by the survival fraction at that stage (e.g. ``TopK(0.3) +
+    Bf16`` costs ``0.3 * (16 + 32)`` bits/coordinate — bf16 values, int32
+    indices)."""
 
     stages: tuple
 
@@ -487,10 +521,16 @@ class Chain(Compressor):
 
     @property
     def value_bits(self) -> float | None:
+        """First-narrowest-wins: once a stage has narrowed the payload to
+        ``b`` bits, a LATER wider stage re-encodes those values but cannot
+        put more information back on the wire — ``q8 + bf16`` transmits
+        8-bit payloads in a 16-bit container at best, and the honest wire
+        cost is the 8 bits of content. (The old scan billed the LAST
+        quantizer's width, silently over-billing such chains 2x.)"""
         vb = None
         for s in self.stages:
             if s.value_bits is not None:
-                vb = s.value_bits
+                vb = s.value_bits if vb is None else min(vb, s.value_bits)
         return vb
 
     def compress(self, key, leaf):
@@ -628,6 +668,453 @@ class Shifted(Compressor):
         b = self.step
         shift = jax.tree.map(lambda h, qq: h + b * qq, extra, q)
         return recon, shift
+
+
+# -------------------------------------------------- exact per-leaf wire bits
+def _wire_stages(comp: Compressor) -> list:
+    """The billable stage list of a compressor stack: stateful wrappers
+    bill their inner compressor (EF/shift memories never ride the wire),
+    chains flatten to their stages."""
+    while isinstance(comp, (ErrorFeedback, Shifted)):
+        comp = comp.inner
+    return list(comp.stages) if isinstance(comp, Chain) else [comp]
+
+
+def _stages_wire_bits(stages, n: int) -> float:
+    """Exact wire bits for one leaf of ``n`` coords through a stage list:
+    the Chain accounting model with the ACTUAL kept count
+    ``max(1, round(cum_keep * n))`` in place of the fraction, and
+    first-narrowest-wins value width. Each sparsifying stage pays its
+    index bits at the survival count after that stage."""
+    frac, kept, idx, value = 1.0, float(n), 0.0, None
+    for s in stages:
+        kf = s.keep_frac
+        if kf < 1.0:
+            frac *= kf
+            kept = float(_k_of(frac, n))
+        idx += kept * s.index_bits
+        vb = s.value_bits
+        if vb is not None:
+            value = vb if value is None else min(value, vb)
+    return kept * (32.0 if value is None else value) + idx
+
+
+def stack_wire_bits(stack, index: int, name: str, n: int) -> float:
+    """Exact wire bits one client pays for leaf ``(index, name)`` of ``n``
+    coords through a TRANSFORM stack (one compressor per attached engine
+    transform, applied left-to-right). Plans resolve to their per-leaf
+    rule first; ``None`` entries (passthrough) bill nothing extra. This is
+    the one composition rule both the per-leaf and arena lowerings bill
+    through, so they agree by construction."""
+    stages: list = []
+    for comp in stack:
+        if isinstance(comp, CompressionPlan):
+            comp = comp.resolve(index, name)
+        if comp is None:
+            continue
+        stages.extend(_wire_stages(comp))
+    return _stages_wire_bits(stages, n)
+
+
+# --------------------------------------------------------- per-leaf planning
+def _match_leaf(name: str, pattern: str) -> bool:
+    """Glob match against the slash-joined leaf path or any one of its
+    components (so ``embed*`` matches ``embed/w`` and ``ln*`` matches
+    ``layers_0/ln1/scale``)."""
+    import fnmatch
+
+    return (fnmatch.fnmatchcase(name, pattern)
+            or any(fnmatch.fnmatchcase(part, pattern)
+                   for part in name.split("/")))
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPlan(Compressor):
+    """Per-leaf compression policy: an ordered ``(pattern, compressor)``
+    rule list resolved FIRST-MATCH-WINS against each message leaf.
+
+    Patterns are globs over the slash-joined leaf path (``embed/w``,
+    ``layers_0/attn/wq`` — the names :func:`repro.core.comm.leaf_info_of`
+    derives) matched against the full path or any single component, or
+    all-digit strings naming a flatten-order leaf index (the same order as
+    ``ArenaLayout.row_segments`` segments). Unmatched leaves fall through
+    to ``default`` (``None`` = dense f32 passthrough).
+
+    A plan is itself a :class:`Compressor` and rides the engine's
+    ``MessageCompression`` transform unchanged. Leaf ``i`` is compressed
+    with subkey ``fold_in(key, i)`` — exactly the enumeration the uniform
+    per-tree path uses — and stateful rule wrappers (:class:`Shifted` /
+    :class:`ErrorFeedback`) run leaf-wise against a message-shaped memory
+    tree, so a plan mapping EVERY leaf to one spec is bitwise-identical to
+    uniform ``with_compression`` with that spec, and checkpoints
+    interchange between the two (pinned in tests/test_comp_plan.py).
+    Arena-packed messages unpack, apply per-leaf, and repack (flatten
+    order == layout order), so both lowerings compress AND bill
+    identically.
+
+    ``leaves`` optionally binds the leaf decomposition ``((name, n), ...)``
+    so the scalar accounting properties (``bits_per_coord`` et al.) are
+    exact; unbound plans estimate from their catch-all rule. Billing
+    through ``CommMeter.for_params`` / ``comm_bits_per_round(...,
+    leaf_info=)`` is always exact — it carries the decomposition."""
+
+    rules: tuple = ()
+    default: Compressor | None = None
+    #: optional bound leaf decomposition ((name, n_coords), ...) for exact
+    #: scalar accounting; attach via ``bind``/``allocate``.
+    leaves: tuple | None = None
+
+    def __post_init__(self):
+        for pat, comp in self.rules:
+            if comp is not None and isinstance(comp, CompressionPlan):
+                raise ValueError("plans cannot nest inside plans")
+        if self.default is not None and self.default.stateful:
+            raise ValueError("the default rule must be stateless; name the "
+                             "leaves a stateful wrapper should cover (a "
+                             "'*' catch-all rule may be stateful)")
+
+    # ------------------------------------------------------------ resolution
+    def resolve(self, index: int, name: str) -> Compressor | None:
+        """The compressor for leaf ``(index, name)``: first matching rule,
+        else ``default``, else None (dense passthrough)."""
+        for pat, comp in self.rules:
+            if pat.isdigit():
+                if int(pat) == index:
+                    return comp
+            elif _match_leaf(name, pat):
+                return comp
+        return self.default
+
+    def _rule_comps(self):
+        comps = [c for _, c in self.rules if c is not None]
+        if self.default is not None:
+            comps.append(self.default)
+        return comps
+
+    # ------------------------------------------------------------ accounting
+    @property
+    def stateful(self):  # type: ignore[override]
+        return any(c.stateful for c in self._rule_comps())
+
+    @property
+    def requires_key(self):  # type: ignore[override]
+        return any(c.requires_key for c in self._rule_comps())
+
+    @property
+    def unbiased(self):  # type: ignore[override]
+        return all(c.unbiased for c in self._rule_comps())
+
+    @property
+    def omega(self) -> float:
+        return max((c.omega for c in self._rule_comps()), default=0.0)
+
+    @property
+    def keep_frac(self):  # type: ignore[override]
+        """None on purpose: a plan has no single keep fraction — the
+        engine's ``_transforms_bits`` falls through to ``bits_per_coord``
+        and per-leaf billing uses ``wire_bits``/``stack_wire_bits``."""
+        return None
+
+    @property
+    def index_bits(self):  # type: ignore[override]
+        return None
+
+    @property
+    def value_bits(self) -> float | None:
+        return None
+
+    @property
+    def bits_per_coord(self) -> float:
+        """Size-weighted average wire bits per coordinate. EXACT when the
+        plan is bound to a leaf decomposition (``bind``/``allocate``);
+        otherwise estimated from the catch-all rule (32.0 if none)."""
+        if self.leaves:
+            total = sum(n for _, n in self.leaves)
+            return sum(self.tree_wire_bits(self.leaves)) / float(total)
+        for pat, comp in self.rules:
+            if pat == "*":
+                return 32.0 if comp is None else comp.bits_per_coord
+        return 32.0 if self.default is None else self.default.bits_per_coord
+
+    def leaf_wire_bits(self, index: int, name: str, n: int) -> float:
+        comp = self.resolve(index, name)
+        return float(n) * 32.0 if comp is None else comp.wire_bits(n)
+
+    def tree_wire_bits(self, leaf_info) -> list:
+        """Exact per-leaf wire bits for a ``[(name, n), ...]`` leaf
+        decomposition (one client, one up-vector)."""
+        return [self.leaf_wire_bits(i, nm, int(n))
+                for i, (nm, n) in enumerate(leaf_info)]
+
+    def bind(self, leaf_info) -> "CompressionPlan":
+        """Attach the leaf decomposition so scalar accounting is exact."""
+        info = tuple((str(nm), int(n)) for nm, n in leaf_info)
+        return dataclasses.replace(self, leaves=info)
+
+    # -------------------------------------------------------------- compute
+    def compress(self, key, leaf):
+        raise TypeError("CompressionPlan is a whole-tree policy; "
+                        "use apply(), not compress()")
+
+    def init_extra(self, msg_shapes):
+        """One message-shaped memory tree when ANY rule is stateful (the
+        same structure the uniform Shifted/ErrorFeedback wrappers carry —
+        what makes plan and uniform checkpoints interchange); leaves whose
+        rule is stateless keep zeros there untouched."""
+        if not self.stateful:
+            return None
+        return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                            msg_shapes)
+
+    def _apply_leaf(self, comp, sub, leaf, e):
+        """One leaf through its resolved rule. Stateful wrappers run
+        leaf-wise with EXACTLY the uniform wrappers' math and key gating
+        (the inner compressor of leaf i sees the same ``fold_in(key, i)``
+        subkey the uniform path derives)."""
+        if comp is None:
+            return leaf, e
+        if isinstance(comp, ErrorFeedback):
+            carried = e + leaf
+            tx = comp.inner.compress(
+                sub if comp.inner.requires_key else None, carried)
+            return tx, carried - tx
+        if isinstance(comp, Shifted):
+            resid = leaf - e
+            q = comp.inner.compress(
+                sub if comp.inner.requires_key else None, resid)
+            return e + q, e + comp.step * q
+        return comp.compress(sub if comp.requires_key else None, leaf), e
+
+    def apply(self, key, msg, extra):
+        if _has_arena(msg):
+            return self.apply_arena(key, msg, extra)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(msg)
+        from repro.core.comm import leaf_name
+
+        names = [leaf_name(p) for p, _ in flat]
+        e_leaves = (jax.tree.leaves(extra) if extra is not None
+                    else [None] * len(flat))
+        out, new_e = [], []
+        for i, ((_, leaf), e) in enumerate(zip(flat, e_leaves)):
+            comp = self.resolve(i, names[i])
+            sub = (jax.random.fold_in(key, i)
+                   if key is not None and comp is not None
+                   and comp.requires_key else None)
+            o, ne = self._apply_leaf(comp, sub, leaf, e)
+            out.append(o)
+            new_e.append(ne)
+        out = jax.tree.unflatten(treedef, out)
+        if extra is None:
+            return out, None
+        return out, jax.tree.unflatten(treedef, new_e)
+
+    def apply_arena(self, key, msg, extra):
+        """Unpack message AND memory, apply per-leaf, repack both — the
+        unpacked tree flattens in the arena's layout order, so rule
+        resolution, per-leaf subkeys and wrapper memories are IDENTICAL
+        to the per-leaf lowering."""
+        unpack_tree = lambda t: jax.tree.map(  # noqa: E731
+            lambda a: unpack(a) if _is_arena(a) else a, t, is_leaf=_is_arena)
+        repack_tree = lambda like, t: jax.tree.map(  # noqa: E731
+            lambda a, o: pack(o, a.layout) if _is_arena(a) else o,
+            like, t, is_leaf=_is_arena)
+        out, new_e = self.apply(key, unpack_tree(msg),
+                                unpack_tree(extra) if extra is not None
+                                else None)
+        out = repack_tree(msg, out)
+        if extra is None:
+            return out, None
+        return out, repack_tree(extra, new_e)
+
+    # ------------------------------------------------------------- allocator
+    def allocate(self, budget_bits_per_round: float, *, leaves,
+                 sensitivity="rms", grads=None, wrap: str | None = "shift",
+                 min_bits: int = 2, max_bits: int = 12) -> "CompressionPlan":
+        """Greedy bit-budget allocation: pick per-leaf quantizer widths (or
+        a ``k_frac`` when the budget is below the all-``min_bits`` floor)
+        meeting a TOTAL uplink budget of ``budget_bits_per_round`` bits per
+        client per round, and return the resulting bound plan.
+
+        ``leaves`` is the message/params pytree (or a ``[(name, n)]``
+        decomposition). ``sensitivity`` weighs leaves: ``"rms"`` (per-leaf
+        root-mean-square of ``leaves``' values), ``"absmax"`` (per-leaf
+        ``max|x|`` — the grid scale StochasticQuant actually uses, so the
+        model-matched choice for quantizer plans), ``"grad_norm"``
+        (per-leaf ``|g|/sqrt(n)`` of the ``grads`` pytree), an explicit
+        per-leaf sequence, or None (uniform). Dithered quantization at ``b`` bits
+        has mean-square error ``~ n * s^2 * 4^-b``, so the marginal value
+        of one more bit on leaf ``i`` is ``~ s_i^2 * 4^-b_i`` per
+        coordinate while its cost is flat — the allocator water-fills by
+        repeatedly granting +1 bit to the leaf with the highest
+        ``s_i^2 * 4^-b_i`` that still fits. ``wrap`` wraps every per-leaf
+        quantizer (``"shift"`` default — the DIANA shift that removes the
+        quantization floor; ``"ef"``; None = bare)."""
+        if isinstance(leaves, (list, tuple)) and leaves \
+                and isinstance(leaves[0], (list, tuple)) \
+                and len(leaves[0]) == 2 and isinstance(leaves[0][1], int):
+            info = [(str(nm), int(n)) for nm, n in leaves]
+            values = None
+        else:
+            from repro.core.comm import leaf_info_of
+
+            info = leaf_info_of(leaves)
+            values = jax.tree.leaves(leaves)
+        if sensitivity is None or sensitivity == "uniform":
+            s = [1.0] * len(info)
+        elif isinstance(sensitivity, str):
+            if sensitivity == "rms":
+                if values is None:
+                    raise ValueError("sensitivity='rms' needs the actual "
+                                     "leaf arrays, not a (name, n) list")
+                s = [float(jnp.sqrt(jnp.mean(jnp.square(v.astype(
+                    jnp.float32))))) for v in values]
+            elif sensitivity == "absmax":
+                # the scale StochasticQuant actually quantizes against —
+                # its per-coordinate error is ~ max|x|^2 * 4^-b, so this
+                # is the model-matched weighting for quantizer plans.
+                if values is None:
+                    raise ValueError("sensitivity='absmax' needs the "
+                                     "actual leaf arrays")
+                s = [float(jnp.max(jnp.abs(v.astype(jnp.float32))))
+                     for v in values]
+            elif sensitivity == "grad_norm":
+                if grads is None:
+                    raise ValueError("sensitivity='grad_norm' needs grads=")
+                gl = jax.tree.leaves(grads)
+                s = [float(jnp.linalg.norm(g.astype(jnp.float32).ravel())
+                           / math.sqrt(max(g.size, 1))) for g in gl]
+            else:
+                raise ValueError(f"unknown sensitivity {sensitivity!r} "
+                                 "(rms | absmax | grad_norm | sequence "
+                                 "| None)")
+        else:
+            s = [float(v) for v in sensitivity]
+        if len(s) != len(info):
+            raise ValueError(f"sensitivity has {len(s)} entries for "
+                             f"{len(info)} leaves")
+        max_bits = min(max_bits, 16)
+        floor_cost = sum(n for _, n in info) * min_bits
+        mk_wrap = {"shift": Shifted, "ef": ErrorFeedback,
+                   None: lambda c: c, "none": lambda c: c}[wrap]
+        if budget_bits_per_round < floor_cost:
+            # below the all-min_bits floor: trade coordinates, not width —
+            # one shared k_frac scales the whole message into budget.
+            k = max(budget_bits_per_round / float(floor_cost), 1.0 / 64.0)
+            rules = tuple(
+                (nm, mk_wrap(Chain((RandK(k), StochasticQuant(min_bits)))))
+                for nm, _ in info)
+            return CompressionPlan(rules=rules, leaves=tuple(info))
+        import heapq
+
+        bits = [min_bits] * len(info)
+        spend = budget_bits_per_round - floor_cost
+        heap = [(-(s[i] ** 2 * 4.0 ** -bits[i]), i)
+                for i in range(len(info)) if s[i] > 0.0]
+        heapq.heapify(heap)
+        while heap:
+            _, i = heapq.heappop(heap)
+            n_i = info[i][1]
+            if bits[i] >= max_bits or n_i > spend:
+                continue  # this leaf is done; cheaper leaves may still fit
+            bits[i] += 1
+            spend -= n_i
+            heapq.heappush(heap, (-(s[i] ** 2 * 4.0 ** -bits[i]), i))
+        rules = tuple((nm, mk_wrap(StochasticQuant(bits[i])))
+                      for i, (nm, _) in enumerate(info))
+        return CompressionPlan(rules=rules, leaves=tuple(info))
+
+    def tightened(self, *, bits_step: int = 1, k_scale: float = 0.5,
+                  min_bits: int = 2, min_k: float = 1.0 / 64.0
+                  ) -> "CompressionPlan":
+        """One adaptive-schedule step: every quantizer drops ``bits_step``
+        bits (floor ``min_bits``) and every sparsifier scales its
+        ``k_frac`` by ``k_scale`` (floor ``min_k``) — spend less wire as
+        residuals shrink. Wrapper structure (and therefore the carried
+        memory's shape) is preserved, so the tightened plan swaps into a
+        live run without touching ``EngineState``."""
+        def t(c):
+            if c is None:
+                return None
+            if isinstance(c, (ErrorFeedback, Shifted)):
+                return dataclasses.replace(c, inner=t(c.inner))
+            if isinstance(c, Chain):
+                return Chain(tuple(t(stg) for stg in c.stages))
+            if isinstance(c, StochasticQuant):
+                return dataclasses.replace(
+                    c, bits=max(min_bits, c.bits - bits_step))
+            if isinstance(c, (TopK, RandK)):
+                return dataclasses.replace(
+                    c, k_frac=max(min_k, c.k_frac * k_scale))
+            return c
+
+        return dataclasses.replace(
+            self, rules=tuple((p, t(c)) for p, c in self.rules),
+            default=t(self.default))
+
+
+@dataclasses.dataclass
+class AdaptivePlan:
+    """Telemetry-driven plan schedule: call ``update(compress_err)`` with
+    the per-round compression residual; each time the residual has shrunk
+    by ``factor`` since the last tightening, the plan tightens one step
+    (``CompressionPlan.tightened``) and the NEW plan is returned (else
+    None). The caller re-attaches it via ``with_compression`` and rebuilds
+    its round runner — extras shapes are preserved, so the live
+    ``EngineState`` carries over unchanged."""
+
+    plan: CompressionPlan
+    factor: float = 10.0
+    min_bits: int = 2
+    ref_err: float | None = None
+
+    def update(self, compress_err: float) -> CompressionPlan | None:
+        err = float(compress_err)
+        if not math.isfinite(err) or err <= 0.0:
+            return None
+        if self.ref_err is None:
+            self.ref_err = err
+            return None
+        if err * self.factor <= self.ref_err:
+            self.plan = self.plan.tightened(min_bits=self.min_bits)
+            self.ref_err = err
+            return self.plan
+        return None
+
+
+def parse_plan(spec, *, error_feedback: bool | None = None
+               ) -> CompressionPlan | None:
+    """Parse the launch-config plan grammar: comma-separated
+    ``pattern:compressor-spec`` rules, first-match-wins, e.g.
+    ``"embed*:q12,ln*:bf16,*:shift:q6"``. The pattern is everything before
+    the FIRST colon (a glob over slash-joined leaf paths, or an all-digit
+    leaf index); the rest is a full ``from_spec`` compressor spec
+    (``shift:``/``ef:`` prefixes and ``+`` chains included).
+    ``pattern:none`` pins matched leaves to dense passthrough. Each rule's
+    compressor goes through the same :func:`auto_wrap` error-feedback
+    policy as the uniform path, which is what keeps an all-one-spec plan
+    bitwise-equal to uniform ``with_compression``."""
+    if spec is None or isinstance(spec, CompressionPlan):
+        return spec
+    if not isinstance(spec, str):
+        raise TypeError(f"not a compression plan: {spec!r}")
+    s = spec.strip()
+    if s.lower() in ("", "none", "off"):
+        return None
+    rules = []
+    for part in s.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        pat, sep, cspec = part.partition(":")
+        pat = pat.strip()
+        if not sep or not pat or not cspec.strip():
+            raise ValueError(
+                f"bad plan rule {part!r} (want 'pattern:spec', e.g. "
+                "'embed*:q12' or '*:shift:q8'); full grammar: "
+                "'embed*:q12,ln*:bf16,*:shift:q6'")
+        rules.append((pat, auto_wrap(from_spec(cspec.strip()),
+                                     error_feedback)))
+    return CompressionPlan(rules=tuple(rules))
 
 
 # ------------------------------------------------------------------ parsing

@@ -587,7 +587,9 @@ class RoundEngine:
             idx += keep * t.index_bits
             vb = t.value_bits
             if vb is not None:
-                value = vb
+                # first-narrowest-wins, mirroring Chain.value_bits: a later
+                # wider stage cannot put information back on the wire.
+                value = min(value, vb)
         return keep * value + idx
 
     @property
@@ -597,6 +599,34 @@ class RoundEngine:
         Specs with internal compression (FedLin's round-start top-k)
         override this alongside ``up_frac``."""
         return self._transforms_bits(32.0)
+
+    def message_leaf_bits(self, leaf_info):
+        """EXACT per-leaf uplink wire bits for one client's one UP vector,
+        given the message leaf decomposition ``[(name, n_coords), ...]``
+        (see repro/core/comm.py:leaf_info_of) — the actual-kept-count,
+        per-leaf-plan-aware refinement of ``n * bits_per_coord``.
+
+        Returns ``None`` when per-leaf accounting does not apply: a spec
+        that overrides ``bits_per_coord`` bills internal compression the
+        engine cannot decompose (FedLin), and an unknown transform without
+        a compressor has no stage algebra to walk. Never inspects the
+        arena: the decomposition comes from the unpacked params either
+        way, which is what makes arena and per-leaf lowerings bill
+        identically (pinned in benchmarks/comm_table.py)."""
+        if type(self).bits_per_coord is not RoundEngine.bits_per_coord:
+            return None
+        stack = []
+        for t in self.transforms:
+            comp = getattr(t, "compressor", None)
+            if comp is None and hasattr(t, "_compressor"):
+                comp = t._compressor()
+            if comp is None:
+                return None
+            stack.append(comp)
+        from repro.core.compressors import stack_wire_bits
+
+        return [stack_wire_bits(stack, i, nm, int(n))
+                for i, (nm, n) in enumerate(leaf_info)]
 
     @property
     def down_frac(self) -> float:
@@ -1193,14 +1223,18 @@ def with_compression(algo: RoundEngine, *, k_frac: float = 1.0,
                 "kwargs, not both (the legacy pair would be silently "
                 f"ignored): compressor={compressor!r}, k_frac={k_frac}, "
                 f"quantize={quantize}")
-        from repro.core.compressors import auto_wrap, from_spec
+        from repro.core.compressors import (CompressionPlan, auto_wrap,
+                                            from_spec)
 
         comp = from_spec(compressor)
         if comp is None:  # the "none" spec — exact no-op, like k_frac=1.0
             return algo
         # auto mode: EF around biased STATELESS compressors only — wrapping
-        # a Shifted/ErrorFeedback would clobber its extra slot.
-        comp = auto_wrap(comp, error_feedback)
+        # a Shifted/ErrorFeedback would clobber its extra slot. Plans own
+        # their per-RULE error-feedback policy (parse_plan applies the same
+        # auto_wrap rule-wise), so the whole-tree wrap must not double up.
+        if not isinstance(comp, CompressionPlan):
+            comp = auto_wrap(comp, error_feedback)
         t = MessageCompression(comp, seed=seed, index=len(algo.transforms))
         return dataclasses.replace(algo, transforms=algo.transforms + (t,))
     if k_frac >= 1.0 and not quantize:

@@ -760,9 +760,14 @@ def _git_commit() -> str | None:
 
 
 def run_manifest(algo, *, n_params: int | None = None, config: dict | None = None,
-                 monitors: tuple = (), extra: dict | None = None) -> dict:
+                 monitors: tuple = (), extra: dict | None = None,
+                 leaf_info=None) -> dict:
     """The run's first event: what ran, where, and what one round costs on
-    the wire (the ``comm_hops_per_round`` per-hop contract + totals)."""
+    the wire (the ``comm_hops_per_round`` per-hop contract + totals).
+    ``leaf_info`` (``repro.core.comm.leaf_info_of``) upgrades billing to
+    exact per-leaf wire bits and records the per-leaf budget breakdown
+    (``leaf_names`` / ``leaf_bits``) for report.py's budget-vs-leaf
+    view."""
     tel = getattr(algo, "telemetry", None)
     ev = {
         "event": "manifest", "schema": 1,
@@ -778,11 +783,20 @@ def run_manifest(algo, *, n_params: int | None = None, config: dict | None = Non
         "config": dict(config or {}),
     }
     if n_params:
-        from repro.core.comm import comm_bits_per_round, comm_hops_per_round
+        from repro.core.comm import (comm_bits_per_round,
+                                     comm_hops_per_round,
+                                     message_leaf_bits_of)
 
         nc = getattr(algo, "n_clients", 1)
-        ev["bits_per_round"] = comm_bits_per_round(algo, n_params, nc)
-        ev["hops"] = comm_hops_per_round(algo, n_params, nc)
+        ev["bits_per_round"] = comm_bits_per_round(algo, n_params, nc,
+                                                   leaf_info)
+        ev["hops"] = comm_hops_per_round(algo, n_params, nc, leaf_info)
+        if leaf_info is not None:
+            lb = message_leaf_bits_of(algo, leaf_info)
+            if lb is not None:
+                ev["leaf_names"] = [nm for nm, _ in leaf_info]
+                ev["leaf_sizes"] = [int(n) for _, n in leaf_info]
+                ev["leaf_bits"] = [float(b) for b in lb]
     if extra:
         ev.update(extra)
     return ev
@@ -790,7 +804,8 @@ def run_manifest(algo, *, n_params: int | None = None, config: dict | None = Non
 
 def drain(series: dict | None, *, sinks=(), monitors=(), start_round: int = 0,
           static: dict | None = None, algo=None,
-          n_params: int | None = None, leaf_names=None) -> list:
+          n_params: int | None = None, leaf_names=None,
+          leaf_bits=None) -> list:
     """Device-get the stacked per-round telemetry pytree ONCE and emit one
     ``round`` event per round into the sinks, evaluating ``monitors``
     against each (violations emit a structured WARN event right after
@@ -800,8 +815,9 @@ def drain(series: dict | None, *, sinks=(), monitors=(), start_round: int = 0,
 
     Vector-valued series (the distribution sketches) land in the round
     event as JSON lists; ``leaf_*`` series split off into a per-round
-    ``leaf_stats`` event (``leaf_names`` labels its entries on the first
-    round of the segment). Observer monitors (:class:`RateMonitor` —
+    ``leaf_stats`` event (``leaf_names`` labels its entries — and
+    ``leaf_bits``, the exact per-leaf wire bits from the comm accounting,
+    rides along as ``bits`` — on the first round of the segment). Observer monitors (:class:`RateMonitor` —
     anything with ``.observe``) see and annotate each round event BEFORE
     it is emitted, so ``rho_hat`` rides the stream; threshold
     :class:`Monitor` checks skip vector values."""
@@ -835,6 +851,8 @@ def drain(series: dict | None, *, sinks=(), monitors=(), start_round: int = 0,
             lev = {"event": "leaf_stats", "round": ev["round"]}
             if leaf_names is not None and i == 0:
                 lev["names"] = list(leaf_names)
+            if leaf_bits is not None and i == 0:
+                lev["bits"] = [float(b) for b in leaf_bits]
             for k in leaf_keys:
                 lev[k[len("leaf_"):]] = _jsonable(host[k][i])
             events.append(lev)

@@ -203,7 +203,8 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
                  n_clients: int = 4, batch: int = 8, seq_len: int = 128,
                  alpha: float = 3e-3, c: float = 0.05, heterogeneity: float = 0.8,
                  reduced: bool = True, seed: int = 0,
-                 compression: str = "none", participation: float = 1.0,
+                 compression: str = "none", compression_plan="none",
+                 plan_adapt: float = 0.0, participation: float = 1.0,
                  delay: str = "none", stale_policy: str = "last",
                  topology: str = "star", tier_compression: str = "none",
                  cohort: int | str | None = "none", arena: bool = False,
@@ -215,7 +216,14 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
     history. Used by examples/fed_train_lm.py.
 
     ``compression`` (a compressor spec — ``"randk:0.25"``, ``"shift:q8"``,
-    ``"ef:topk:0.3+bf16"``, ...), ``participation``, ``delay`` /
+    ``"ef:topk:0.3+bf16"``, ...) or ``compression_plan`` (the PER-LEAF
+    alternative: first-match-wins ``pattern:spec`` rules over leaf paths,
+    ``"embed*:q12,ln*:bf16,*:shift:q6"``, or a ready
+    ``CompressionPlan`` — e.g. from ``plan.allocate`` — billed exactly
+    per leaf; ``plan_adapt > 1`` additionally tightens the plan one step
+    each time the telemetry ``compress_err`` residual shrinks by that
+    factor, re-jitting at the segment boundary with the carried state —
+    requires ``telemetry``), ``participation``, ``delay`` /
     ``stale_policy`` (asynchronous rounds — ``"fixed:2"``, ``"rr:1"``,
     ``"geom:0.5"`` with ``drop``/``last``/``poly:a`` aggregation),
     ``topology`` (aggregation geometry — ``"hier:g8"`` edge-aggregator
@@ -256,7 +264,7 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
     active_clients) print for every ``log_every``-th round."""
     from repro.checkpoint.ckpt import save
     from repro.core import telemetry as tele
-    from repro.core.comm import CommMeter, comm_bits_per_round
+    from repro.core.comm import CommMeter, comm_bits_per_round, leaf_info_of
     from repro.data.synthetic import make_hetero_lm_dataset
 
     cfg = get_config(arch)
@@ -265,6 +273,7 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
     model = build_model(cfg)
     params = model.init(jax.random.key(seed))
     scenario = FedScenario(compression=compression,
+                           compression_plan=compression_plan,
                            participation=participation, delay=delay,
                            stale_policy=stale_policy, topology=topology,
                            tier_compression=tier_compression, cohort=cohort,
@@ -301,10 +310,13 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
     # passing the algo gives the monitor set a RateMonitor that names the
     # attached lossy axes when the measured linear rate breaks.
     monitors = tele.resolve_monitors(tel_spec, algo)
+    leaf_info = leaf_info_of(params)
     leaf_names = None
     if tel_spec is not None and tel_spec.leaf_stats:
-        leaf_names = [jax.tree_util.keystr(p) for p, _ in
-                      jax.tree_util.tree_flatten_with_path(params)[0]]
+        # the canonical slash-joined names — the same vocabulary plan
+        # globs match and per-leaf billing reports, so report.py can join
+        # leaf_stats rows against the manifest's leaf_bits budget.
+        leaf_names = [nm for nm, _ in leaf_info]
     trace = tele.TraceSession(tele.parse_trace_rounds(trace_rounds),
                               out_dir=trace_dir)
     trace_stops = set(trace.boundaries())
@@ -314,7 +326,30 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
                 or (ckpt_dir is not None and (r + 1) % 50 == 0))
 
     meter = CommMeter.for_params(params, algo=algo, n_clients=n_clients)
-    per_round_bits = comm_bits_per_round(algo, meter.n_params, n_clients)
+    per_round_bits = comm_bits_per_round(algo, meter.n_params, n_clients,
+                                         leaf_info)
+    adaptive = None
+    if plan_adapt and plan_adapt > 1.0:
+        from repro.core.compressors import AdaptivePlan, CompressionPlan
+
+        plans = [t.compressor for t in algo.transforms
+                 if isinstance(getattr(t, "compressor", None),
+                               CompressionPlan)]
+        if not plans:
+            raise ValueError("plan_adapt needs a compression_plan attached")
+        if telemetry is None:
+            raise ValueError("plan_adapt reads the telemetry compress_err "
+                             "residual; pass --telemetry")
+        adaptive = AdaptivePlan(plan=plans[-1], factor=float(plan_adapt))
+
+    def _swap_plan(a, plan):
+        from repro.core.compressors import CompressionPlan
+
+        ts = tuple(dataclasses.replace(t, compressor=plan)
+                   if isinstance(getattr(t, "compressor", None),
+                                 CompressionPlan) else t
+                   for t in a.transforms)
+        return dataclasses.replace(a, transforms=ts)
     # fallback when telemetry is off: the expected participant count (with
     # telemetry on, the line reports the exact in-trace count).
     expected_active = int(round(n_clients * min(participation, 1.0)))
@@ -324,11 +359,13 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
             config={"arch": arch, "steps": steps, "tau": tau,
                     "n_clients": n_clients, "batch": batch,
                     "seq_len": seq_len, "compression": compression,
+                    "compression_plan": str(compression_plan),
+                    "plan_adapt": plan_adapt,
                     "participation": participation, "delay": delay,
                     "stale_policy": stale_policy, "topology": topology,
                     "tier_compression": tier_compression,
                     "cohort": str(cohort), "arena": arena, "seed": seed},
-            monitors=monitors))
+            monitors=monitors, leaf_info=leaf_info))
     history = {"round": [], "loss": [], "comm_bytes": []}
     for r, stop in scan_segments(0, steps, is_stop):
         ev = trace.maybe_start(r)
@@ -346,9 +383,35 @@ def run_training(arch: str, *, steps: int = 100, tau: int = 2,
             # estimator / report can read the LM convergence curve.
             tele.drain({**tel_series, "loss": losses}, sinks=sinks,
                        monitors=monitors, start_round=r, algo=algo,
-                       n_params=meter.n_params, leaf_names=leaf_names)
+                       n_params=meter.n_params, leaf_names=leaf_names,
+                       leaf_bits=meter.leaf_bits)
         for _ in range(r, stop + 1):
             meter.tick_round(algo)
+        if adaptive is not None and tel_series is not None \
+                and "compress_err" in tel_series:
+            new_plan = adaptive.update(
+                float(jax.device_get(tel_series["compress_err"])[-1]))
+            if new_plan is not None:
+                # segment boundary: swap the tightened plan into the
+                # attached transform and re-jit. Wrapper structure (and so
+                # the extras pytree) is preserved, so the donated state
+                # carries straight into the new runner.
+                algo = _swap_plan(algo, new_plan)
+                runner = make_round_runner(algo, grad_fn,
+                                           metric_fn=round_loss,
+                                           metric_with_batch=True,
+                                           donate=True)
+                meter = dataclasses.replace(
+                    CommMeter.for_params(params, algo=algo,
+                                         n_clients=n_clients),
+                    rounds=meter.rounds, bytes_up=meter.bytes_up,
+                    bytes_down=meter.bytes_down)
+                per_round_bits = comm_bits_per_round(
+                    algo, meter.n_params, n_clients, leaf_info)
+                if sinks:
+                    tele.emit_event(sinks, {
+                        "event": "plan_adapt", "round": stop,
+                        "bits_per_round": per_round_bits["up_bits"]})
         losses = jax.device_get(losses)
         active = None if tel_series is None else tel_series.get("participating")
         for i, rr in enumerate(range(r, stop + 1)):
@@ -387,6 +450,19 @@ def main(argv=None):
     ap.add_argument("--compression", default="none",
                     help="uplink compressor spec: none | bf16 | topk:0.3 | "
                          "randk:0.25 | q8 | shift:q8 | randk:0.5+q8 | ef:...")
+    ap.add_argument("--compression-plan", default="none",
+                    help="PER-LEAF uplink compression plan: comma-separated"
+                         " first-match-wins pattern:spec rules over leaf "
+                         "paths (glob or flatten-order leaf index), e.g. "
+                         "'embed*:q12,ln*:bf16,*:shift:q6'; mutually "
+                         "exclusive with --compression; billed exactly per "
+                         "leaf (actual kept counts)")
+    ap.add_argument("--plan-adapt", type=float, default=0.0,
+                    help="adaptive plan schedule: tighten the plan one "
+                         "step (quantizers -1 bit, sparsifiers k/2) each "
+                         "time the telemetry compress_err residual shrinks"
+                         " by this factor (> 1 enables; needs "
+                         "--compression-plan and --telemetry)")
     ap.add_argument("--participation", type=float, default=1.0,
                     help="per-round Bernoulli client participation rate")
     ap.add_argument("--delay", default="none",
@@ -433,7 +509,9 @@ def main(argv=None):
         args.arch, steps=args.steps, tau=args.tau, n_clients=args.clients,
         batch=args.batch, seq_len=args.seq_len, alpha=args.alpha,
         reduced=not args.full, ckpt_dir=args.ckpt_dir,
-        compression=args.compression, participation=args.participation,
+        compression=args.compression,
+        compression_plan=args.compression_plan, plan_adapt=args.plan_adapt,
+        participation=args.participation,
         delay=args.delay, stale_policy=args.stale_policy,
         topology=args.topology, tier_compression=args.tier_compression,
         cohort=args.cohort, arena=args.arena,

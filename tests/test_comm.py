@@ -115,6 +115,39 @@ def test_cohort_bits_per_round_scale():
     assert coh["down_bits"] == 0.25 * dense["down_bits"]
 
 
+# ------------------------------------------- per-leaf wire-bit accounting
+def test_meter_bills_actual_kept_counts_per_leaf():
+    """Regression (wire-bit rounding drift): billing uses each leaf's
+    ACTUAL kept count ``max(1, round(k_frac * n))`` — not the smooth
+    ``k_frac * n`` — so a tiny leaf that keeps its floor coordinate is
+    billed for it, and declared bits match what the compressor actually
+    transmits to <= 1 coordinate per leaf."""
+    from repro.core import with_compression
+    from repro.core.comm import leaf_info_of, message_leaf_bits_of
+    from repro.core.fedcet import FedCET as _FedCET
+
+    params = {"a": jnp.zeros((3,)), "b": jnp.zeros((10,)),
+              "c": jnp.zeros((100,))}
+    algo = with_compression(_FedCET(alpha=0.01, c=0.4, tau=2, n_clients=4),
+                            compressor="topk:0.3")
+    info = leaf_info_of(params)
+    lb = message_leaf_bits_of(algo, info)
+    # actual kept coords: a: max(1, round(0.9)) = 1, b: 3, c: 30 — each at
+    # 64 bits (f32 value + int32 index). The smooth rate would bill
+    # 0.3 * 3 * 64 = 57.6 bits for 'a' and under-count the floor keep.
+    assert lb == [1 * 64.0, 3 * 64.0, 30 * 64.0]
+    m = CommMeter.for_params(params, algo=algo, n_clients=4)
+    assert m.leaf_bits == tuple(lb)
+    assert m.bits_up == pytest.approx(sum(lb) / 113)
+    # declared vs actual: compress each leaf, count the survivors
+    comp = algo.transforms[0].compressor.inner  # strip the auto-EF wrapper
+    for i, (nm, n) in enumerate(info):
+        leaf = jax.random.normal(jax.random.fold_in(jax.random.key(0), i),
+                                 (1, n))
+        actual = int(jnp.sum(comp.compress(None, leaf) != 0))
+        assert abs(lb[i] / 64.0 - actual) <= 1, (nm, lb[i], actual)
+
+
 def test_cohort_meter_bills_only_cohort():
     from repro.core import with_cohort
 

@@ -1,0 +1,327 @@
+"""Per-leaf compression plans (repro/core/compressors.py CompressionPlan).
+
+The load-bearing contract: a plan mapping EVERY leaf to one spec is
+BITWISE-identical to uniform ``with_compression`` with that spec — same
+per-leaf key schedule (``fold_in(key, i)``), same wrapper math run
+leaf-wise, same extras shapes (so checkpoints interchange between the
+two). Pinned bare and under the composed scenario stack (shift:q8 x 0.8
+participation x block cohort x arena), for FedCET and FedAvg.
+
+Plus: the ``parse_plan`` grammar (including its error paths), first-
+match-wins / digit-index resolution, the greedy bit-budget allocator's
+invariants (budget respected, monotone in sensitivity, below-floor
+rand-k fallback), and the telemetry-driven ``AdaptivePlan`` schedule.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CohortSpec,
+    FedAvg,
+    run_rounds,
+    with_arena,
+    with_cohort,
+    with_compression,
+    with_participation,
+)
+from repro.core.compressors import (
+    AdaptivePlan,
+    Bf16,
+    Chain,
+    CompressionPlan,
+    ErrorFeedback,
+    RandK,
+    Shifted,
+    StochasticQuant,
+    TopK,
+    parse_plan,
+)
+from repro.core.fedcet import FedCET
+from repro.data.quadratic import make_hetero_hessian_problem
+
+N, M, TAU, ROUNDS = 24, 7, 2, 4
+
+PROB = make_hetero_hessian_problem(0, n_clients=N, dim=12, n_measurements=4)
+SPLIT = 5  # params live as a 2-leaf dict so per-leaf rules mean something
+
+
+def _loss(params, batch):
+    return PROB.client_loss(
+        jnp.concatenate([params["head"], params["tail"]]), batch)
+
+
+GRAD = jax.grad(_loss)
+BATCHES = PROB.stacked_batches(TAU)
+FIRST = jax.tree.map(lambda b: b[0], BATCHES)
+PARAMS0 = {"head": jnp.zeros((SPLIT,), PROB.b.dtype),
+           "tail": jnp.zeros((PROB.dim - SPLIT,), PROB.b.dtype)}
+
+
+def _algos():
+    return {
+        "fedcet": FedCET(alpha=0.02, c=0.3, tau=TAU, n_clients=N),
+        "fedavg": FedAvg(alpha=0.05, tau=TAU, n_clients=N),
+    }
+
+
+def _composed(algo, compressor):
+    """The composed scenario stack around either compressor flavor."""
+    algo = with_participation(algo, 0.8, seed=3)
+    algo = with_compression(algo, compressor=compressor, seed=5)
+    return with_cohort(algo, CohortSpec(size=M, selector="block"), seed=7)
+
+
+def _run(algo, rounds=ROUNDS, state=None):
+    if state is None:
+        state = algo.init(GRAD, PARAMS0, FIRST)
+    final, _ = run_rounds(algo, GRAD, state, BATCHES, rounds=rounds)
+    return final
+
+
+def _assert_bitwise(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------ parse grammar
+def test_parse_plan_grammar():
+    p = parse_plan("embed*:q12,ln*:bf16,*:shift:q6")
+    assert isinstance(p, CompressionPlan) and len(p.rules) == 3
+    pat0, c0 = p.rules[0]
+    assert pat0 == "embed*" and c0 == StochasticQuant(12)  # unbiased: bare
+    pat1, c1 = p.rules[1]
+    assert pat1 == "ln*" and isinstance(c1, ErrorFeedback)  # biased: auto-EF
+    assert isinstance(c1.inner, Bf16)
+    pat2, c2 = p.rules[2]
+    assert pat2 == "*" and isinstance(c2, Shifted)
+    assert c2.inner == StochasticQuant(6)
+
+
+def test_parse_plan_none_and_passthrough():
+    for spec in (None, "", "none", "off", "  NONE  "):
+        assert parse_plan(spec) is None
+    p = CompressionPlan(rules=(("*", StochasticQuant(8)),))
+    assert parse_plan(p) is p
+    # 'pattern:none' pins dense passthrough for matched leaves
+    q = parse_plan("ln*:none,*:q8")
+    assert q.rules[0] == ("ln*", None)
+    # error_feedback=False turns the auto-EF policy off per rule
+    bare = parse_plan("*:topk:0.3", error_feedback=False)
+    assert bare.rules[0][1] == TopK(0.3)
+
+
+def test_parse_plan_rejects_bad_rules():
+    with pytest.raises(ValueError, match="bad plan rule"):
+        parse_plan("justapattern")
+    with pytest.raises(ValueError, match="bad plan rule"):
+        parse_plan("embed*:")
+    with pytest.raises(ValueError):
+        parse_plan("*:bogus")
+    with pytest.raises(TypeError, match="not a compression plan"):
+        parse_plan(123)
+
+
+# --------------------------------------------------------------- resolution
+def test_resolution_first_match_wins_and_digit_index():
+    plan = CompressionPlan(rules=(("0", TopK(0.5)),
+                                  ("w*", StochasticQuant(8)),
+                                  ("*", StochasticQuant(4))),
+                           default=Bf16())
+    # digit rule names the flatten-order leaf index, whatever its path
+    assert plan.resolve(0, "zzz") == TopK(0.5)
+    # first-match-wins: 'w*' shadows the '*' catch-all
+    assert plan.resolve(1, "weight") == StochasticQuant(8)
+    # glob also matches any single path component
+    assert plan.resolve(2, "layers/0/wq") == StochasticQuant(8)
+    assert plan.resolve(3, "bias") == StochasticQuant(4)
+    # no catch-all: unmatched leaves fall to default
+    short = CompressionPlan(rules=(("w*", StochasticQuant(8)),),
+                            default=Bf16())
+    assert isinstance(short.resolve(0, "bias"), Bf16)
+    assert CompressionPlan(rules=(("w*", TopK(0.5)),)).resolve(0, "b") is None
+
+
+def test_plans_cannot_nest_and_default_must_be_stateless():
+    inner = CompressionPlan(rules=(("*", StochasticQuant(8)),))
+    with pytest.raises(ValueError, match="nest"):
+        CompressionPlan(rules=(("*", inner),))
+    with pytest.raises(ValueError, match="default"):
+        CompressionPlan(default=Shifted(StochasticQuant(8)))
+
+
+# --------------------------------------- bitwise equivalence vs uniform path
+@pytest.mark.parametrize("name", list(_algos()))
+@pytest.mark.parametrize("spec", ["shift:q8", "q8", "topk:0.3",
+                                  "randk:0.5+q8", "ef:topk:0.3+bf16"])
+def test_uniform_plan_bitwise_equiv_bare(name, spec):
+    """A '*:<spec>' plan IS uniform with_compression(<spec>): identical
+    key schedule, identical wrapper math, identical extras — bitwise."""
+    uni = with_compression(_algos()[name], compressor=spec, seed=5)
+    pln = with_compression(_algos()[name], compressor=parse_plan(f"*:{spec}"),
+                           seed=5)
+    _assert_bitwise(_run(pln), _run(uni))
+
+
+@pytest.mark.parametrize("name", list(_algos()))
+def test_uniform_plan_bitwise_equiv_composed(name):
+    """Same, under the full composed stack (participation x cohort), per-
+    leaf AND arena-packed lowering."""
+    uni = _composed(_algos()[name], "shift:q8")
+    pln = _composed(_algos()[name], parse_plan("*:shift:q8"))
+    _assert_bitwise(_run(pln), _run(uni))
+    _assert_bitwise(_run(with_arena(pln)), _run(with_arena(uni)))
+
+
+def test_checkpoint_interchange_plan_uniform(tmp_path):
+    """Stateful extras are message-shaped zero trees on BOTH paths, so a
+    mid-run checkpoint written by the uniform stack restores into the
+    plan stack (and vice versa) and continues bitwise-identically."""
+    from repro.checkpoint.ckpt import load_pytree, save_pytree
+
+    uni = with_compression(_algos()["fedcet"], compressor="shift:q8", seed=5)
+    pln = with_compression(_algos()["fedcet"],
+                           compressor=parse_plan("*:shift:q8"), seed=5)
+    mid_u = _run(uni, rounds=2)
+    path = str(tmp_path / "mid.npz")
+    save_pytree(path, mid_u)
+    mid_p = load_pytree(path, _run(pln, rounds=2))  # plan-run structure
+    _assert_bitwise(mid_p, mid_u)
+    _assert_bitwise(_run(pln, state=mid_p, rounds=2),
+                    _run(uni, state=mid_u, rounds=2))
+
+
+def test_mixed_plan_runs_and_bills_per_leaf():
+    """A genuinely per-leaf plan (different specs per leaf) runs through
+    the engine and bills each leaf at its own wire width."""
+    from repro.core.comm import CommMeter, leaf_info_of
+
+    plan = parse_plan("head:shift:q4,*:shift:q8")
+    algo = with_compression(_algos()["fedcet"], compressor=plan, seed=5)
+    final = _run(algo)
+    assert all(bool(jnp.all(jnp.isfinite(l)))
+               for l in jax.tree.leaves(final))
+    info = leaf_info_of(PARAMS0)
+    assert [plan.leaf_wire_bits(i, nm, n) for i, (nm, n) in enumerate(info)] \
+        == [SPLIT * 4.0, (PROB.dim - SPLIT) * 8.0]
+    meter = CommMeter.for_params(PARAMS0, algo=algo, n_clients=N)
+    assert meter.leaf_bits == (SPLIT * 4.0, (PROB.dim - SPLIT) * 8.0)
+    assert meter.bits_up == pytest.approx(
+        (SPLIT * 4.0 + (PROB.dim - SPLIT) * 8.0) / PROB.dim)
+
+
+def test_scenario_knob_and_conflict():
+    from repro.configs.base import FedScenario
+
+    sc = FedScenario(compression_plan="head:q4,*:shift:q8")
+    algo = sc.apply(_algos()["fedcet"])
+    assert all(bool(jnp.all(jnp.isfinite(l)))
+               for l in jax.tree.leaves(_run(algo)))
+    with pytest.raises(ValueError, match="not both"):
+        FedScenario(compression="q8",
+                    compression_plan="*:q4").apply(_algos()["fedcet"])
+
+
+# ---------------------------------------------------------------- allocator
+def _toy_params(key):
+    ks = jax.random.split(key, 3)
+    return {"big": jax.random.normal(ks[0], (4096,)) * 0.02,
+            "hot": jax.random.normal(ks[1], (256,)) * 2.0,
+            "cold": jax.random.normal(ks[2], (256,)) * 0.001}
+
+
+def test_allocator_respects_budget_and_weights_sensitivity():
+    from repro.core.comm import leaf_info_of
+
+    params = _toy_params(jax.random.key(0))
+    info = leaf_info_of(params)
+    n_total = sum(n for _, n in info)
+    budget = 3.0 * n_total
+    plan = CompressionPlan().allocate(budget, leaves=params,
+                                      sensitivity="rms", wrap="shift",
+                                      max_bits=16)
+    bits = {nm: plan.leaf_wire_bits(i, nm, n) / n
+            for i, (nm, n) in enumerate(info)}
+    assert sum(plan.tree_wire_bits(info)) <= budget + 1e-9
+    # monotone in sensitivity at EQUAL leaf size: hot/cold are both 256
+    # coords, 2000x apart in RMS — hot must get the strictly wider grid.
+    # (Across different sizes the water-fill trades value-per-BIT, so a
+    # big low-sensitivity leaf can legitimately sit below a small one.)
+    assert bits["hot"] > bits["cold"]
+    assert bits["hot"] > bits["big"]
+    # bound plan: the scalar rate is exact and within budget
+    assert plan.leaves == tuple(info)
+    assert plan.bits_per_coord <= 3.0 + 1e-12
+    # absmax weighting orders the same way on this geometry
+    pa = CompressionPlan().allocate(budget, leaves=params,
+                                    sensitivity="absmax", wrap="shift",
+                                    max_bits=16)
+    ba = {nm: pa.leaf_wire_bits(i, nm, n) / n
+          for i, (nm, n) in enumerate(info)}
+    assert ba["hot"] > ba["cold"]
+
+
+def test_allocator_below_floor_falls_back_to_randk():
+    params = _toy_params(jax.random.key(1))
+    from repro.core.comm import leaf_info_of
+
+    info = leaf_info_of(params)
+    n_total = sum(n for _, n in info)
+    plan = CompressionPlan().allocate(0.5 * n_total, leaves=params,
+                                      sensitivity=None, wrap=None)
+    # one rule per leaf, all the same shared-k_frac rand-k + min_bits quant
+    assert len(plan.rules) == len(info)
+    ks = set()
+    for (pat, comp), (nm, _) in zip(plan.rules, info):
+        assert pat == nm and isinstance(comp, Chain)
+        assert isinstance(comp.stages[0], RandK)
+        assert isinstance(comp.stages[1], StochasticQuant)
+        ks.add(comp.stages[0].k_frac)
+    assert len(ks) == 1  # the k_frac is shared, not per-leaf
+    assert sum(plan.tree_wire_bits(info)) <= 0.5 * n_total * 1.001
+
+
+def test_allocator_validates_inputs():
+    params = _toy_params(jax.random.key(2))
+    with pytest.raises(ValueError, match="sensitivity"):
+        CompressionPlan().allocate(1e4, leaves=params, sensitivity="bogus")
+    with pytest.raises(ValueError, match="entries"):
+        CompressionPlan().allocate(1e4, leaves=params,
+                                   sensitivity=[1.0, 2.0])
+    with pytest.raises(ValueError, match="rms"):
+        CompressionPlan().allocate(1e4, leaves=[("a", 100)],
+                                   sensitivity="rms")
+
+
+# ------------------------------------------------------------ adaptive plan
+def test_tightened_preserves_wrappers_and_floors():
+    plan = CompressionPlan(rules=(
+        ("a", Shifted(StochasticQuant(8))),
+        ("b", ErrorFeedback(TopK(0.5))),
+        ("c", Chain((RandK(0.5), StochasticQuant(2))))))
+    t = plan.tightened()
+    a, b, c = (c for _, c in t.rules)
+    assert isinstance(a, Shifted) and a.inner == StochasticQuant(7)
+    assert isinstance(b, ErrorFeedback) and b.inner == TopK(0.25)
+    assert c.stages[0] == RandK(0.25)
+    assert c.stages[1] == StochasticQuant(2)  # already at the floor
+    # extras shapes preserved: still stateful with the same leaf layout
+    assert t.stateful == plan.stateful
+
+
+def test_adaptive_plan_tightens_on_residual_shrink():
+    plan = CompressionPlan(rules=(("*", Shifted(StochasticQuant(8))),))
+    sched = AdaptivePlan(plan=plan, factor=10.0)
+    assert sched.update(1.0) is None        # first call sets the reference
+    assert sched.update(0.5) is None        # only 2x down: no tighten
+    new = sched.update(0.05)                # 20x down: tighten one step
+    assert new is not None
+    assert new.rules[0][1].inner == StochasticQuant(7)
+    assert sched.update(float("nan")) is None
+    assert sched.update(0.0) is None

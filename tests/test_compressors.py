@@ -134,6 +134,56 @@ def test_bits_per_coord_accounting():
     assert Identity().bits_per_coord == 32.0 and Identity().up_frac == 1.0
 
 
+def test_chain_value_bits_first_narrowest_wins():
+    """Regression: the old scan billed the LAST quantizer's width, so
+    ``q8 + bf16`` (8-bit payloads re-encoded into a 16-bit container)
+    over-billed 2x. Once a stage narrows the payload to b bits, a later
+    wider stage cannot put information back on the wire."""
+    assert Chain((StochasticQuant(8), Bf16())).value_bits == 8
+    assert Chain((Bf16(), StochasticQuant(8))).value_bits == 8
+    assert Chain((StochasticQuant(8), Bf16())).bits_per_coord == 8.0
+    assert Chain((TopK(0.5), StochasticQuant(4), Bf16())).bits_per_coord \
+        == pytest.approx(0.5 * (4 + 32))
+    # wrappers and wire_bits agree with the narrowed width
+    assert Shifted(Chain((StochasticQuant(6), Bf16()))).bits_per_coord == 6.0
+    assert Chain((StochasticQuant(8), Bf16())).wire_bits(100) == 800.0
+
+
+@pytest.mark.parametrize("stages", [
+    (TopK(0.3),),
+    (RandK(0.25),),
+    (StochasticQuant(6),),
+    (Bf16(),),
+    (TopK(0.3), Bf16()),
+    (RandK(0.5), StochasticQuant(8)),
+    (RandK(0.5), TopK(0.5), StochasticQuant(4)),
+    (StochasticQuant(8), Bf16()),
+    (TopK(0.7), StochasticQuant(12), Bf16()),
+])
+@pytest.mark.parametrize("n", [1, 3, 7, 100, 12345])
+def test_chain_wire_bits_is_per_stage_sum(stages, n):
+    """``wire_bits(n)`` is the exact per-stage walk: every sparsifying
+    stage bills its index bits at that stage's ACTUAL kept count
+    ``max(1, round(frac * n))``, values go at the first-narrowest width —
+    and the smooth ``bits_per_coord`` rate agrees up to per-stage
+    rounding."""
+    chain = Chain(stages)
+    frac, kept, idx, value = 1.0, float(n), 0.0, None
+    for s in stages:
+        if s.keep_frac < 1.0:
+            frac *= s.keep_frac
+            kept = float(max(1, int(round(frac * n))))
+        idx += kept * s.index_bits
+        if s.value_bits is not None:
+            value = (s.value_bits if value is None
+                     else min(value, s.value_bits))
+    expect = kept * (32.0 if value is None else value) + idx
+    assert chain.wire_bits(n) == expect
+    # rounding drift vs the smooth rate is bounded per sparsifying stage
+    assert abs(chain.wire_bits(n) - n * chain.bits_per_coord) \
+        <= 64.0 * (len(stages) + 1)
+
+
 def test_omega_and_auto_beta():
     assert RandK(0.25).omega == pytest.approx(3.0)
     assert StochasticQuant(8).omega == 0.0
